@@ -1,0 +1,52 @@
+"""Pallas kernel micro-benchmarks (interpret mode = functional timing only).
+
+Wall time on CPU interpret mode is NOT TPU performance — the meaningful
+derived numbers are the modeled compressed-traffic bytes (what the kernel's
+CostEstimate advertises to XLA) and the compression ratios, which feed the
+roofline memory term.  Correctness vs the jnp oracle is asserted on the fly.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats, pruning
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for density in (0.1, 0.3, 0.5):
+        w = pruning.random_sparse(key, (512, 512), density)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (256, 512))
+        p = formats.pack_tiled_csc(w)
+        y = ops.sod_matmul(x, p, impl="pallas")
+        yr = ref.sod_matmul_ref(x, p)
+        assert np.allclose(np.asarray(y), np.asarray(yr), atol=5e-4), density
+        us = _time(lambda: ops.sod_matmul(x, p, impl="pallas"))
+        rows.append((f"kernel_sod_matmul_d{density:.1f}", us,
+                     p.compression_ratio()))
+        wb = pruning.block_prune(w, density)
+        pb = formats.pack_block_csr(wb)
+        yb = ops.sod_matmul(x, pb, impl="pallas")
+        assert np.allclose(np.asarray(yb), np.asarray(ref.block_matmul_ref(x, pb)),
+                           atol=5e-4)
+        us_b = _time(lambda: ops.sod_matmul(x, pb, impl="pallas"))
+        skip_frac = 1 - float(jnp.count_nonzero(pb.tile_nnz)) / pb.tile_nnz.size
+        rows.append((f"kernel_block_matmul_d{density:.1f}", us_b, skip_frac))
+        us_d = _time(lambda: ops.decompress(p))
+        rows.append((f"kernel_decompress_d{density:.1f}", us_d,
+                     p.nbytes_compressed() / p.nbytes_dense()))
+    return rows, []

@@ -1,0 +1,178 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per single-pod (arch × shape) cell, from the compiled dry-run JSON:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s         [s]
+  memory term     = HLO_bytes_per_chip / HBM_bw              [s]
+  collective term = collective_bytes_per_chip / link_bw      [s]
+
+(The SPMD-partitioned module is the per-chip program, so cost_analysis and
+the parsed collective operand sizes are already per chip.)  Also derives
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE; 2·N per decoded token) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs, which flags remat/masking
+waste.  Caveat recorded in EXPERIMENTS.md: CPU-backend ``bytes accessed``
+counts every HLO op's operands without TPU fusion, so the memory term is an
+upper bound; the analytic weight/cache stream is reported alongside.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--write]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.core.topology import TPU_V5E
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parent / "results" / "roofline.md"
+
+CHIP = TPU_V5E
+N_CHIPS = 256
+
+
+def model_flops_per_chip(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per chip per step (fwd+bwd for train)."""
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    d, v = cfg.d_model, cfg.vocab
+    embed_table = v * d * (cfg.n_codebooks if cfg.family == "audio" else 1)
+    compute_params = cfg.active_param_count() - embed_table
+    if cfg.tie_embeddings:
+        compute_params += v * d       # tied head still does the matmul
+
+    s, b = shape.seq_len, shape.global_batch
+    if shape.kind == "decode":
+        tokens = b                     # one new token per sequence
+        matmul = 2.0 * compute_params * tokens
+        # attention reads the whole cache once per new token
+        attn_layers = cfg.n_layers if cfg.family in ("dense", "moe", "vlm",
+                                                     "audio") else \
+            (cfg.n_layers // cfg.hybrid_attn_every
+             if cfg.family == "hybrid" else 0)
+        attn = 4.0 * tokens * attn_layers * cfg.n_heads * cfg.head_dim * s
+        total = matmul + attn
+    else:
+        tokens = b * s
+        mult = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd ≈ 3× fwd
+        matmul = 2.0 * compute_params * tokens * mult
+        # causal attention: avg context = S/2 (window caps it on local layers)
+        attn = 0.0
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            per_layer_ctx = []
+            for j in range(cfg.pattern_period):
+                w = cfg.window_for(j)
+                ctx = min(w, s) / 2 if w else s / 2
+                per_layer_ctx.append(ctx)
+            layers_ctx = sum(per_layer_ctx) / len(per_layer_ctx) * cfg.n_layers
+            attn = 4.0 * tokens * cfg.n_heads * cfg.head_dim * \
+                (layers_ctx / cfg.n_layers) * cfg.n_layers * mult
+        elif cfg.family == "hybrid":
+            n_attn = cfg.n_layers // cfg.hybrid_attn_every
+            attn = 4.0 * tokens * cfg.n_heads * cfg.head_dim * (s / 2) \
+                * n_attn * mult
+            di = cfg.ssm_expand * d
+            attn += 2.0 * tokens * cfg.n_layers * di * \
+                (cfg.ssm_chunk + 4 * cfg.ssm_state) * mult
+        elif cfg.family == "ssm":
+            di = int(d * cfg.xlstm_proj_factor)
+            attn = 2.0 * tokens * cfg.n_layers * di * cfg.ssm_chunk * mult
+        total = matmul + attn
+    return total / N_CHIPS
+
+
+def load_cells(mesh: str = "16x16", sod: str = "dense",
+               results_dir: pathlib.Path | None = None):
+    cells = []
+    for f in sorted((results_dir or RESULTS).glob(f"*__{mesh}__{sod}.json")):
+        r = json.loads(f.read_text())
+        cells.append(r)
+    return cells
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec["status"] != "ok" or "cost" not in rec:
+        return None
+    if "error" in rec.get("cost", {}):
+        return None
+    # probe extrapolation can be noisy on CPU (fusion differences between
+    # depths); the scan-HLO counters (while bodies counted once) are a hard
+    # floor — clamp to them.
+    floor = rec.get("cost_scan_hlo", {})
+    flops = max(rec["cost"]["flops"], floor.get("flops", 0.0))
+    bytes_ = max(rec["cost"]["bytes_accessed"],
+                 floor.get("bytes_accessed", 0.0))
+    coll = max(rec.get("collectives", {}).get("total", 0.0),
+               rec.get("collectives_scan_hlo", {}).get("total", 0.0))
+    t_c = flops / CHIP.peak_bf16_flops
+    t_m = bytes_ / CHIP.hbm_bandwidth
+    t_x = coll / CHIP.ici_link_bandwidth
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops_per_chip(rec["arch"], rec["shape"])
+    bound = max(t_c, t_m, t_x)
+    ideal = mf / CHIP.peak_bf16_flops
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "sod": rec.get("sod"),
+        "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+        "dominant": dom,
+        "model_flops": mf, "hlo_flops": flops,
+        "useful_ratio": mf / max(flops, 1.0),
+        "roofline_fraction": ideal / max(bound, 1e-30),
+        "step_bound_s": bound,
+    }
+
+
+_HINTS = {
+    "compute": "cut HLO flops toward MODEL_FLOPS (mask-block skipping, "
+               "cheaper remat policy, avoid recompute)",
+    "memory": "cut HBM bytes (SoD-compress weight streams, fuse, smaller "
+              "remat live set, windowed KV cache)",
+    "collective": "cut ICI bytes (SoD-compressed all-gather, reshard to "
+                  "avoid activation all-reduces, overlap)",
+}
+
+
+def make_table(sod: str = "dense",
+               results_dir: pathlib.Path | None = None) -> str:
+    rows = []
+    for rec in load_cells(sod=sod, results_dir=results_dir):
+        a = analyze_cell(rec)
+        if a is None:
+            if rec["status"] == "skipped":
+                rows.append(
+                    f"| {rec['arch']} | {rec['shape']} | — | — | — | skipped"
+                    f" | — | — | {rec.get('reason', '')[:40]} |")
+            continue
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute']*1e3:.2f} "
+            f"| {a['t_memory']*1e3:.2f} | {a['t_collective']*1e3:.2f} "
+            f"| {a['dominant']} | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']*100:.1f}% | {_HINTS[a['dominant']][:46]} |")
+    header = (
+        "| arch | shape | compute ms | memory ms | collective ms | dominant "
+        "| useful ratio | roofline frac | to improve |\n"
+        "|---|---|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sod", default="dense")
+    ap.add_argument("--dir", default=None,
+                    help="results dir (e.g. results/dryrun_baseline)")
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    rdir = pathlib.Path(args.dir) if args.dir else None
+    table = make_table(args.sod, results_dir=rdir)
+    print(table)
+    if args.write:
+        out = OUT if rdir is None else OUT.with_name(
+            f"roofline_{rdir.name}.md")
+        out.write_text(table + "\n")
+        print(f"\nwritten to {out}")
+
+
+if __name__ == "__main__":
+    main()

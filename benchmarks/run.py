@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV followed by a model-vs-paper validation table (the reproduction gate).
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figs, paper_real_models
+
+    rows: list[tuple] = []
+    checks: list[tuple] = []
+    for fn in paper_figs.ALL + paper_real_models.ALL:
+        r, c = fn()
+        rows.extend(r)
+        checks.extend(c)
+    kr, _ = kernel_bench.run()
+
+    print("name,us_per_call,derived")
+    for name, val in rows:
+        # cost-model rows: derived metric only (analytical, no wall time)
+        print(f"{name},,{val:.6g}")
+    for name, us, derived in kr:
+        print(f"{name},{us:.1f},{derived:.6g}")
+
+    print("\n# paper-claim validation")
+    print(f"{'claim':66s} {'model':>18s} {'paper window':>16s}  ok")
+    n_fail = 0
+    for claim, val, window, ok in checks:
+        sval = (f"({val[0]:.2f},{val[1]:.2f})" if isinstance(val, tuple)
+                else f"{val:.3f}")
+        swin = str(window)
+        mark = "PASS" if ok else "FAIL"
+        n_fail += 0 if ok else 1
+        print(f"{claim:66s} {sval:>18s} {swin:>16s}  {mark}")
+    print(f"\n# {len(checks) - n_fail}/{len(checks)} paper claims reproduced")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a prompt batch, decode greedily, with
+Sparse-on-Dense weights (compressed storage, dense MXU compute).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve
+
+
+def main():
+    print("== dense weights ==")
+    serve.main(["--arch", "llama3.2-1b", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])
+    print("== Sparse-on-Dense (density 0.3, compressed storage) ==")
+    serve.main(["--arch", "llama3.2-1b", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16",
+                "--sod", "tiled_csc", "--density", "0.3"])
+    print("== hybrid (zamba2: O(1) mamba state + shared-attn KV) ==")
+    serve.main(["--arch", "zamba2-2.7b", "--reduced", "--batch", "2",
+                "--prompt-len", "16", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a ~100M-parameter LM with Sparse-on-Dense
+weights, checkpointing and fault tolerance.
+
+Default (``--smoke``) runs a reduced model for 120 steps in ~2 min on CPU
+and prints the loss curve; ``--full`` trains the real ~130M config (sized
+for accelerators — expect minutes/step on CPU).
+
+Run:  PYTHONPATH=src python examples/train_sparse_lm.py --smoke
+"""
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--density", type=float, default=0.4)
+    args = ap.parse_args()
+
+    cli = ["--arch", "xlstm-125m",          # the ~100M-class assigned arch
+           "--steps", str(args.steps),
+           "--sod", "tiled_csc", "--density", str(args.density),
+           "--lr", "3e-3", "--ckpt-every", "40",
+           "--ckpt-dir", "/tmp/sod_100m_ckpt", "--log-every", "10"]
+    if args.smoke:
+        cli += ["--reduced", "--batch", "8", "--seq", "128"]
+    else:
+        cli += ["--batch", "8", "--seq", "512"]
+    summary = train.main(cli)
+    drop = summary["first_loss"] - summary["last_loss"]
+    print(f"\nloss {summary['first_loss']:.3f} → {summary['last_loss']:.3f} "
+          f"(-{drop:.3f}) over {summary['steps']} steps "
+          f"[sparse weights, fixed mask, density {args.density}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Sharded checkpointing: async save, elastic restore.
+
+Layout per step::
+
+    <dir>/step_<N>/MANIFEST.msgpack      # treedef paths, shapes, dtypes
+    <dir>/step_<N>/<leaf-index>.npy      # one array per leaf
+    <dir>/step_<N>/COMMITTED             # write-completion marker
+
+Restore is *elastic*: arrays are loaded host-side and ``jax.device_put`` with
+whatever shardings the (possibly different-sized) restore mesh dictates —
+re-sharding from a 16-way data axis to 8-way survivors is just a different
+NamedSharding at restore.  The COMMITTED marker makes partially-written
+checkpoints invisible (a crashed save is re-done, never restored).
+
+Async mode snapshots to host (``jax.device_get``) synchronously — the step
+loop never blocks on disk — and writes in a daemon thread.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Params = Any
+_COMMITTED = "COMMITTED"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [jax.tree_util.keystr(p) for p, _ in flat]
+    leaves = [l for _, l in flat]
+    return names, leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: Params, blocking: bool = True):
+        self.wait()   # one writer at a time; drain pending async saves
+        names, leaves, _ = _flatten(state)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        if blocking:
+            self._write(step, names, host)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, names, host), daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, names, host_leaves):
+        path = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f".tmp_step_{step:08d}_{os.getpid()}_{id(host_leaves):x}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = []
+        for i, (name, arr) in enumerate(zip(names, host_leaves)):
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":   # npy round-trip via uint16 bit view
+                arr = arr.view(np.uint16)
+            np.save(tmp / f"{i}.npy", arr)
+            manifest.append({"name": name, "index": i,
+                             "shape": list(arr.shape), "dtype": dtype})
+        (tmp / "MANIFEST.msgpack").write_bytes(
+            msgpack.packb({"step": step, "leaves": manifest}))
+        (tmp / _COMMITTED).touch()
+        if path.exists():
+            shutil.rmtree(path)
+        tmp.rename(path)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore -----------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if (p / _COMMITTED).exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Params,
+                shardings: Params | None = None) -> Params:
+        """Restore into ``template``'s structure; ``shardings`` may target a
+        *different* mesh than the one that saved (elastic re-shard)."""
+        path = self.dir / f"step_{step:08d}"
+        if not (path / _COMMITTED).exists():
+            raise FileNotFoundError(f"no committed checkpoint at {path}")
+        manifest = msgpack.unpackb((path / "MANIFEST.msgpack").read_bytes())
+        names, leaves, treedef = _flatten(template)
+        by_name = {m["name"]: m for m in manifest["leaves"]}
+        sh_flat = None
+        if shardings is not None:
+            sh_flat = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "device_set")
+                or hasattr(x, "mesh"))
+        out = []
+        for i, (name, tmpl) in enumerate(zip(names, leaves)):
+            if name not in by_name:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            meta = by_name[name]
+            arr = np.load(path / f"{meta['index']}.npy")
+            if meta["dtype"] == "bfloat16":
+                import ml_dtypes
+
+                arr = arr.view(ml_dtypes.bfloat16)
+            want_dt = getattr(tmpl, "dtype", arr.dtype)
+            x = jnp.asarray(arr, dtype=want_dt)
+            if sh_flat is not None:
+                x = jax.device_put(x, sh_flat[i])
+            out.append(x)
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,26 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (GQA kv=24) d_ff=6144 vocab=2048
+[arXiv:2306.05284; hf]
+
+Audio frontend is a STUB per the assignment: inputs are 4 parallel EnCodec
+codebook token streams; embeddings are summed, the head predicts all 4
+codebooks (delay-pattern scheduling is a serving-driver concern).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    rope_theta=10_000.0,
+    act="gelu",
+    frontend="audio",
+    n_codebooks=4,
+)

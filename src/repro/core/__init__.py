@@ -1,0 +1,31 @@
+# Sparse-on-Dense core: formats, pruning, the SoD compute module, and the
+# paper's analytical cost model.
+from repro.core.formats import (  # noqa: F401
+    Bitmap,
+    BlockCSR,
+    TiledCSC,
+    density,
+    pack_bitmap,
+    pack_block_csr,
+    pack_csc,
+    pack_tiled_csc,
+    unpack_csc,
+)
+from repro.core.pruning import (  # noqa: F401
+    PAPER_PROFILES,
+    SparsityProfile,
+    block_prune,
+    magnitude_prune,
+    nm_prune,
+    prune_tree,
+    random_sparse,
+)
+from repro.core.sod import DENSE, SoDConfig, apply, pack_param  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    MULTI_POD,
+    PAPER_28NM,
+    SINGLE_POD,
+    TPU_V5E,
+    ChipSpec,
+    MeshSpec,
+)

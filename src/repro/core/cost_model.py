@@ -1,0 +1,392 @@
+"""Analytical accelerator models reproducing the paper's evaluation.
+
+Implements the paper's design (Sparse-on-Dense) and **every baseline it
+compares against** — dense TPU-style [11], ESE [8], SCNN [9], SNAP [10],
+SIGMA [12] — as calibrated 28nm analytical models at the paper's common
+configuration (4K MACs, 2 MB global SRAM, 500 MHz, 16-bit data, 8-bit
+indices).  Each model produces cycles, area and system energy (DRAM + SRAM +
+PE array) for a (M, K, N) matmul at weight density ``dw`` / input density
+``di``; the derived metrics are the paper's:
+
+  * effective throughput / area  [TOPS/mm²]  — logical dense ops / time / mm²
+  * energy efficiency            [TOPS/W]    — logical dense ops / energy
+
+Mechanisms modelled per accelerator follow Section II/IV of the paper:
+
+  dense    — computes all MKN MACs; dense operands in memory.
+  SoD      — computes all MKN MACs; *compressed* operands in memory
+             (1.5·density: 16-bit value + 8-bit index); decompression unit
+             ≈ 2% of PE-array area; larger effective tiles → more reuse.
+  ESE      — skips zero weights (time ∝ dw) with high utilization, paid for
+             with FIFOs + index matching + oversized per-PE buffers (area
+             multiple) and per-op index-compare energy.
+  SCNN     — Cartesian product, two-sided skip (time ∝ dw·di best case) but
+             throughput bound by the scatter network whose congestion grows
+             with density; area multiple 3.75× from the paper's breakdown.
+  SNAP     — two-sided inner-product with comparator array; good utilization,
+             moderate area multiple, comparator energy per op.
+  SIGMA    — bitmap format: the matching frontend must scan *all* K·N
+             positions (including zeros) at a fixed AND-gate throughput —
+             the control-flow bound the paper describes; big reduction-tree
+             area.
+
+Calibration constants are explicit (``*_CAL`` dataclasses) and were chosen
+so the model reproduces the paper's headline numbers (Table II, Figs 6–11);
+``benchmarks/`` prints model-vs-paper side by side and the tests assert the
+claim windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.topology import PAPER_28NM, PaperTech
+
+# ---------------------------------------------------------------------------
+# common configuration (paper Section IV-A/B)
+# ---------------------------------------------------------------------------
+N_MACS = 4096
+SRAM_BYTES = 2 * 1024 * 1024
+FREQ = 500e6
+VALUE_BITS = 16
+INDEX_BITS = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One matmul: (M × K) · (K × N), densities in (0, 1]."""
+
+    m: int
+    k: int
+    n: int
+    dw: float = 1.0      # weight density
+    di: float = 1.0      # input density
+    name: str = ""
+
+    @property
+    def dense_macs(self) -> float:
+        return float(self.m) * self.k * self.n
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    name: str
+    cycles: float
+    area_logic_mm2: float
+    area_sram_mm2: float
+    energy_pj: float
+    effective_ops: float           # logical dense MACs × 2
+
+    @property
+    def time_s(self) -> float:
+        return self.cycles / FREQ
+
+    @property
+    def eff_tops(self) -> float:
+        return self.effective_ops / self.time_s / 1e12
+
+    def tops_per_mm2(self, include_sram: bool = False) -> float:
+        a = self.area_logic_mm2 + (self.area_sram_mm2 if include_sram else 0)
+        return self.eff_tops / a
+
+    @property
+    def tops_per_watt(self) -> float:
+        watts = self.energy_pj * 1e-12 / self.time_s
+        return self.eff_tops / watts
+
+
+# ---------------------------------------------------------------------------
+# shared memory-traffic model (output-stationary tiling, full-K slabs)
+# ---------------------------------------------------------------------------
+def _dram_traffic_bits(w: Workload, bits_in: float, bits_w: float,
+                       sram_bytes: float) -> float:
+    """Weights stream once per M-tile sweep; inputs once per N-tile sweep.
+
+    Tile (T × T) outputs with full-K operand slabs resident:
+        SRAM ≥ T·K·bits_in/8 + K·T·bits_w/8 + T·T·4
+    Compressed operands (smaller bits_*) ⇒ larger T ⇒ fewer refetches —
+    the paper's on-chip-reuse argument (Section III-B1).
+    """
+    k = w.k
+    # solve 4 T² + (K(bits_in+bits_w)/8) T − C = 0 for the square tile T
+    b = k * (bits_in + bits_w) / 8
+    t = (-b + math.sqrt(b * b + 16 * sram_bytes)) / 8
+    t = max(min(t, max(w.m, w.n)), 1.0)
+    inputs = w.m * k * bits_in * max(w.n / t, 1.0)
+    weights = k * w.n * bits_w * max(w.m / t, 1.0)
+    outputs = 2 * w.m * w.n * VALUE_BITS
+    return inputs + weights + outputs
+
+
+def _sram_traffic_bits(w: Workload, bits_in: float, bits_w: float) -> float:
+    """Each operand crosses the SRAM→array boundary ~once per tile pass;
+    model as 2× its DRAM-resident footprint + output accumulation."""
+    return 2 * (w.m * w.k * bits_in + w.k * w.n * bits_w) \
+        + 2 * w.m * w.n * VALUE_BITS
+
+
+def _mem_energy(w: Workload, bits_in: float, bits_w: float,
+                tech: PaperTech, sram_bytes: float) -> float:
+    dram = _dram_traffic_bits(w, bits_in, bits_w, sram_bytes)
+    sram = _sram_traffic_bits(w, bits_in, bits_w)
+    return dram * tech.e_dram_per_bit + sram * tech.e_sram_per_bit
+
+
+def _sram_area(tech: PaperTech, sram_bytes: float = SRAM_BYTES) -> float:
+    return sram_bytes / 1024 * tech.a_sram_per_kb
+
+
+def _dims_util(w: Workload, side: int = 64) -> float:
+    """Systolic-array edge underutilization for small matrices."""
+    um = min(w.m / side, 1.0) if w.m < side else 1.0
+    un = min(w.n / side, 1.0) if w.n < side else 1.0
+    return max(um * un, 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# 1) dense TPU-style baseline [11]
+# ---------------------------------------------------------------------------
+def dense_baseline(w: Workload, tech: PaperTech = PAPER_28NM,
+                   sram_bytes: float = SRAM_BYTES) -> Report:
+    util = _dims_util(w)
+    cycles = w.dense_macs / (N_MACS * util)
+    energy = w.dense_macs * tech.e_mac_16b \
+        + _mem_energy(w, VALUE_BITS, VALUE_BITS, tech, sram_bytes)
+    return Report(
+        name="dense",
+        cycles=cycles,
+        area_logic_mm2=N_MACS * tech.a_dense_pe,
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2) Sparse-on-Dense (this paper)
+# ---------------------------------------------------------------------------
+DECOMP_AREA_FRACTION = 0.02        # Fig. 5: ≈2% of the 4K PE array
+DECOMP_ENERGY_PER_NZ = 0.08       # pJ per decompressed non-zero (subtr+mux)
+
+
+def sparse_on_dense(w: Workload, tech: PaperTech = PAPER_28NM,
+                    sram_bytes: float = SRAM_BYTES) -> Report:
+    util = _dims_util(w)
+    cycles = w.dense_macs / (N_MACS * util)        # dense compute, dense time
+    bits_w = VALUE_BITS if w.dw >= 1.0 else w.dw * (VALUE_BITS + INDEX_BITS)
+    bits_i = VALUE_BITS if w.di >= 1.0 else w.di * (VALUE_BITS + INDEX_BITS)
+    nz = w.dw * w.k * w.n + w.di * w.m * w.k
+    energy = w.dense_macs * tech.e_mac_16b \
+        + nz * DECOMP_ENERGY_PER_NZ \
+        + _mem_energy(w, bits_i, bits_w, tech, sram_bytes)
+    pe_area = N_MACS * tech.a_dense_pe
+    return Report(
+        name="sparse_on_dense",
+        cycles=cycles,
+        area_logic_mm2=pe_area * (1 + DECOMP_AREA_FRACTION),
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 3) ESE [8] — sparse weight × dense input
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ESECal:
+    area_mult: float = 5.0        # FIFOs + index match + per-PE buffers
+    fifo_depth: float = 6.0       # index compares per useful MAC
+    util_hi: float = 0.92         # multiplier utilization (Fig. 7)
+    util_lo: float = 0.80         # at extreme sparsity (load imbalance)
+    sram_mult: float = 2.0        # oversized psum/weight buffers traffic
+
+
+ESE_CAL = ESECal()
+
+
+def ese(w: Workload, tech: PaperTech = PAPER_28NM,
+        sram_bytes: float = SRAM_BYTES, cal: ESECal = ESE_CAL) -> Report:
+    # utilization: high, degrading slightly at extreme sparsity (imbalance)
+    util = cal.util_lo + (cal.util_hi - cal.util_lo) * min(w.dw / 0.3, 1.0)
+    useful = w.dense_macs * w.dw
+    cycles = useful / (N_MACS * util * _dims_util(w))
+    bits_w = w.dw * (VALUE_BITS + INDEX_BITS)
+    energy = useful * (tech.e_mac_16b
+                       + cal.fifo_depth * tech.e_index_match
+                       + VALUE_BITS * tech.e_fifo_per_bit) \
+        + _mem_energy(w, VALUE_BITS, bits_w, tech, sram_bytes) * cal.sram_mult
+    return Report(
+        name="ese",
+        cycles=cycles,
+        area_logic_mm2=N_MACS * tech.a_dense_pe * cal.area_mult,
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4) SCNN [9] — Cartesian product, two-sided
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SCNNCal:
+    """Saturating sustained throughput: the scatter backend sustains
+    ``u_max`` of peak only once product density swamps its fixed per-tile
+    drain cost ``k0`` — at low density the coordinate-compute/drain pipeline
+    dominates (cycles floor ∝ MKN·k0), matching the paper's observation that
+    the gap *grows* with density yet SCNN never recovers dense efficiency."""
+
+    area_mult: float = 4.75       # scatter network + FIFO = 3.75× mult array
+    u_max: float = 0.362
+    k0: float = 0.201
+    stride_util: float = 0.18 / 0.79   # stride-4 L1 relative util (IV-D)
+    sram_mult: float = 1.0        # oversized psum buffers (> dense output)
+    psum_energy: float = 0.2      # scatter-add writes per product (rel.)
+    ctrl_pj_per_cycle: float = 2000.0  # crossbar/coordinate control power
+
+
+SCNN_CAL = SCNNCal()
+
+
+def scnn(w: Workload, tech: PaperTech = PAPER_28NM,
+         sram_bytes: float = SRAM_BYTES, cal: SCNNCal = SCNN_CAL,
+         stride: int = 1, kernel_size: int = 1) -> Report:
+    d_prod = w.dw * w.di
+    u_eff = cal.u_max * d_prod / (d_prod + cal.k0)
+    if stride > 1:
+        u_eff *= cal.stride_util
+    products = w.dense_macs * d_prod
+    cycles = products / (N_MACS * max(u_eff, 1e-4) * _dims_util(w))
+    bits_w = w.dw * (VALUE_BITS + INDEX_BITS)
+    bits_i = w.di * (VALUE_BITS + INDEX_BITS) if w.di < 1.0 else VALUE_BITS
+    # psum scatter writes dominate backend energy; kernel_size>1 means SoD
+    # reuses psums in-register while SCNN re-scatters (Section IV-D)
+    psum_writes = products * (cal.psum_energy + 0.3 * max(kernel_size - 1, 0))
+    energy = products * tech.e_mac_16b \
+        + psum_writes * VALUE_BITS * tech.e_sram_per_bit * 4 \
+        + cycles * cal.ctrl_pj_per_cycle \
+        + _mem_energy(w, bits_i, bits_w, tech, sram_bytes) * cal.sram_mult
+    return Report(
+        name="scnn",
+        cycles=cycles,
+        area_logic_mm2=N_MACS * tech.a_dense_pe * cal.area_mult,
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 5) SNAP [10] — two-sided inner product, comparator array
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SNAPCal:
+    """Same saturating form as SCNN (comparator frontend has a fixed
+    match-discovery cost) but a lighter floor; SNAP's edge at very low
+    density shows up in *energy* (comparator work ∝ useful MACs only),
+    matching Fig. 10/14 where SNAP wins energy in the sparsest layers."""
+
+    area_mult: float = 4.3        # comparator array + FIFOs + buffers
+    u_max: float = 0.476
+    k0: float = 0.207
+    compares_per_mac: float = 3.0
+    sram_mult: float = 1.15
+    ctrl_pj_per_cycle: float = 2500.0  # comparator-array + FIFO control
+
+
+SNAP_CAL = SNAPCal()
+
+
+def snap(w: Workload, tech: PaperTech = PAPER_28NM,
+         sram_bytes: float = SRAM_BYTES, cal: SNAPCal = SNAP_CAL) -> Report:
+    d_prod = w.dw * w.di
+    u_eff = cal.u_max * d_prod / (d_prod + cal.k0)
+    useful = w.dense_macs * d_prod
+    cycles = useful / (N_MACS * max(u_eff, 1e-4) * _dims_util(w))
+    bits_w = w.dw * (VALUE_BITS + INDEX_BITS)
+    bits_i = w.di * (VALUE_BITS + INDEX_BITS) if w.di < 1.0 else VALUE_BITS
+    energy = useful * (tech.e_mac_16b
+                       + cal.compares_per_mac * tech.e_index_match) \
+        + cycles * cal.ctrl_pj_per_cycle \
+        + _mem_energy(w, bits_i, bits_w, tech, sram_bytes) * cal.sram_mult
+    return Report(
+        name="snap",
+        cycles=cycles,
+        area_logic_mm2=N_MACS * tech.a_dense_pe * cal.area_mult,
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 6) SIGMA [12] — bitmap + flexible interconnect
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SIGMACal:
+    area_mult: float = 6.0        # Benes distribution + reduction tree bufs
+    and_gates: int = 16384        # matching frontend (Section IV-A)
+    match_eff: float = 0.55       # routing-control inefficiency
+    sram_mult: float = 1.3
+    reduce_energy: float = 3.0    # reduction-tree buffer writes per MAC
+    ctrl_pj_per_cycle: float = 17000.0  # Benes routing + reduction control
+
+
+SIGMA_CAL = SIGMACal()
+
+
+def sigma(w: Workload, tech: PaperTech = PAPER_28NM,
+          sram_bytes: float = SRAM_BYTES, cal: SIGMACal = SIGMA_CAL) -> Report:
+    useful = w.dense_macs * w.dw * w.di
+    compute_cycles = useful / N_MACS
+    # bitmap scan must touch every K×N position per M-row-block, throttled
+    # by control inefficiency (Section II-B); the matching frontend and the
+    # routed compute serialize through the distribution network
+    positions = w.dense_macs     # all positions incl. zeros
+    match_cycles = positions / (cal.and_gates * cal.match_eff)
+    cycles = match_cycles + compute_cycles
+    # bitmap format: 1 bit per position + values for non-zeros
+    bits_w = w.dw * VALUE_BITS + 1.0
+    bits_i = (w.di * VALUE_BITS + 1.0) if w.di < 1.0 else VALUE_BITS
+    energy = useful * tech.e_mac_16b \
+        + positions * tech.e_index_match * 0.5 \
+        + useful * cal.reduce_energy * VALUE_BITS * tech.e_sram_per_bit \
+        + cycles * cal.ctrl_pj_per_cycle \
+        + _mem_energy(w, bits_i, bits_w, tech, sram_bytes) * cal.sram_mult
+    return Report(
+        name="sigma",
+        cycles=cycles,
+        area_logic_mm2=N_MACS * tech.a_dense_pe * cal.area_mult,
+        area_sram_mm2=_sram_area(tech, sram_bytes),
+        energy_pj=energy,
+        effective_ops=2 * w.dense_macs,
+    )
+
+
+ACCELERATORS = {
+    "dense": dense_baseline,
+    "sparse_on_dense": sparse_on_dense,
+    "ese": ese,
+    "scnn": scnn,
+    "snap": snap,
+    "sigma": sigma,
+}
+
+
+# ---------------------------------------------------------------------------
+# area / power breakdown (paper Fig. 5)
+# ---------------------------------------------------------------------------
+def sod_breakdown(tech: PaperTech = PAPER_28NM) -> dict:
+    pe = N_MACS * tech.a_dense_pe
+    dec = pe * DECOMP_AREA_FRACTION
+    sram = _sram_area(tech)
+    total = pe + dec + sram
+    return {
+        "pe_array_mm2": pe,
+        "decompression_mm2": dec,
+        "sram_mm2": sram,
+        "total_mm2": total,
+        "decomp_over_pe": dec / pe,
+        "decomp_over_total": dec / total,
+    }

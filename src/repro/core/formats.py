@@ -1,0 +1,493 @@
+"""Sparse data formats for Sparse-on-Dense.
+
+The paper stores non-zero data in the global buffer in CSC form (16-bit
+values, 8-bit row indices, column pointers) and re-densifies tiles on the fly
+in a decompression unit placed between the buffer and the dense PE array.
+
+XLA/Pallas need static shapes, so the executable TPU formats are *padded*
+variants with a static per-column (or per-tile) capacity:
+
+  * :class:`TiledCSC`  — element-granular, paper-faithful.  The matrix is cut
+    into (bk, bn) tiles; each tile column stores up to ``cap`` non-zeros as
+    (value, in-tile row index).  Lossless when ``cap`` >= the max column
+    non-zero count over all tiles (the default).
+  * :class:`BlockCSR`  — TPU-native adaptation.  (br, bc) = (8, 128)
+    VREG-shaped sub-blocks; decompression is whole-register gather and
+    all-zero MXU macro-tiles can be skipped.
+  * :class:`Bitmap`    — SIGMA-style bitmap + packed values (used for
+    footprint comparisons and as a third executable format).
+  * :func:`pack_csc` / :func:`unpack_csc` — classic pointer CSC (numpy),
+    used by the cost model for exact footprint accounting.
+
+All executable formats are registered as JAX pytrees, are differentiable
+through ``to_dense`` (scatter-add ⇒ gather gradient onto the fixed mask —
+this is what makes fixed-mask sparse *training* work for free), and carry
+byte-accounting helpers that honour the paper's 16-bit value / 8-bit index
+assumption as well as the TPU bf16/int8 layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "TiledCSC",
+    "BlockCSR",
+    "Bitmap",
+    "pack_tiled_csc",
+    "pack_block_csr",
+    "pack_bitmap",
+    "pack_csc",
+    "unpack_csc",
+    "density",
+    "padded_shape",
+]
+
+
+def density(x) -> float:
+    """Fraction of non-zero elements."""
+    x = np.asarray(x)
+    if x.size == 0:
+        return 0.0
+    return float(np.count_nonzero(x)) / float(x.size)
+
+
+def padded_shape(shape: tuple[int, int], tile: tuple[int, int]) -> tuple[int, int]:
+    bk, bn = tile
+    k, n = shape
+    return ((k + bk - 1) // bk * bk, (n + bn - 1) // bn * bn)
+
+
+def _pad_to_tiles(w: jax.Array, tile: tuple[int, int]) -> jax.Array:
+    k, n = w.shape
+    kp, np_ = padded_shape((k, n), tile)
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    return w
+
+
+# ---------------------------------------------------------------------------
+# TiledCSC — element-granular, paper-faithful static-shape CSC
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TiledCSC:
+    """Per-(bk, bn)-tile padded CSC.
+
+    ``vals[kt, nt, s, j]`` is the s-th non-zero of column ``j`` of tile
+    ``(kt, nt)``; ``rows[kt, nt, s, j]`` its in-tile row index.  Padding slots
+    carry ``val == 0`` and sentinel ``row == -1``: compare-accumulate never
+    matches them and scatter-add drops them (``mode='drop'``), which also
+    guarantees *exactly zero* gradient flow into padding slots — fixed-mask
+    sparse training stays on the mask.
+    """
+
+    vals: jax.Array   # (*lead, Kt, Nt, cap, bn) — lead = layer-stack/expert dims
+    rows: jax.Array   # same shape, int8 (bk <= 128) or int32
+    shape: tuple[int, int]          # logical (K, N) before tile padding
+    tile: tuple[int, int]
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.vals, self.rows), (self.shape, self.tile)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, rows = children
+        shape, tile = aux
+        return cls(vals=vals, rows=rows, shape=shape, tile=tile)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def cap(self) -> int:
+        return self.vals.shape[-2]
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return self.vals.shape[-4], self.vals.shape[-3]
+
+    @property
+    def lead(self) -> tuple[int, ...]:
+        return tuple(self.vals.shape[:-4])
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def nbytes_compressed(self, value_bits: int = 16, index_bits: int = 8) -> int:
+        """Footprint under the paper's encoding (value + index per slot)."""
+        slots = int(np.prod(self.vals.shape))
+        return slots * (value_bits + index_bits) // 8
+
+    def nbytes_dense(self, value_bits: int = 16) -> int:
+        kp, np_ = padded_shape(self.shape, self.tile)
+        return kp * np_ * value_bits // 8
+
+    def compression_ratio(self) -> float:
+        return self.nbytes_compressed() / max(self.nbytes_dense(), 1)
+
+    def to_dense(self) -> jax.Array:
+        """Differentiable scatter-add decompression (the jnp 'oracle').
+
+        Leading (layer-stack / expert) dims are vmapped; returns
+        ``(*lead, K, N)``.
+        """
+        if self.lead:
+            flat = TiledCSC(
+                vals=self.vals.reshape((-1,) + self.vals.shape[-4:]),
+                rows=self.rows.reshape((-1,) + self.rows.shape[-4:]),
+                shape=self.shape, tile=self.tile)
+            dense = jax.vmap(
+                lambda v, r: TiledCSC(v, r, self.shape, self.tile).to_dense()
+            )(flat.vals, flat.rows)
+            return dense.reshape(self.lead + dense.shape[-2:])
+        kt_n, nt_n = self.grid
+        bk, bn = self.tile
+        kt = jnp.arange(kt_n)[:, None, None, None]
+        nt = jnp.arange(nt_n)[None, :, None, None]
+        jn = jnp.arange(bn)[None, None, None, :]
+        rows = self.rows.astype(jnp.int32)
+        # Mask padding explicitly: keeps decompression exact even if padding
+        # values are polluted and gives exactly-zero cotangents at padding.
+        vals = jnp.where(rows >= 0, self.vals, 0)
+        dense = jnp.zeros((kt_n, nt_n, bk, bn), self.vals.dtype)
+        dense = dense.at[
+            jnp.broadcast_to(kt, rows.shape),
+            jnp.broadcast_to(nt, rows.shape),
+            rows,
+            jnp.broadcast_to(jn, rows.shape),
+        ].add(vals, mode="drop")
+        dense = dense.transpose(0, 2, 1, 3).reshape(kt_n * bk, nt_n * bn)
+        return dense[: self.shape[0], : self.shape[1]]
+
+
+def pack_tiled_csc(
+    w: jax.Array,
+    tile: tuple[int, int] = (128, 128),
+    cap: int | None = None,
+    index_dtype=None,
+) -> TiledCSC:
+    """Pack a dense matrix into :class:`TiledCSC`.
+
+    ``cap=None`` chooses the exact max column non-zero count over all tiles
+    (lossless).  A smaller ``cap`` keeps the ``cap`` largest-magnitude entries
+    per tile column (lossy, ESE-style load-capping).
+
+    Leading dims (layer stacks / experts) are packed with a *shared* cap so
+    the result slices homogeneously under ``lax.scan``.
+    """
+    w = jnp.asarray(w)
+    if w.ndim > 2:
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
+        if cap is None:
+            bk, bn = tile
+            wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
+            kp, np_ = wp.shape[-2:]
+            t = wp.reshape(-1, kp // bk, bk, np_ // bn, bn)
+            cap = int(jnp.max(jnp.sum(t != 0, axis=2)))
+            cap = max((cap + 7) // 8 * 8, 8)
+        packed = [pack_tiled_csc(flat[i], tile, cap, index_dtype)
+                  for i in range(flat.shape[0])]
+        vals = jnp.stack([p.vals for p in packed]).reshape(
+            lead + packed[0].vals.shape)
+        rows = jnp.stack([p.rows for p in packed]).reshape(
+            lead + packed[0].rows.shape)
+        return TiledCSC(vals=vals, rows=rows, shape=tuple(w.shape[-2:]),
+                        tile=tile)
+    if w.ndim != 2:
+        raise ValueError(f"expected >=2-D matrix, got {w.shape}")
+    bk, bn = tile
+    shape = tuple(w.shape)
+    w = _pad_to_tiles(w, tile)
+    kp, np_ = w.shape
+    kt_n, nt_n = kp // bk, np_ // bn
+    # (Kt, Nt, bk, bn)
+    tiles = w.reshape(kt_n, bk, nt_n, bn).transpose(0, 2, 1, 3)
+
+    nz = tiles != 0
+    if cap is None:
+        cap = int(jnp.max(jnp.sum(nz, axis=2))) if w.size else 0
+        cap = max(cap, 1)
+        cap = (cap + 7) // 8 * 8  # sublane-align slot dim for the TPU kernel
+    # Order rows of each tile column: non-zeros first (stable ⇒ ascending row),
+    # then pick the top `cap` slots.  For the lossy path order by |value|.
+    exact = cap >= bk
+    key_nz = (~nz).astype(jnp.int32)
+    order = jnp.argsort(key_nz, axis=2, stable=True)  # (Kt, Nt, bk, bn)
+    gathered = jnp.take_along_axis(tiles, order, axis=2)
+    gathered_nz = jnp.take_along_axis(nz, order, axis=2)
+    if not exact:
+        # keep largest-|value| entries when truncating
+        mag_order = jnp.argsort(
+            jnp.where(gathered_nz, -jnp.abs(gathered.astype(jnp.float32)), jnp.inf),
+            axis=2,
+            stable=True,
+        )
+        keep = mag_order[:, :, :cap, :]
+        vals = jnp.take_along_axis(gathered, keep, axis=2)
+        # restore ascending-row order within the kept set
+        row_ids = jnp.take_along_axis(order, keep, axis=2)
+        asc = jnp.argsort(row_ids, axis=2, stable=True)
+        rows = jnp.take_along_axis(row_ids, asc, axis=2)
+        vals = jnp.take_along_axis(vals, asc, axis=2)
+        valid = jnp.take_along_axis(jnp.take_along_axis(gathered_nz, keep, axis=2), asc, axis=2)
+    else:
+        cap_eff = min(cap, bk)
+        vals = gathered[:, :, :cap_eff, :]
+        rows = order[:, :, :cap_eff, :]
+        valid = gathered_nz[:, :, :cap_eff, :]
+        if cap > bk:  # degenerate: more slots than rows
+            pad = cap - bk
+            vals = jnp.pad(vals, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            rows = jnp.pad(rows, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            valid = jnp.pad(valid, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vals = jnp.where(valid, vals, 0).astype(w.dtype)
+    rows = jnp.where(valid, rows, -1)
+    if index_dtype is None:
+        index_dtype = jnp.int8 if bk <= 128 else jnp.int32
+    rows = rows.astype(index_dtype)
+    return TiledCSC(vals=vals, rows=rows, shape=shape, tile=(bk, bn))
+
+
+# ---------------------------------------------------------------------------
+# BlockCSR — (8, 128) VREG blocks, macro-tile skip list
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockCSR:
+    """Block-compressed rows of MXU macro-tiles.
+
+    The matrix is cut into (bk, bn) macro tiles; each macro tile is further
+    cut along K into (br, bn) VREG-shaped sub-blocks (br = 8 by default).
+    Per macro tile we store up to ``bcap`` non-zero sub-blocks and their
+    in-tile block indices (padding id = -1, dropped on scatter).  ``tile_nnz``
+    counts non-zero sub-blocks per macro tile; a macro tile with 0 can be
+    skipped entirely by the matmul kernel (compute win).
+    """
+
+    block_vals: jax.Array  # (Kt, Nt, bcap, br, bn)
+    block_ids: jax.Array   # (Kt, Nt, bcap) int32, in-tile sub-block index
+    tile_nnz: jax.Array    # (Kt, Nt) int32
+    shape: tuple[int, int]
+    tile: tuple[int, int]  # (bk, bn) macro tile
+    br: int                # sub-block rows
+
+    def tree_flatten(self):
+        return (self.block_vals, self.block_ids, self.tile_nnz), (
+            self.shape,
+            self.tile,
+            self.br,
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        block_vals, block_ids, tile_nnz = children
+        shape, tile, br = aux
+        return cls(block_vals, block_ids, tile_nnz, shape, tile, br)
+
+    @property
+    def bcap(self) -> int:
+        return self.block_vals.shape[-3]
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return self.block_vals.shape[-5], self.block_vals.shape[-4]
+
+    @property
+    def lead(self) -> tuple[int, ...]:
+        return tuple(self.block_vals.shape[:-5])
+
+    @property
+    def dtype(self):
+        return self.block_vals.dtype
+
+    def nbytes_compressed(self, value_bits: int = 16, index_bits: int = 16) -> int:
+        v = int(np.prod(self.block_vals.shape)) * value_bits // 8
+        i = int(np.prod(self.block_ids.shape)) * index_bits // 8
+        return v + i
+
+    def nbytes_dense(self, value_bits: int = 16) -> int:
+        kp, np_ = padded_shape(self.shape, self.tile)
+        return kp * np_ * value_bits // 8
+
+    def to_dense(self) -> jax.Array:
+        if self.lead:
+            bv = self.block_vals.reshape((-1,) + self.block_vals.shape[-5:])
+            bi = self.block_ids.reshape((-1,) + self.block_ids.shape[-3:])
+            tn = self.tile_nnz.reshape((-1,) + self.tile_nnz.shape[-2:])
+            dense = jax.vmap(
+                lambda v, i, n: BlockCSR(v, i, n, self.shape, self.tile,
+                                         self.br).to_dense()
+            )(bv, bi, tn)
+            return dense.reshape(self.lead + dense.shape[-2:])
+        kt_n, nt_n = self.grid
+        bk, bn = self.tile
+        br = self.br
+        nb = bk // br
+        bcap = self.bcap
+        kt = jnp.arange(kt_n)[:, None, None]
+        nt = jnp.arange(nt_n)[None, :, None]
+        ids = self.block_ids
+        bvals = jnp.where((ids >= 0)[:, :, :, None, None], self.block_vals, 0)
+        dense = jnp.zeros((kt_n, nt_n, nb, br, bn), self.block_vals.dtype)
+        dense = dense.at[
+            jnp.broadcast_to(kt, ids.shape),
+            jnp.broadcast_to(nt, ids.shape),
+            ids,
+        ].add(bvals, mode="drop")
+        dense = dense.reshape(kt_n, nt_n, bk, bn).transpose(0, 2, 1, 3)
+        dense = dense.reshape(kt_n * bk, nt_n * bn)
+        return dense[: self.shape[0], : self.shape[1]]
+
+
+def pack_block_csr(
+    w: jax.Array,
+    tile: tuple[int, int] = (128, 128),
+    br: int = 8,
+    bcap: int | None = None,
+) -> BlockCSR:
+    """Pack a dense matrix into :class:`BlockCSR` (lossless for bcap=None)."""
+    bk, bn = tile
+    if bk % br:
+        raise ValueError(f"tile rows {bk} not divisible by block rows {br}")
+    w = jnp.asarray(w)
+    if w.ndim > 2:
+        lead = w.shape[:-2]
+        flat = w.reshape((-1,) + w.shape[-2:])
+        if bcap is None:
+            wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
+            kp, np_ = wp.shape[-2:]
+            blk = wp.reshape(-1, kp // bk, bk // br, br, np_ // bn, bn)
+            nz = jnp.any(blk != 0, axis=(3, 5))
+            bcap = max(int(jnp.max(jnp.sum(nz, axis=2))), 1)
+        packed = [pack_block_csr(flat[i], tile, br, bcap)
+                  for i in range(flat.shape[0])]
+        return BlockCSR(
+            block_vals=jnp.stack([p.block_vals for p in packed]).reshape(
+                lead + packed[0].block_vals.shape),
+            block_ids=jnp.stack([p.block_ids for p in packed]).reshape(
+                lead + packed[0].block_ids.shape),
+            tile_nnz=jnp.stack([p.tile_nnz for p in packed]).reshape(
+                lead + packed[0].tile_nnz.shape),
+            shape=tuple(w.shape[-2:]), tile=tile, br=br)
+    shape = tuple(w.shape)
+    w = _pad_to_tiles(w, tile)
+    kp, np_ = w.shape
+    kt_n, nt_n = kp // bk, np_ // bn
+    nb = bk // br
+    blocks = w.reshape(kt_n, nb, br, nt_n, bn).transpose(0, 3, 1, 2, 4)
+    # (Kt, Nt, nb, br, bn)
+    nz = jnp.any(blocks != 0, axis=(3, 4))  # (Kt, Nt, nb)
+    tile_nnz = jnp.sum(nz, axis=2).astype(jnp.int32)
+    if bcap is None:
+        bcap = max(int(jnp.max(tile_nnz)) if w.size else 0, 1)
+    order = jnp.argsort(~nz, axis=2, stable=True)[:, :, :bcap]  # (Kt, Nt, bcap)
+    valid = jnp.take_along_axis(nz, order, axis=2)
+    block_vals = jnp.take_along_axis(
+        blocks, order[:, :, :, None, None], axis=2
+    )
+    block_vals = jnp.where(valid[:, :, :, None, None], block_vals, 0).astype(w.dtype)
+    block_ids = jnp.where(valid, order, -1).astype(jnp.int32)
+    return BlockCSR(
+        block_vals=block_vals,
+        block_ids=block_ids,
+        tile_nnz=tile_nnz,
+        shape=shape,
+        tile=(bk, bn),
+        br=br,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bitmap — SIGMA-style
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Bitmap:
+    """Bitmap + row-major packed non-zero values (padded to ``cap``)."""
+
+    mask: jax.Array   # (K, N) bool
+    vals: jax.Array   # (cap,) packed row-major non-zeros
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.mask, self.vals), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mask, vals = children
+        return cls(mask, vals, aux[0])
+
+    def nbytes_compressed(self, value_bits: int = 16) -> int:
+        bits = int(np.prod(self.mask.shape))  # 1 bit/element bitmap
+        return bits // 8 + self.vals.shape[0] * value_bits // 8
+
+    def nbytes_dense(self, value_bits: int = 16) -> int:
+        return int(np.prod(self.shape)) * value_bits // 8
+
+    def to_dense(self) -> jax.Array:
+        flat_mask = self.mask.reshape(-1)
+        pos = jnp.cumsum(flat_mask) - 1
+        gathered = self.vals[jnp.clip(pos, 0, self.vals.shape[0] - 1)]
+        out = jnp.where(flat_mask, gathered, 0)
+        return out.reshape(self.shape).astype(self.vals.dtype)
+
+
+def pack_bitmap(w: jax.Array, cap: int | None = None) -> Bitmap:
+    w = jnp.asarray(w)
+    mask = w != 0
+    flat = w.reshape(-1)
+    flat_mask = mask.reshape(-1)
+    if cap is None:
+        cap = max(int(jnp.sum(flat_mask)), 1)
+    order = jnp.argsort(~flat_mask, stable=True)[:cap]
+    vals = jnp.where(flat_mask[order], flat[order], 0)
+    return Bitmap(mask=mask, vals=vals, shape=tuple(w.shape))
+
+
+# ---------------------------------------------------------------------------
+# Classic pointer CSC (numpy) — exact footprint accounting for the cost model
+# ---------------------------------------------------------------------------
+def pack_csc(w: np.ndarray) -> dict[str, np.ndarray]:
+    """Classic CSC: values, row indices, column pointers (numpy, exact)."""
+    w = np.asarray(w)
+    k, n = w.shape
+    cols = []
+    rows = []
+    vals = []
+    ptr = [0]
+    for j in range(n):
+        nz = np.nonzero(w[:, j])[0]
+        rows.append(nz)
+        vals.append(w[nz, j])
+        ptr.append(ptr[-1] + len(nz))
+    return {
+        "values": np.concatenate(vals) if vals else np.zeros((0,), w.dtype),
+        "row_indices": np.concatenate(rows).astype(np.int32)
+        if rows
+        else np.zeros((0,), np.int32),
+        "col_pointers": np.asarray(ptr, np.int64),
+        "shape": np.asarray([k, n]),
+    }
+
+
+def unpack_csc(csc: dict[str, np.ndarray]) -> np.ndarray:
+    k, n = (int(x) for x in csc["shape"])
+    out = np.zeros((k, n), csc["values"].dtype)
+    ptr = csc["col_pointers"]
+    for j in range(n):
+        lo, hi = int(ptr[j]), int(ptr[j + 1])
+        out[csc["row_indices"][lo:hi], j] = csc["values"][lo:hi]
+    return out
+
+
+def csc_nbytes(csc: dict[str, np.ndarray], value_bits: int = 16,
+               index_bits: int = 8, pointer_bits: int = 32) -> int:
+    nnz = csc["values"].shape[0]
+    ncols = csc["col_pointers"].shape[0]
+    return (nnz * (value_bits + index_bits) + ncols * pointer_bits) // 8

@@ -1,0 +1,232 @@
+"""Sparse-on-Dense as a composable module: config, packing, apply.
+
+This is the user-facing surface of the paper's technique.  A
+:class:`SoDConfig` describes *how* a family of weight matrices is stored and
+consumed; :func:`pack_param` prunes + packs a dense weight accordingly;
+:func:`apply` is the single matmul entry point every model layer calls —
+dense arrays bypass decompression (paper Fig. 2c), packed operands go through
+the fused Pallas kernel or the jnp scatter oracle depending on ``impl``.
+
+Because the packed containers are pytrees with exact-zero padding gradients,
+a model whose params hold ``TiledCSC`` leaves trains with a fixed sparsity
+mask out of the box, and its Adam moments shrink by the same compression
+ratio — the paper's "effective on-chip capacity" argument applied to
+optimizer state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, pruning
+from repro.core.formats import BlockCSR, TiledCSC
+
+__all__ = ["SoDConfig", "pack_param", "apply", "weight_bytes", "DENSE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SoDConfig:
+    """Storage/compute mode for a family of weight matrices."""
+
+    mode: str = "dense"            # dense | tiled_csc | block_csr
+    density: float = 1.0           # pruning target (1.0 = keep as-is)
+    prune_method: str = "magnitude"  # magnitude | block | nm
+    tile: tuple[int, int] = (128, 128)
+    br: int = 8                    # BlockCSR sub-block rows
+    impl: str = "auto"             # auto | jnp | pallas
+    min_dim: int = 128             # matrices smaller than this stay dense
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "tiled_csc", "block_csr"):
+            raise ValueError(f"unknown SoD mode {self.mode!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "dense"
+
+
+DENSE = SoDConfig()
+
+
+def pack_param(w: jax.Array, cfg: SoDConfig, prune: bool = True):
+    """Prune (optional) and pack one dense 2-D weight per the config.
+
+    Returns the dense array unchanged when the config is dense or the matrix
+    is too small to tile profitably.
+    """
+    if not cfg.enabled or w.ndim != 2 or min(w.shape) < cfg.min_dim:
+        return w
+    if prune and cfg.density < 1.0:
+        if cfg.prune_method == "magnitude":
+            w = pruning.magnitude_prune(w, cfg.density)
+        elif cfg.prune_method == "block":
+            w = pruning.block_prune(w, cfg.density, block=(cfg.br, cfg.tile[1]))
+        elif cfg.prune_method == "nm":
+            m = 8
+            n = max(int(round(cfg.density * m)), 1)
+            pad = (-w.shape[0]) % m
+            w = pruning.nm_prune(
+                jnp.pad(w, ((0, pad), (0, 0))), n=n, m=m, axis=0
+            )[: w.shape[0]]
+        else:
+            raise ValueError(f"unknown prune method {cfg.prune_method!r}")
+    if cfg.mode == "tiled_csc":
+        return formats.pack_tiled_csc(w, tile=cfg.tile)
+    return formats.pack_block_csr(w, tile=cfg.tile, br=cfg.br)
+
+
+def apply(x: jax.Array, w, cfg: SoDConfig | None = None, **kw) -> jax.Array:
+    """``x @ W`` through the Sparse-on-Dense datapath."""
+    from repro.kernels import ops  # local import: kernels depend on core
+
+    impl = kw.pop("impl", cfg.impl if cfg else "auto")
+    if isinstance(w, (TiledCSC, BlockCSR)):
+        if impl in ("jnp", "auto"):
+            # jnp path: differentiable scatter decompress + dense dot.  XLA
+            # fuses the scatter into the consumer on TPU; this is also the
+            # multi-device pjit path used by the dry-run.
+            return jnp.dot(
+                x, w.to_dense(), preferred_element_type=jnp.float32
+            ).astype(kw.pop("out_dtype", x.dtype))
+        return ops.sod_matmul(x, w, impl=impl, **kw)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        kw.pop("out_dtype", x.dtype)
+    )
+
+
+def expected_cap(bk: int, density: float) -> int:
+    """Static per-column slot budget for Bernoulli(density) sparsity.
+
+    mean + 4σ of Binomial(bk, density), sublane-aligned — the deterministic
+    cap the dry-run uses so abstract shapes don't depend on weight values.
+    """
+    import math
+
+    mean = bk * density
+    sigma = math.sqrt(max(bk * density * (1 - density), 1e-9))
+    cap = min(bk, int(math.ceil(mean + 4 * sigma)))
+    return max((cap + 7) // 8 * 8, 8)
+
+
+_SOD_PATHS = re.compile(
+    r"(wq|wk|wv|wo|w_gate|w_up|w_down|head|w_z|w_x|out_proj)$"
+)
+
+
+def _packable(name: str, leaf) -> bool:
+    return (
+        hasattr(leaf, "ndim") and leaf.ndim >= 2
+        and _SOD_PATHS.search(name) is not None
+    )
+
+
+def sodify_params(params, cfg: SoDConfig, prune: bool = True):
+    """Pack every eligible 2-D projection weight in a param pytree."""
+    if not cfg.enabled:
+        return params
+    flat, treedef = _flatten_named(params)
+    out = []
+    for name, leaf in flat:
+        if _packable(name, leaf) and min(leaf.shape[-2:]) >= cfg.min_dim:
+            if leaf.ndim == 2:
+                out.append(pack_param(leaf, cfg, prune=prune))
+            else:
+                lead = leaf.shape[:-2]
+                flat_w = leaf.reshape((-1,) + leaf.shape[-2:])
+                if prune and cfg.density < 1.0:
+                    flat_w = jnp.stack([
+                        pruning.magnitude_prune(flat_w[i], cfg.density)
+                        if cfg.prune_method == "magnitude" else
+                        pruning.block_prune(flat_w[i], cfg.density,
+                                            block=(cfg.br, cfg.tile[1]))
+                        for i in range(flat_w.shape[0])
+                    ])
+                w = flat_w.reshape(lead + leaf.shape[-2:])
+                if cfg.mode == "tiled_csc":
+                    out.append(formats.pack_tiled_csc(w, tile=cfg.tile))
+                else:
+                    out.append(formats.pack_block_csr(w, tile=cfg.tile,
+                                                      br=cfg.br))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def sodify_abstract(params_sds, cfg: SoDConfig):
+    """ShapeDtypeStruct version for the dry-run: deterministic cap."""
+    if not cfg.enabled:
+        return params_sds
+    flat, treedef = _flatten_named(params_sds)
+    bk, bn = cfg.tile
+    out = []
+    for name, leaf in flat:
+        if not (_packable(name, leaf) and min(leaf.shape[-2:]) >= cfg.min_dim):
+            out.append(leaf)
+            continue
+        lead = tuple(leaf.shape[:-2])
+        k, n = leaf.shape[-2:]
+        kt, nt = -(-k // bk), -(-n // bn)
+        if cfg.mode == "tiled_csc":
+            cap = expected_cap(bk, cfg.density)
+            idx = jnp.int8 if bk <= 128 else jnp.int32
+            out.append(TiledCSC(
+                vals=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn),
+                                          leaf.dtype),
+                rows=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), idx),
+                shape=(k, n), tile=cfg.tile))
+        else:
+            nb = bk // cfg.br
+            bcap = max(min(int(nb * cfg.density * 1.5 + 2), nb), 1)
+            out.append(BlockCSR(
+                block_vals=jax.ShapeDtypeStruct(
+                    lead + (kt, nt, bcap, cfg.br, bn), leaf.dtype),
+                block_ids=jax.ShapeDtypeStruct(lead + (kt, nt, bcap),
+                                               jnp.int32),
+                tile_nnz=jax.ShapeDtypeStruct(lead + (kt, nt), jnp.int32),
+                shape=(k, n), tile=cfg.tile, br=cfg.br))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _flatten_named(tree):
+    is_packed = lambda l: isinstance(l, (TiledCSC, BlockCSR))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=is_packed)
+    named = [
+        (jax.tree_util.keystr(p).replace("'", "").replace("]", "")
+         .replace("[", "."), l)
+        for p, l in flat
+    ]
+    return named, treedef
+
+
+def weight_bytes(w, value_bits: int = 16, index_bits: int = 8) -> int:
+    """Bytes this operand occupies in memory (compressed when packed)."""
+    if isinstance(w, TiledCSC):
+        return w.nbytes_compressed(value_bits, index_bits)
+    if isinstance(w, BlockCSR):
+        return w.nbytes_compressed(value_bits)
+    if hasattr(w, "size"):
+        return int(w.size) * value_bits // 8
+    return 0
+
+
+def tree_weight_bytes(params: Any) -> dict[str, int]:
+    """Compressed vs dense byte totals over a parameter pytree."""
+    compressed = 0
+    dense = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda l: isinstance(l, (TiledCSC, BlockCSR))
+    ):
+        if isinstance(leaf, (TiledCSC, BlockCSR)):
+            compressed += leaf.nbytes_compressed()
+            dense += leaf.nbytes_dense()
+        elif hasattr(leaf, "size"):
+            b = int(leaf.size) * 2
+            compressed += b
+            dense += b
+    return {"compressed": compressed, "dense": dense,
+            "ratio": compressed / max(dense, 1)}

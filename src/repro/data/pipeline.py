@@ -1,0 +1,85 @@
+"""Deterministic synthetic data pipeline.
+
+Production posture without an external corpus: batches are a pure function
+of (seed, step), so every host in a multi-host job can independently build
+its local shard (`host_slice`), restarts resume mid-epoch with zero
+coordination, and straggler mitigation can *skip* a step deterministically
+(runtime/fault.py) — every surviving host skips the same data.
+
+The token stream is a fixed random bigram chain, giving a learnable
+distribution (entropy well below uniform) so the end-to-end example shows a
+real loss curve on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class SyntheticLMData:
+    cfg: ModelConfig
+    batch_size: int
+    seq_len: int
+    seed: int = 0
+    branching: int = 4     # out-degree of the bigram chain
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        v = self.cfg.vocab
+        # each token has `branching` likely successors
+        self._succ = rng.integers(0, v, size=(v, self.branching))
+
+    # -- pure-function batch -----------------------------------------------
+    def batch(self, step: int) -> dict:
+        key = jax.random.PRNGKey(self.seed * 1_000_003 + step)
+        b, s = self.batch_size, self.seq_len
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            s_txt = s - cfg.n_patches
+            toks = self._chain(key, (b, s_txt + 1))
+            k2 = jax.random.fold_in(key, 1)
+            patches = jax.random.normal(
+                k2, (b, cfg.n_patches, cfg.frontend_dim), jnp.float32
+            ).astype(jnp.dtype(cfg.dtype))
+            return {"tokens": toks[:, :-1], "targets": toks[:, 1:],
+                    "patch_embeds": patches}
+        if cfg.family == "audio":
+            toks = jnp.stack(
+                [self._chain(jax.random.fold_in(key, c), (b, s + 1))
+                 for c in range(cfg.n_codebooks)], axis=-1)
+            return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        toks = self._chain(key, (b, s + 1))
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def _chain(self, key, shape) -> jax.Array:
+        """Vectorised bigram walk over the fixed successor table."""
+        b, s = shape
+        succ = jnp.asarray(self._succ)
+        k0, k1 = jax.random.split(key)
+        start = jax.random.randint(k0, (b,), 0, self.cfg.vocab)
+        choices = jax.random.randint(k1, (b, s), 0, self.branching)
+
+        def step(tok, choice):
+            nxt = succ[tok, choice]
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, start, choices.T)
+        return toks.T.astype(jnp.int32)
+
+    # -- multi-host slicing ---------------------------------------------------
+    def host_slice(self, batch: dict, host_id: int, n_hosts: int) -> dict:
+        per = self.batch_size // n_hosts
+        return jax.tree_util.tree_map(
+            lambda t: t[host_id * per:(host_id + 1) * per], batch)
+
+    def batches(self, start_step: int = 0):
+        step = start_step
+        while True:
+            yield step, self.batch(step)
+            step += 1

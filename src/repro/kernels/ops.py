@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the Sparse-on-Dense kernels.
+
+These handle arbitrary leading batch dims, M/K padding, implementation
+dispatch (``pallas`` on TPU / interpret, ``jnp`` oracle elsewhere), and the
+dense bypass (paper Fig. 2c): a plain dense array flows straight to
+``jnp.dot`` with no decompression, exactly as dense-format data bypasses the
+decompression unit in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BlockCSR, TiledCSC
+from repro.kernels import ref
+from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels.decompress import decompress_pallas
+from repro.kernels.sod_matmul import sod_matmul_pallas
+
+__all__ = ["sod_matmul", "decompress"]
+
+
+def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _pick_bm(m: int, default: int = 128) -> int:
+    """Largest sublane-aligned block size dividing the padded M."""
+    if m >= default:
+        return default
+    for bm in (64, 32, 16, 8):
+        if m % bm == 0 or bm <= m:
+            return bm
+    return 8
+
+
+def sod_matmul(
+    x: jax.Array,
+    w,
+    *,
+    impl: str = "auto",
+    bm: int = 128,
+    interpret: bool = True,
+    out_dtype=None,
+) -> jax.Array:
+    """``x @ W`` where ``W`` is dense, :class:`TiledCSC` or :class:`BlockCSR`.
+
+    ``x``: (..., K).  Returns (..., N) in ``out_dtype`` (default: x.dtype).
+    """
+    out_dtype = out_dtype or x.dtype
+    if isinstance(w, jax.Array) or not isinstance(w, (TiledCSC, BlockCSR)):
+        # dense bypass
+        return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+    k_logical, n_logical = w.shape
+    if x.shape[-1] != k_logical:
+        raise ValueError(f"x inner dim {x.shape[-1]} != W K {k_logical}")
+    if impl == "jnp" or (impl == "auto" and jax.default_backend() not in ("tpu",)
+                         and not interpret):
+        fn = ref.sod_matmul_ref if isinstance(w, TiledCSC) else ref.block_matmul_ref
+        return fn(x, w, out_dtype=out_dtype)
+
+    x2, lead = _as_2d(x)
+    m = x2.shape[0]
+    kt, _ = w.grid
+    bk, _ = w.tile
+    kp = kt * bk
+    bm_eff = _pick_bm(m, bm)
+    m_pad = (-m) % bm_eff
+    k_pad = kp - k_logical
+    if m_pad or k_pad:
+        x2 = jnp.pad(x2, ((0, m_pad), (0, k_pad)))
+    if isinstance(w, TiledCSC):
+        y = sod_matmul_pallas(
+            x2, w, bm=bm_eff, interpret=interpret, out_dtype=out_dtype
+        )
+    else:
+        y = block_matmul_pallas(
+            x2, w, bm=bm_eff, interpret=interpret, out_dtype=out_dtype
+        )
+    y = y[:m, :n_logical]
+    return y.reshape(*lead, n_logical)
+
+
+def decompress(w, *, impl: str = "auto", interpret: bool = True) -> jax.Array:
+    """Dense matrix from a packed operand (logical, un-padded shape)."""
+    if isinstance(w, TiledCSC) and impl in ("auto", "pallas"):
+        dense = decompress_pallas(w, interpret=interpret)
+        return dense[: w.shape[0], : w.shape[1]]
+    if hasattr(w, "to_dense"):
+        return w.to_dense()
+    return w

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel sweeps in ``tests/test_kernels.py``
+and the jnp fallback used on non-TPU backends / inside the multi-device
+dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BlockCSR, TiledCSC
+
+__all__ = [
+    "decompress_tiled_ref",
+    "decompress_block_ref",
+    "sod_matmul_ref",
+    "block_matmul_ref",
+    "dense_matmul_ref",
+]
+
+
+def decompress_tiled_ref(packed: TiledCSC) -> jax.Array:
+    """The decompression unit, element granular (scatter-add)."""
+    return packed.to_dense()
+
+
+def decompress_block_ref(packed: BlockCSR) -> jax.Array:
+    return packed.to_dense()
+
+
+def dense_matmul_ref(x: jax.Array, w: jax.Array,
+                     out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(
+        x, w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def sod_matmul_ref(x: jax.Array, packed: TiledCSC, out_dtype=None) -> jax.Array:
+    """x @ decompress(packed) — the Sparse-on-Dense dataflow, unfused."""
+    w = packed.to_dense()
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    return dense_matmul_ref(x, w, out_dtype)
+
+
+def block_matmul_ref(x: jax.Array, packed: BlockCSR, out_dtype=None) -> jax.Array:
+    w = packed.to_dense()
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {w.shape}")
+    return dense_matmul_ref(x, w, out_dtype)

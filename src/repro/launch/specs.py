@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs for one
+(architecture × input-shape) cell:
+  * train   → {tokens, targets [, patch_embeds]}
+  * prefill → {tokens [, patch_embeds]}
+  * decode  → (cache, tokens, pos) with the cache at full seq_len occupancy
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import LM
+
+Params = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def token_specs(cfg: ModelConfig, batch: int, seq: int,
+                with_targets: bool) -> dict:
+    if cfg.family == "audio":
+        toks = _sds((batch, seq, cfg.n_codebooks), jnp.int32)
+    elif cfg.family == "vlm":
+        toks = _sds((batch, seq - cfg.n_patches), jnp.int32)
+    else:
+        toks = _sds((batch, seq), jnp.int32)
+    out = {"tokens": toks}
+    if cfg.family == "vlm":
+        out["patch_embeds"] = _sds(
+            (batch, cfg.n_patches, cfg.frontend_dim), jnp.dtype(cfg.dtype))
+    if with_targets:
+        out["targets"] = _sds(toks.shape, jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for one dry-run cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": token_specs(cfg, b, s, with_targets=True)}
+    if shape.kind == "prefill":
+        return {"batch": token_specs(cfg, b, s, with_targets=False)}
+    # decode: one new token against a seq_len-deep cache
+    model = LM(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    if cfg.family == "audio":
+        toks = _sds((b, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        toks = _sds((b, 1), jnp.int32)
+    return {
+        "cache": cache,
+        "tokens": toks,
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def abstract_params(model: LM, sod_cfg=None) -> Params:
+    """eval_shape of init (+ optional abstract Sparse-on-Dense packing)."""
+    from repro.core import sod as sod_mod
+
+    params = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    if sod_cfg is not None and sod_cfg.enabled:
+        params = sod_mod.sodify_abstract(params, sod_cfg)
+    return params

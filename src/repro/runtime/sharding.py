@@ -1,0 +1,254 @@
+"""Partition rules: params / optimizer state / batches → PartitionSpec trees.
+
+Rules are path-pattern based and **format-aware**: a packed Sparse-on-Dense
+leaf (TiledCSC / BlockCSR) inherits the dense weight's (K, N) specs on its
+tile-grid dims (Kt, Nt) — compressed storage shards exactly like the dense
+matrix it stands for.
+
+ZeRO-1: optimizer moments and fp32 masters are *additionally* sharded over
+the data axes along the first dimension that divides evenly — the standard
+optimizer-state partitioning required to fit the 27–34B archs in 16 GB/chip.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.formats import BlockCSR, TiledCSC
+from repro.launch.mesh import dp_axes
+
+Params = Any
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        n = 1
+        for a in name:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[name]
+
+
+# ---------------------------------------------------------------------------
+# dense-weight rules.  Returns the spec for the *matrix* dims (K, N); any
+# leading dims (layer-stack groups) are unsharded.
+# ---------------------------------------------------------------------------
+def _matrix_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+                 tp: int) -> tuple:
+    kv_dim = cfg.n_kv_heads * cfg.head_dim
+    kv_ok = cfg.n_kv_heads % tp == 0
+
+    def col_shard(dim):  # shard output/N dim on model axis when divisible
+        return "model" if dim % tp == 0 else None
+
+    if "embed" in path and len(shape) >= 2:
+        # (V, D) vocab-sharded; audio (C, V, D)
+        return ("model", None) if len(shape) == 2 else (None, "model", None)
+    if "patch_proj" in path:
+        return (None, None)
+    if "head" in path:
+        return (None, col_shard(shape[-1]))
+    if re.search(r"w[qkv]\b|wq|wk|wv", path):
+        is_kv = shape[-1] == kv_dim and kv_dim != cfg.n_heads * cfg.head_dim
+        if ("wk" in path or "wv" in path) and not kv_ok:
+            return (None, None)          # replicate KV when heads < TP
+        if ("wk" in path or "wv" in path):
+            return (None, "model")
+        return (None, col_shard(shape[-1]))
+    if "wo" in path:
+        return (col_shard(shape[-2]), None)
+    if "w_down" in path or "out_proj" in path or "w_out" in path:
+        return (col_shard(shape[-2]), None)
+    if re.search(r"w_gate|w_up|in_proj|w_z|w_x\b", path):
+        return (None, col_shard(shape[-1]))
+    if "router" in path or "w_dt" in path or "w_b" in path or "w_c" in path:
+        return (None, None)
+    if "w_if" in path or "w_gates" in path:
+        return (None, None)
+    return tuple(None for _ in shape[-2:]) if len(shape) >= 2 else (None,)
+
+
+def _leaf_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    tp = mesh.shape["model"]
+    if isinstance(leaf, (TiledCSC, BlockCSR)):
+        raise TypeError("packed leaves are handled by their sub-arrays")
+    shape = getattr(leaf, "shape", ())
+    nd = len(shape)
+    if nd <= 1:
+        return P()
+    # packed sub-arrays: the (Kt, Nt) tile-grid dims shard like the dense
+    # matrix's (K, N); divisibility checked against the grid dims below.
+    packed_tail = {"vals": 2, "rows": 2, "block_vals": 3, "block_ids": 1,
+                   "tile_nnz": 0}
+    m = re.search(r"\.(vals|rows|block_vals|block_ids|tile_nnz)$", path)
+    if m:
+        tail = packed_tail[m.group(1)]
+        grid = shape[nd - tail - 2: nd - tail]
+        base = _matrix_spec(path, grid, cfg, tp)
+        spec = (tuple(None for _ in range(nd - tail - 2)) + base
+                + (None,) * tail)
+        fixed = [
+            None if (ax is not None and dim % _axis_size(mesh, ax) != 0)
+            else ax
+            for dim, ax in zip(shape, spec)
+        ]
+        return P(*fixed)
+
+    # MoE stacked experts: (..., E, d_in, d_out) — EP on the expert dim
+    if re.search(r"moe.*(w_gate|w_up|w_down)", path) and nd >= 3:
+        ep = "model" if shape[-3] % tp == 0 else None
+        return P(*(tuple(None for _ in range(nd - 3)) + (ep, None, None)))
+    if "moe" in path and "router" in path:
+        return P(*(None,) * nd)
+
+    mat = _matrix_spec(path, shape, cfg, tp)
+    lead = tuple(None for _ in range(nd - len(mat)))
+    spec = lead + mat
+    # drop shardings that don't divide
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax is not None and dim % _axis_size(mesh, ax) != 0:
+            ax = None
+        fixed.append(ax)
+    return P(*fixed)
+
+
+def param_specs(params: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
+    """PartitionSpec pytree matching ``params`` (packed leaves expanded)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path).replace("'", "").replace("]", "")
+        name = name.replace("[", ".")
+        specs.append(_leaf_spec(name, leaf, cfg, mesh))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params), specs)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state specs
+# ---------------------------------------------------------------------------
+def _zero_spec(spec: P, shape: tuple[int, ...], mesh: Mesh,
+               dp: tuple[str, ...]) -> P:
+    if not shape:
+        return P()
+    dp_size = _axis_size(mesh, dp if len(dp) > 1 else dp[0])
+    cur = tuple(spec) + (None,) * (len(shape) - len(spec))
+    out = list(cur)
+    for i, (dim, ax) in enumerate(zip(shape, cur)):
+        if ax is None and dim % dp_size == 0:
+            out[i] = dp if len(dp) > 1 else dp[0]
+            return P(*out)
+    return P(*cur)
+
+
+def opt_state_specs(opt_state: Params, p_specs: Params, mesh: Mesh,
+                    zero1: bool = True) -> Params:
+    """Moments/master mirror the param spec + ZeRO-1 data-axis sharding.
+
+    m/v/master trees share the param treedef (``AdamW.init`` uses tree_map),
+    so specs zip leaf-for-leaf; scalar placeholders for int leaves get P().
+    """
+    dp = dp_axes(mesh)
+    flat_p = jax.tree_util.tree_leaves(
+        p_specs, is_leaf=lambda x: isinstance(x, P))
+
+    def mom_specs(tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        assert len(leaves) == len(flat_p), (len(leaves), len(flat_p))
+        out = []
+        for leaf, ps in zip(leaves, flat_p):
+            shape = getattr(leaf, "shape", ())
+            if not shape:
+                out.append(P())
+                continue
+            spec = ps if len(tuple(ps)) <= len(shape) else P()
+            out.append(_zero_spec(spec, shape, mesh, dp) if zero1 else spec)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return {
+        "step": P(),
+        "m": mom_specs(opt_state["m"]),
+        "v": mom_specs(opt_state["v"]),
+        "master": mom_specs(opt_state["master"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_specs(batch: Params, mesh: Mesh) -> Params:
+    dp = dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return P()
+        if shape[0] % _axis_size(mesh, dp_ax) == 0:
+            return P(dp_ax, *(None,) * (len(shape) - 1))
+        return P(*(None,) * len(shape))
+
+    return jax.tree_util.tree_map(one, batch)
+
+
+def cache_specs(cache: Params, cfg: ModelConfig, mesh: Mesh,
+                batch_size: int, seq_len: int | None = None,
+                seq_shard: bool = True) -> Params:
+    """KV caches: batch on data axes; cache *sequence* dim on ``model``.
+
+    Sequence-sharding the KV cache keeps the attention contraction local per
+    chip — softmax over the sharded context needs only tiny max/sum stat
+    collectives instead of an all-gather of the whole cache (a 17 GB/chip/
+    step gather in the baseline llama decode cell — EXPERIMENTS.md §Perf A1).
+    """
+    dp = dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    dp_size = _axis_size(mesh, dp_ax)
+    tp = mesh.shape["model"]
+
+    def one(path, leaf):
+        name = jax.tree_util.keystr(path)
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        spec = [None] * nd
+        batch_dim = None
+        for i, d in enumerate(shape):
+            if d == batch_size and d % dp_size == 0:
+                spec[i] = dp_ax
+                batch_dim = i
+                break
+        is_kv = name.endswith("['k']") or name.endswith("['v']") \
+            or ".k" in name or ".v" in name
+        if seq_shard and is_kv and seq_len and nd >= 4:
+            for i in range(nd - 1, -1, -1):
+                if i != batch_dim and shape[i] == seq_len \
+                        and shape[i] % tp == 0:
+                    spec[i] = "model"
+                    break
+        if batch_dim is None and all(s is None for s in spec):
+            # batch unshardable (e.g. B=1): shard kv heads / feature dim
+            for i in range(nd - 1, 0, -1):
+                if spec[i] is None and shape[i] % tp == 0 and shape[i] >= tp \
+                        and ("ssm" in name or "mlstm" in name):
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def to_shardings(spec_tree: Params, mesh: Mesh) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,111 @@
+"""Chunked attention vs naive reference: causal, windows, softcap, decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.layers import apply_rope
+
+B, S, D = 2, 256, 128
+SPEC = A.AttnSpec(n_heads=8, n_kv_heads=4, head_dim=32, chunk_q=64,
+                  chunk_k=64)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = A.init_attention(KEY, D, SPEC, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (B, S, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return params, x, pos
+
+
+def naive(params, x, pos, spec, window=None):
+    q = (x @ params["wq"]).reshape(B, S, spec.n_heads, spec.head_dim)
+    k = (x @ params["wk"]).reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    v = (x @ params["wv"]).reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    q = apply_rope(q, pos, spec.rope_theta)
+    k = apply_rope(k, pos, spec.rope_theta)
+    g = spec.n_heads // spec.n_kv_heads
+    qg = q.reshape(B, S, spec.n_kv_heads, g, spec.head_dim)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k) * spec.q_scale
+    if spec.softcap:
+        s = spec.softcap * jnp.tanh(s / spec.softcap)
+    i = jnp.arange(S)
+    m = i[None, :] <= i[:, None]
+    if window:
+        m &= i[None, :] > i[:, None] - window
+    s = jnp.where(m[None, None, None], s, -2e38)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bkgqc,bckh->bqkgh", p, v).reshape(B, S, -1)
+    return o @ params["wo"]
+
+
+def test_causal(setup):
+    params, x, pos = setup
+    y = A.full_attention(params, x, SPEC, pos)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(naive(params, x, pos, SPEC)),
+                               atol=2e-3)
+
+
+@pytest.mark.parametrize("window", [17, 64, 96, 128, 255])
+def test_sliding_window(setup, window):
+    params, x, pos = setup
+    y = A.full_attention(params, x, SPEC, pos, window=window)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(naive(params, x, pos, SPEC, window)),
+        atol=2e-3)
+
+
+def test_softcap(setup):
+    params, x, pos = setup
+    spec = A.AttnSpec(n_heads=8, n_kv_heads=4, head_dim=32, chunk_q=64,
+                      chunk_k=64, softcap=20.0)
+    y = A.full_attention(params, x, spec, pos)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(naive(params, x, pos, spec)),
+                               atol=2e-3)
+
+
+def test_decode_matches_full(setup):
+    params, x, pos = setup
+    cache = A.init_cache(B, S, SPEC, dtype=jnp.float32)
+
+    def step(cache, t):
+        xt = jax.lax.dynamic_slice(x, (0, t, 0), (B, 1, D))
+        out, cache = A.decode_attention(params, xt, cache, t, SPEC)
+        return cache, out
+
+    cache, outs = jax.lax.scan(step, cache, jnp.arange(S))
+    outs = outs.transpose(1, 0, 2, 3).reshape(B, S, D)
+    np.testing.assert_allclose(np.asarray(outs),
+                               np.asarray(naive(params, x, pos, SPEC)),
+                               atol=2e-3)
+
+
+def test_mqa_grouping(setup):
+    spec = A.AttnSpec(n_heads=8, n_kv_heads=1, head_dim=32, chunk_q=64,
+                      chunk_k=64)
+    params = A.init_attention(KEY, D, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (B, S, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    y = A.full_attention(params, x, spec, pos)
+
+    def naive_mqa():
+        q = (x @ params["wq"]).reshape(B, S, 8, 32)
+        k = (x @ params["wk"]).reshape(B, S, 1, 32)
+        v = (x @ params["wv"]).reshape(B, S, 1, 32)
+        q = apply_rope(q, pos, spec.rope_theta)
+        k = apply_rope(k, pos, spec.rope_theta)
+        qg = q.reshape(B, S, 1, 8, 32)
+        s = jnp.einsum("bqkgh,bckh->bkgqc", qg, k) * spec.q_scale
+        i = jnp.arange(S)
+        s = jnp.where((i[None, :] <= i[:, None])[None, None, None], s, -2e38)
+        p = jax.nn.softmax(s, -1)
+        return jnp.einsum("bkgqc,bckh->bqkgh", p, v).reshape(B, S, -1) \
+            @ params["wo"]
+
+    np.testing.assert_allclose(np.asarray(y), np.asarray(naive_mqa()),
+                               atol=2e-3)

@@ -1,0 +1,70 @@
+"""Checkpointer: round-trip, commit marker, async, GC, elastic dtype."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _state(scale=1.0):
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4) * scale,
+                   "b": jnp.ones((4,)) * scale},
+        "opt": {"step": jnp.asarray(7, jnp.int32),
+                "m": {"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))}},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = _state()
+    ck.save(3, state)
+    out = ck.restore(3, jax.tree_util.tree_map(jnp.zeros_like, state))
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, _state(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_committed_marker_guards_partial(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(5, _state())
+    # simulate a partial (uncommitted) later checkpoint
+    bad = pathlib.Path(tmp_path) / "step_00000009"
+    bad.mkdir()
+    (bad / "MANIFEST.msgpack").write_bytes(b"junk")
+    assert ck.latest_step() == 5
+    with pytest.raises(FileNotFoundError):
+        ck.restore(9, _state())
+
+
+def test_gc_keeps_last_n(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(scale=s))
+    assert ck.all_steps() == [3, 4]
+
+
+def test_restore_casts_to_template_dtype(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"w": jnp.ones((4,), jnp.float32)})
+    out = ck.restore(1, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(1, {"w": jnp.ones((4,))})
+    with pytest.raises(KeyError):
+        ck.restore(1, {"w": jnp.ones((4,)), "extra": jnp.ones((2,))})

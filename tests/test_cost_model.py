@@ -1,0 +1,80 @@
+"""Cost model: paper-claim windows + structural properties (hypothesis)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.cost_model import Workload
+
+
+def test_all_paper_claims_reproduced():
+    """The complete claim table from benchmarks must pass."""
+    import sys
+    sys.path.insert(0, str(__import__("pathlib").Path(__file__).parents[1]))
+    from benchmarks import paper_figs, paper_real_models
+
+    failures = []
+    for fn in paper_figs.ALL + paper_real_models.ALL:
+        _, checks = fn()
+        failures += [c[0] for c in checks if not c[3]]
+    assert not failures, failures
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.floats(0.05, 0.95))
+def test_sod_effective_throughput_density_invariant(d):
+    """Paper Fig. 8a: SoD T/A constant across density."""
+    w0 = Workload(512, 1024, 1024, 1.0, 1.0)
+    wd = Workload(512, 1024, 1024, d, 1.0)
+    r0 = cm.sparse_on_dense(w0).tops_per_mm2()
+    rd = cm.sparse_on_dense(wd).tops_per_mm2()
+    assert rd == pytest.approx(r0, rel=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(d1=st.floats(0.05, 0.9), d2=st.floats(0.05, 0.9))
+def test_sod_energy_monotone_in_density(d1, d2):
+    """Less density → less memory traffic → more energy-efficient."""
+    lo, hi = sorted((d1, d2))
+    wl = Workload(512, 2048, 2048, lo, 1.0)
+    wh = Workload(512, 2048, 2048, hi, 1.0)
+    assert cm.sparse_on_dense(wl).tops_per_watt >= \
+        cm.sparse_on_dense(wh).tops_per_watt - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.floats(0.05, 0.95))
+def test_sparse_accels_never_beat_their_peak(d):
+    w = Workload(1024, 1024, 1024, d, d)
+    for fn in (cm.ese, cm.scnn, cm.snap, cm.sigma):
+        r = fn(w)
+        assert r.cycles > 0 and r.energy_pj > 0
+
+
+def test_dense_baseline_insensitive_to_density():
+    """The dense baseline always receives dense-format data (Fig. 6 note)."""
+    a = cm.dense_baseline(Workload(512, 1024, 1024, 0.2, 1.0))
+    b = cm.dense_baseline(Workload(512, 1024, 1024, 1.0, 1.0))
+    assert a.energy_pj == pytest.approx(b.energy_pj)
+    assert a.cycles == pytest.approx(b.cycles)
+
+
+def test_scnn_stride_penalty():
+    w = Workload(3025, 363, 96, 0.84, 1.0)
+    slow = cm.scnn(w, stride=4, kernel_size=11)
+    fast = cm.scnn(w, stride=1, kernel_size=11)
+    assert slow.cycles > 3 * fast.cycles
+
+
+def test_compression_footprint_breakeven():
+    """CSC (16b value + 8b index) beats dense below ~2/3 density."""
+    below = Workload(1, 128, 128, 0.6, 1.0)
+    above = Workload(1, 128, 128, 0.7, 1.0)
+    dense_bits = 16.0
+    assert below.dw * 24 < dense_bits
+    assert above.dw * 24 > dense_bits
+
+
+def test_breakdown_fig5():
+    b = cm.sod_breakdown()
+    assert 0.01 <= b["decomp_over_pe"] <= 0.03
+    assert b["sram_mm2"] > b["pe_array_mm2"]   # memory dominates the chip

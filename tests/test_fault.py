@@ -1,0 +1,93 @@
+"""Fault tolerance: watchdog, elastic mesh math, restart-from-checkpoint."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime import fault
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"d{self.id}"
+
+
+def test_surviving_mesh_shrinks_data_axis():
+    devs = [FakeDev(i) for i in range(32)]
+    mesh = fault.surviving_mesh(devs, failed_ids={3, 17}, model_axis=4)
+    assert mesh.shape["model"] == 4
+    assert mesh.shape["data"] == 7          # 30 survivors → 7×4 = 28 used
+    ids = {d.id for d in mesh.devices.reshape(-1)}
+    assert not ids & {3, 17}
+
+
+def test_surviving_mesh_insufficient_raises():
+    devs = [FakeDev(i) for i in range(4)]
+    with pytest.raises(RuntimeError):
+        fault.surviving_mesh(devs, failed_ids={0, 1}, model_axis=4)
+
+
+def test_straggler_watchdog():
+    wd = fault.StragglerWatchdog(factor=3.0, warmup=3)
+    for _ in range(5):
+        assert not wd.observe(1.0)
+    assert wd.observe(10.0)
+    assert wd.strays == 1
+    assert not wd.observe(1.0)
+    assert wd.strays == 0
+
+
+def test_resilient_runner_restarts_from_checkpoint(tmp_path):
+    state = {"x": jnp.zeros(())}
+    ck = Checkpointer(tmp_path)
+    ck.save(0, state)
+    calls = {"n": 0}
+
+    def step_fn(step):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("simulated device failure")
+        return {"loss": 1.0}
+
+    loaded = {}
+    runner = fault.ResilientRunner(
+        step_fn, ck, fault.FaultConfig(ckpt_every=100, max_restarts=1),
+        state_of=lambda: state,
+        load_state=lambda s: loaded.update(s))
+    res = runner.run_step(1)
+    assert res.restarted and res.metrics["loss"] == 1.0
+    assert "x" in loaded                      # state was restored
+    assert calls["n"] == 2                    # deterministic replay
+
+
+def test_resilient_runner_gives_up_after_max_restarts(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save(0, {"x": jnp.zeros(())})
+
+    def bad_step(step):
+        raise RuntimeError("persistent failure")
+
+    runner = fault.ResilientRunner(
+        bad_step, ck, fault.FaultConfig(max_restarts=0),
+        state_of=lambda: {"x": jnp.zeros(())}, load_state=lambda s: None)
+    with pytest.raises(RuntimeError):
+        runner.run_step(1)
+
+
+def test_runner_checkpoints_on_schedule(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = {"x": jnp.zeros(())}
+    runner = fault.ResilientRunner(
+        lambda step: {"loss": 0.0}, ck,
+        fault.FaultConfig(ckpt_every=2),
+        state_of=lambda: state, load_state=lambda s: None)
+    for s in range(5):
+        runner.run_step(s)
+    ck.wait()
+    assert 4 in ck.all_steps()

@@ -1,0 +1,48 @@
+"""Top-k gradient compression with error feedback."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import grad as G
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_topk_roundtrip_full_ratio():
+    g = jax.random.normal(KEY, (64, 32))
+    vals, idx, err = G.topk_compress(g, 1.0)
+    np.testing.assert_allclose(np.asarray(err), 0.0, atol=1e-7)
+    out = G.topk_decompress(vals, idx, g.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=1e-6)
+
+
+def test_topk_keeps_largest_and_error_is_rest():
+    g = jnp.asarray([1.0, -5.0, 0.1, 3.0])
+    vals, idx, err = G.topk_compress(g, 0.5)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    np.testing.assert_allclose(np.asarray(err), [1.0, 0.0, 0.1, 0.0])
+    recon = G.topk_decompress(vals, idx, (4,))
+    np.testing.assert_allclose(np.asarray(recon + err), np.asarray(g),
+                               atol=1e-7)
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """Sum of transmitted + final residual == sum of raw grads."""
+    gs = [jax.random.normal(jax.random.fold_in(KEY, i), (128,))
+          for i in range(5)]
+    err = jnp.zeros((128,))
+    sent = jnp.zeros((128,))
+    for g in gs:
+        vals, idx, err = G.topk_compress(g + err, 0.25)
+        sent += G.topk_decompress(vals, idx, (128,))
+    total = sent + err
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(sum(gs)), atol=1e-4)
+
+
+def test_accumulate_running_mean():
+    a = {"w": jnp.asarray([2.0])}
+    b = {"w": jnp.asarray([4.0])}
+    acc = G.accumulate(a, None, 1)
+    acc = G.accumulate(b, acc, 2)
+    np.testing.assert_allclose(np.asarray(acc["w"]), [3.0])

@@ -1,0 +1,78 @@
+"""MoE routing invariants and shared-expert path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _spec(**kw):
+    base = dict(n_experts=8, n_experts_padded=8, top_k=2, d_model=32,
+                d_ff=64, capacity_factor=2.0)
+    base.update(kw)
+    return moe.MoESpec(**base)
+
+
+def test_moe_output_shape_and_aux():
+    spec = _spec()
+    params = moe.init_moe(KEY, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, 32), jnp.float32)
+    y, aux = moe.moe_mlp(params, x, spec)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) >= 0.0
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+def test_moe_padded_experts_get_no_tokens():
+    spec = _spec(n_experts=6, n_experts_padded=8)
+    params = moe.init_moe(KEY, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (1, 64, 32), jnp.float32)
+    logits = jnp.dot(x.reshape(-1, 32), params["router"])
+    pad_mask = jnp.arange(8) >= 6
+    masked = jnp.where(pad_mask[None], -1e30, logits)
+    probs = jax.nn.softmax(masked, -1)
+    _, ids = jax.lax.top_k(probs, spec.top_k)
+    assert int(jnp.max(ids)) < 6
+
+
+def test_moe_single_expert_equals_mlp():
+    """With one expert and top-1 routing the MoE == that expert's MLP."""
+    spec = _spec(n_experts=1, n_experts_padded=1, top_k=1,
+                 capacity_factor=8.0)
+    params = moe.init_moe(KEY, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (1, 8, 32), jnp.float32)
+    y, _ = moe.moe_mlp(params, x, spec)
+    xt = x.reshape(-1, 32)
+    h = jax.nn.silu(xt @ params["w_gate"][0]) * (xt @ params["w_up"][0])
+    expect = (h @ params["w_down"][0]).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(expect),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_moe_capacity_drops_dont_nan():
+    spec = _spec(capacity_factor=0.01)   # force drops
+    params = moe.init_moe(KEY, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (2, 64, 32), jnp.float32)
+    y, _ = moe.moe_mlp(params, x, spec)
+    assert not bool(jnp.any(jnp.isnan(y)))
+
+
+def test_shared_expert_contributes():
+    spec = _spec(n_shared=1, d_shared_ff=64)
+    params = moe.init_moe(KEY, spec, dtype=jnp.float32)
+    x = jax.random.normal(KEY, (1, 8, 32), jnp.float32)
+    y_with, _ = moe.moe_mlp(params, x, spec)
+    params2 = dict(params)
+    params2["shared"] = jax.tree_util.tree_map(jnp.zeros_like,
+                                               params["shared"])
+    y_without, _ = moe.moe_mlp(params2, x, spec)
+    assert float(jnp.abs(y_with - y_without).max()) > 1e-5
+
+
+def test_pad_experts_helper():
+    assert moe.pad_experts(60, 16) == 64
+    assert moe.pad_experts(32, 16) == 32
+    assert moe.pad_experts(7, 4) == 8

@@ -1,0 +1,92 @@
+"""AdamW vs a numpy reference; schedules; packed-pytree handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import formats, pruning
+from repro.optim import AdamW, AdamWConfig, cosine_schedule
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _np_adamw(w, g, m, v, step, cfg, lr):
+    m = cfg.b1 * m + (1 - cfg.b1) * g
+    v = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mh = m / (1 - cfg.b1 ** step)
+    vh = v / (1 - cfg.b2 ** step)
+    w = w - lr * (mh / (np.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+    return w, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1e9, weight_decay=0.1)
+    opt = AdamW(cfg)
+    w0 = jax.random.normal(KEY, (8, 8), jnp.float32)
+    params = {"w": w0}
+    state = opt.init(params)
+    wn = np.asarray(w0, np.float64)
+    m = np.zeros_like(wn)
+    v = np.zeros_like(wn)
+    for step in range(1, 6):
+        g = np.asarray(jax.random.normal(jax.random.fold_in(KEY, step),
+                                         (8, 8)), np.float64)
+        params, state, _ = opt.update(params, {"w": jnp.asarray(g,
+                                                                jnp.float32)},
+                                      state)
+        wn, m, v = _np_adamw(wn, g, m, v, step, cfg, cfg.lr)
+    np.testing.assert_allclose(np.asarray(params["w"]), wn, atol=1e-4)
+
+
+def test_grad_clip_scales_update():
+    cfg = AdamWConfig(lr=1e-2, grad_clip=0.1, weight_decay=0.0)
+    opt = AdamW(cfg)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    state = opt.init(params)
+    g = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = opt.update(params, g, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-3)
+
+
+def test_packed_params_train_on_mask_only():
+    """Fixed-mask sparse training: padding slots and integer rows never move,
+    and moments have the compressed footprint."""
+    w = pruning.random_sparse(KEY, (256, 128), 0.3)
+    packed = formats.pack_tiled_csc(w)
+    params = {"w": packed}
+    opt = AdamW(AdamWConfig(lr=1e-2, weight_decay=0.0))
+    state = opt.init(params)
+    assert state["m"]["w"].vals.shape == packed.vals.shape
+
+    def loss(p):
+        return jnp.sum(p["w"].to_dense() ** 2)
+
+    grads = jax.grad(loss, allow_int=True)(params)
+    p2, state, _ = opt.update(params, grads, state)
+    # rows untouched
+    np.testing.assert_array_equal(np.asarray(p2["w"].rows),
+                                  np.asarray(packed.rows))
+    # padding values still exactly zero; real values moved
+    pad = np.asarray(packed.rows) < 0
+    assert np.all(np.asarray(p2["w"].vals)[pad] == 0)
+    real = ~pad & (np.asarray(packed.vals) != 0)
+    assert np.any(np.asarray(p2["w"].vals)[real]
+                  != np.asarray(packed.vals)[real])
+
+
+def test_cosine_schedule_shape():
+    sched = cosine_schedule(1.0, warmup_steps=10, total_steps=100,
+                            min_ratio=0.1)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0, abs=1e-6)
+    assert float(sched(100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(sched(55)) < float(sched(20))
+
+
+def test_schedule_plugged_into_optimizer():
+    opt = AdamW(AdamWConfig(lr=1.0),
+                schedule=cosine_schedule(1.0, 2, 10))
+    params = {"w": jnp.ones((2,), jnp.float32)}
+    state = opt.init(params)
+    _, state, metrics = opt.update(params, {"w": jnp.ones((2,))}, state)
+    assert float(metrics["lr"]) == pytest.approx(0.5)  # warmup step 1/2

@@ -1,0 +1,84 @@
+"""Pruning mechanics: densities, structures, layerwise profiles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats, pruning
+
+KEY = jax.random.PRNGKey(7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(density=st.floats(0.05, 0.95), seed=st.integers(0, 2**16))
+def test_magnitude_density_target(density, seed):
+    w = jax.random.normal(jax.random.PRNGKey(seed), (64, 96))
+    out = pruning.magnitude_prune(w, density)
+    got = formats.density(out)
+    assert abs(got - density) < 0.02 + 2.0 / w.size
+    # kept values are exactly the original values
+    mask = np.asarray(out) != 0
+    np.testing.assert_allclose(np.asarray(out)[mask], np.asarray(w)[mask])
+
+
+def test_magnitude_keeps_largest():
+    w = jnp.arange(1.0, 101.0).reshape(10, 10)
+    out = pruning.magnitude_prune(w, 0.25)
+    kept = np.sort(np.asarray(out).reshape(-1))[-25:]
+    np.testing.assert_allclose(kept, np.arange(76.0, 101.0))
+
+
+@pytest.mark.parametrize("n,m", [(2, 4), (4, 8), (1, 8)])
+def test_nm_structure(n, m):
+    w = jax.random.normal(KEY, (m * 10, 16))
+    out = np.asarray(pruning.nm_prune(w, n=n, m=m, axis=0))
+    groups = out.reshape(10, m, 16)
+    nnz = (groups != 0).sum(axis=1)
+    assert (nnz <= n).all()
+
+
+def test_block_prune_structure():
+    w = jax.random.normal(KEY, (128, 256))
+    out = np.asarray(pruning.block_prune(w, 0.5, block=(8, 128)))
+    blocks = out.reshape(16, 8, 2, 128)
+    alive = np.abs(blocks).sum(axis=(1, 3)) > 0
+    assert abs(alive.mean() - 0.5) < 0.1
+    # alive blocks untouched
+    mask = np.repeat(np.repeat(alive, 8, 0).reshape(128, 2), 128, 1)
+    np.testing.assert_allclose(out[mask], np.asarray(w)[mask])
+
+
+def test_prune_tree_respects_structure_and_small_leaves():
+    params = {
+        "w_big": jax.random.normal(KEY, (128, 128)),
+        "norm": jnp.ones((128,)),
+        "tiny": jax.random.normal(KEY, (4, 4)),
+    }
+    out = pruning.prune_tree(params, 0.3, min_size=1024)
+    assert abs(formats.density(out["w_big"]) - 0.3) < 0.05
+    np.testing.assert_allclose(np.asarray(out["norm"]),
+                               np.asarray(params["norm"]))
+    np.testing.assert_allclose(np.asarray(out["tiny"]),
+                               np.asarray(params["tiny"]))
+
+
+def test_prune_tree_layerwise_callable():
+    params = {"a": {"w_down": jax.random.normal(KEY, (64, 64))},
+              "b": {"w_down": jax.random.normal(KEY, (64, 64))}}
+    dens = lambda name: 0.1 if ".a" in name else 0.5
+    out = pruning.prune_tree(params, dens, min_size=1000)
+    assert formats.density(out["a"]["w_down"]) < 0.2
+    assert formats.density(out["b"]["w_down"]) > 0.4
+
+
+def test_paper_profiles_match_table3():
+    p = pruning.PAPER_PROFILES
+    assert abs(np.mean(p["alexnet_conv"].layer_densities) - 0.41) < 0.05
+    assert abs(np.mean(p["vgg16_conv"].layer_densities) - 0.33) < 0.05
+    assert abs(np.mean(p["bert_squad"].layer_densities) - 0.33) < 0.03
+    assert abs(np.mean(p["bert_mnli"].layer_densities) - 0.13) < 0.03
+    assert p["bert_squad"].input_density == 1.0
+    # SQuAD per-layer range 0.04-0.5 (Section IV-D)
+    assert min(p["bert_squad"].layer_densities) >= 0.04
+    assert max(p["bert_squad"].layer_densities) <= 0.5

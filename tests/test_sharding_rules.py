@@ -1,0 +1,112 @@
+"""Pure-logic tests for partition rules and dry-run accounting helpers."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch.dryrun import _extrapolate, collective_bytes
+from repro.runtime.sharding import _matrix_spec
+
+
+def _cfg(name="llama3.2-1b"):
+    return configs.get_config(name)
+
+
+class TestMatrixSpec:
+    def test_attention_projections(self):
+        cfg = _cfg()
+        assert _matrix_spec(".blocks.attn.wq", (2048, 2048), cfg, 16) == \
+            (None, "model")
+        # llama kv heads (8) < TP (16) → replicate
+        assert _matrix_spec(".blocks.attn.wk", (2048, 512), cfg, 16) == \
+            (None, None)
+        assert _matrix_spec(".blocks.attn.wo", (2048, 2048), cfg, 16) == \
+            ("model", None)
+
+    def test_kv_sharded_when_divisible(self):
+        cfg = _cfg("gemma2-27b")   # kv=16
+        assert _matrix_spec(".blocks.attn.wk", (4608, 2048), cfg, 16) == \
+            (None, "model")
+
+    def test_mlp(self):
+        cfg = _cfg()
+        assert _matrix_spec(".blocks.mlp.w_gate", (2048, 8192), cfg, 16) == \
+            (None, "model")
+        assert _matrix_spec(".blocks.mlp.w_down", (8192, 2048), cfg, 16) == \
+            ("model", None)
+
+    def test_embed_vocab_sharded(self):
+        cfg = _cfg()
+        assert _matrix_spec(".embed", (128256, 2048), cfg, 16) == \
+            ("model", None)
+
+    def test_router_replicated(self):
+        cfg = _cfg("qwen2-moe-a2.7b")
+        assert _matrix_spec(".blocks.moe.router", (2048, 64), cfg, 16) == \
+            (None, None)
+
+
+class TestCollectiveParser:
+    HLO = """
+  %all-gather.3 = f32[16,1,8,32768,8,64]{5,3,2,1,0,4} all-gather(%x), dims
+  %all-reduce.1 = bf16[1024,512]{1,0} all-reduce(%y), channel_id=2
+  %rs = f32[128]{0} reduce-scatter(%z), channel_id=3
+  %dot.1 = f32[64,64]{1,0} dot(%a, %b)
+"""
+
+    def test_counts_and_bytes(self):
+        out = collective_bytes(self.HLO)
+        ag = 16 * 1 * 8 * 32768 * 8 * 64 * 4
+        ar = 1024 * 512 * 2 * 2           # ×2 ring RS+AG
+        rs = 128 * 4
+        assert out["all-gather"] == ag
+        assert out["all-reduce"] == ar
+        assert out["reduce-scatter"] == rs
+        assert out["total"] == ag + ar + rs
+        assert out["counts"]["all-gather"] == 1
+
+    def test_ignores_non_collectives(self):
+        out = collective_bytes("%dot = f32[8,8]{1,0} dot(%a, %b)")
+        assert out["total"] == 0
+
+
+class TestProbeExtrapolation:
+    def test_affine_law_exact(self):
+        a1 = {"cost": {"flops": 100.0, "bytes_accessed": 10.0,
+                       "transcendentals": 0.0},
+              "collectives": {"all-gather": 4.0, "all-reduce": 2.0,
+                              "reduce-scatter": 0, "all-to-all": 0,
+                              "collective-permute": 0, "total": 6.0}}
+        a2 = {"cost": {"flops": 160.0, "bytes_accessed": 16.0,
+                       "transcendentals": 0.0},
+              "collectives": {"all-gather": 6.0, "all-reduce": 3.0,
+                              "reduce-scatter": 0, "all-to-all": 0,
+                              "collective-permute": 0, "total": 9.0}}
+        out = _extrapolate(a1, a2, 1, 2, 10)
+        # per-group flops = 60, outside = 40 → 40 + 600
+        assert out["cost"]["flops"] == pytest.approx(640.0)
+        assert out["cost"]["bytes_accessed"] == pytest.approx(64.0)
+        # collectives: per-group 3, outside 3 → 3 + 30
+        assert out["collectives"]["total"] == pytest.approx(33.0)
+        assert out["collectives"]["all-gather"] == pytest.approx(22.0)
+
+
+class TestRooflineModelFlops:
+    def test_train_flops_scale(self):
+        import benchmarks.roofline as R
+
+        f = R.model_flops_per_chip("llama3.2-1b", "train_4k")
+        # 6·N·D / 256 chips within 2× (attention + head conventions)
+        expect = 6 * 1.24e9 * 256 * 4096 / 256
+        assert 0.5 < f / expect < 2.0
+
+    def test_decode_much_smaller_than_train(self):
+        import benchmarks.roofline as R
+
+        tr = R.model_flops_per_chip("yi-34b", "train_4k")
+        de = R.model_flops_per_chip("yi-34b", "decode_32k")
+        assert de < tr / 1000
+
+
+def test_padded_vocab_property():
+    assert configs.get_config("granite-moe-1b-a400m").padded_vocab % 128 == 0
+    assert configs.get_config("gemma2-27b").padded_vocab == 256_000
