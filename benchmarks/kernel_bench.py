@@ -1,52 +1,275 @@
-"""Pallas kernel micro-benchmarks (interpret mode = functional timing only).
+"""Kernel sweep driver: default hard-coded configs vs autotuned configs.
 
-Wall time on CPU interpret mode is NOT TPU performance — the meaningful
-derived numbers are the modeled compressed-traffic bytes (what the kernel's
-CostEstimate advertises to XLA) and the compression ratios, which feed the
-roofline memory term.  Correctness vs the jnp oracle is asserted on the fly.
+For every (format, shape, density) in the sweep this measures
+
+* **default** — the seed's hard-coded kernel configuration (fused Pallas
+  kernel, ``bm=128, slot_chunk=8``, fully-resident K-slab), i.e. what ran
+  before the registry existed;
+* **tuned**   — whatever :mod:`repro.kernels.autotune` picks for the current
+  dispatch backend (cost-model-prior-seeded search, measured winner,
+  persisted to the tuning cache);
+
+checks both against the jnp oracle, and emits a machine-readable
+``BENCH_kernels.json`` for the perf trajectory.  Wall time in interpret mode
+is NOT TPU performance — the stable cross-machine signals are the
+tuned-vs-default *speedup ratio*, the compression ratios and the modeled
+compressed-traffic bytes; those are what ``--check-against`` gates on
+(>20% regression fails, as does any kernel-vs-ref mismatch).
+
+Usage:
+  PYTHONPATH=src python benchmarks/kernel_bench.py --smoke \\
+      --output BENCH_kernels.json --check-against benchmarks/BENCH_baseline.json
 """
 from __future__ import annotations
 
-import time
+import argparse
+import json
+import pathlib
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import formats, pruning
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ref, registry
+
+# (m, k, n, density, fmt)
+SWEEP_FULL = [
+    (256, 512, 512, 0.1, "tiled_csc"),
+    (256, 512, 512, 0.3, "tiled_csc"),
+    (256, 512, 512, 0.5, "tiled_csc"),
+    (64, 512, 1024, 0.2, "tiled_csc"),
+    (8, 512, 512, 0.3, "tiled_csc"),          # decode-like skinny M
+    (256, 512, 512, 0.1, "block_csr"),
+    (256, 512, 512, 0.3, "block_csr"),
+    (64, 512, 1024, 0.2, "block_csr"),
+]
+SWEEP_SMOKE = [
+    (64, 256, 256, 0.1, "tiled_csc"),
+    (64, 256, 256, 0.5, "tiled_csc"),
+    (64, 512, 512, 0.3, "block_csr"),
+]
+
+ATOL = 5e-4
 
 
-def _time(fn, *args, iters=3):
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+def _build(m, k, n, density, fmt, seed=0):
+    key = jax.random.PRNGKey(seed)
+    w = pruning.random_sparse(key, (k, n), density)
+    if fmt == "block_csr":
+        w = pruning.block_prune(w, density)
+        p = formats.pack_block_csr(w)
+    else:
+        p = formats.pack_tiled_csc(w)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (m, k), jnp.float32)
+    return x, w, p
+
+
+def bench_case(m, k, n, density, fmt, *, iters=3, top_k=4,
+               cache=None) -> dict:
+    x, w, p = _build(m, k, n, density, fmt)
+    backend = registry.current_backend()
+
+    # default: the seed's hard-coded Pallas configuration
+    default_impl = registry.get_impl(
+        "pallas_fused" if fmt == "tiled_csc" else "pallas_block")
+    dkey = registry.problem_key(p, m=m, backend=backend)
+    default_params = default_impl.canonical_params(
+        dkey, default_impl.default_params(dkey), m)
+
+    # tuned: whatever the autotuner picks for the dispatch backend.  The
+    # tuner always measures every impl's default config (the status quo),
+    # so the default's time comes from the same measurement session as the
+    # winner's — the speedup ratio is same-host, same-session.
+    trials: list = []
+    entry = autotune.tune(x, p, backend=backend, cache=cache,
+                          top_k=top_k, iters=iters, force=True,
+                          trials_out=trials)
+    tuned_impl = registry.get_impl(entry["impl"])
+    tuned_us = entry["us"]
+    if default_impl.supports(dkey):
+        default_backend = backend
+        default_us = next(
+            (us for name, params, us in trials
+             if name == default_impl.name and params == default_params),
+            None)
+        if default_us is None:
+            raise RuntimeError(
+                f"default config {default_impl.name} {default_params} missing "
+                f"from tuner trials {[(n, p_) for n, p_, _ in trials]}")
+    else:
+        # backend where the pallas default can't run natively (e.g. gpu):
+        # measure the hard-coded config via the interpreter so the
+        # comparison still exists, and keep the record honest about it
+        default_backend = "interpret"
+        default_us = autotune._measure(
+            lambda: default_impl.run(x, p, backend=default_backend,
+                                     **default_params), iters=iters)
+
+    y_tuned = tuned_impl.run(x, p, backend=backend, **entry["params"])
+    y_default = default_impl.run(x, p, backend=default_backend,
+                                 **default_params)
+    fn_ref = ref.sod_matmul_ref if fmt == "tiled_csc" else ref.block_matmul_ref
+    y_ref = np.asarray(fn_ref(x, p))
+    max_err = max(
+        float(np.max(np.abs(np.asarray(y_tuned) - y_ref))),
+        float(np.max(np.abs(np.asarray(y_default) - y_ref))),
+    )
+    return {
+        "name": f"{fmt}_m{m}_k{k}_n{n}_d{density:g}",
+        "fmt": fmt, "m": m, "k": k, "n": n, "density": density,
+        "default": {"impl": default_impl.name, "params": default_params,
+                    "us": round(default_us, 1)},
+        "tuned": {"impl": entry["impl"], "params": entry["params"],
+                  "us": round(tuned_us, 1)},
+        "speedup": round(default_us / max(tuned_us, 1e-9), 3),
+        "compression_ratio": round(
+            p.nbytes_compressed() / p.nbytes_dense(), 5),
+        "max_abs_err": max_err,
+        "ref_ok": bool(max_err <= ATOL),
+    }
+
+
+def sweep(smoke=False, iters=None, cache=None) -> dict:
+    cases = SWEEP_SMOKE if smoke else SWEEP_FULL
+    iters = iters or (3 if smoke else 5)
+    records = [
+        bench_case(*c, iters=iters, top_k=2 if smoke else 4, cache=cache)
+        for c in cases
+    ]
+    return {
+        "schema": 1,
+        "backend": registry.current_backend(),
+        "kernel_hash": registry.kernel_hash(),
+        "smoke": smoke,
+        "records": records,
+    }
+
+
+def check_against(result: dict, baseline_path: str, tol=0.2) -> list[str]:
+    """Regression gate vs a checked-in baseline.
+
+    Machine-independent signals only — CI runners and dev boxes differ, so
+    absolute wall times (and hence cross-run speedup numbers) are not
+    comparable.  Gated, each with ``tol`` (default >20% fails):
+
+    * kernel-vs-ref correctness (hard fail, no tolerance);
+    * compression ratio vs the baseline (deterministic packing property);
+    * tuned_us ≤ (1+tol)·default_us *within this run*.  Note this last is
+      an invariant tripwire, not a perf gate: tune() measures the default
+      config among its candidates and picks the minimum, so the check only
+      fires if that guarantee is refactored away (default dropped from the
+      trials, winner selection broken).  Absolute perf regressions are
+      tracked via the uploaded BENCH_kernels.json artifact trajectory, not
+      gated — wall-clock is not comparable across CI hosts.
+    """
+    base = json.loads(pathlib.Path(baseline_path).read_text())
+    problems = []
+    if base.get("smoke") != result.get("smoke"):
+        # SWEEP_FULL and SWEEP_SMOKE share no case names: comparing across
+        # modes would flag every baseline record as uncovered.  Keep the
+        # mode-independent checks (ref_ok, tuned≤default tripwire) only.
+        print(f"# note: baseline is smoke={base.get('smoke')}, this sweep "
+              f"is smoke={result.get('smoke')}; skipping baseline-keyed "
+              f"comparisons", file=sys.stderr)
+        base_recs = {}
+    else:
+        base_recs = {r["name"]: r for r in base.get("records", [])}
+        covered = {rec["name"] for rec in result["records"]}
+        for name in sorted(set(base_recs) - covered):
+            problems.append(
+                f"{name}: baseline record not covered by this sweep "
+                f"(case renamed/removed? regenerate BENCH_baseline.json)")
+    for rec in result["records"]:
+        if not rec["ref_ok"]:
+            problems.append(f"{rec['name']}: kernel-vs-ref mismatch "
+                            f"(max_abs_err={rec['max_abs_err']:.2e})")
+        b = base_recs.get(rec["name"])
+        if b is not None:
+            cr, bcr = rec["compression_ratio"], b["compression_ratio"]
+            if abs(cr - bcr) > tol * bcr:
+                problems.append(
+                    f"{rec['name']}: compression_ratio {cr} vs baseline {bcr}")
+        if rec["tuned"]["us"] > (1 + tol) * rec["default"]["us"]:
+            problems.append(
+                f"{rec['name']}: tuned config {rec['tuned']['us']}us lost to "
+                f"default {rec['default']['us']}us by >{tol:.0%}")
+    return problems
 
 
 def run():
-    rows = []
-    key = jax.random.PRNGKey(0)
-    for density in (0.1, 0.3, 0.5):
-        w = pruning.random_sparse(key, (512, 512), density)
-        x = jax.random.normal(jax.random.fold_in(key, 1), (256, 512))
-        p = formats.pack_tiled_csc(w)
-        y = ops.sod_matmul(x, p, impl="pallas")
-        yr = ref.sod_matmul_ref(x, p)
-        assert np.allclose(np.asarray(y), np.asarray(yr), atol=5e-4), density
-        us = _time(lambda: ops.sod_matmul(x, p, impl="pallas"))
-        rows.append((f"kernel_sod_matmul_d{density:.1f}", us,
-                     p.compression_ratio()))
-        wb = pruning.block_prune(w, density)
-        pb = formats.pack_block_csr(wb)
-        yb = ops.sod_matmul(x, pb, impl="pallas")
-        assert np.allclose(np.asarray(yb), np.asarray(ref.block_matmul_ref(x, pb)),
-                           atol=5e-4)
-        us_b = _time(lambda: ops.sod_matmul(x, pb, impl="pallas"))
-        skip_frac = 1 - float(jnp.count_nonzero(pb.tile_nnz)) / pb.tile_nnz.size
-        rows.append((f"kernel_block_matmul_d{density:.1f}", us_b, skip_frac))
-        us_d = _time(lambda: ops.decompress(p))
-        rows.append((f"kernel_decompress_d{density:.1f}", us_d,
-                     p.nbytes_compressed() / p.nbytes_dense()))
-    return rows, []
+    """Legacy CSV interface for benchmarks/run.py.
+
+    Returns (rows, mismatches): rows as (name, us, derived) for the tuned
+    path, mismatches as human-readable kernel-vs-ref failures (the caller
+    exits non-zero on any).  Uses a throwaway tuning cache: reproducing
+    paper tables must not mutate the user's live dispatch cache.
+    """
+    import tempfile
+
+    scratch = autotune.TuningCache(
+        pathlib.Path(tempfile.mkdtemp(prefix="repro_bench_"))
+        / "tuning_cache.json")
+    result = sweep(smoke=True, cache=scratch)
+    rows, mismatches = [], []
+    for rec in result["records"]:
+        rows.append((f"kernel_{rec['name']}_default",
+                     rec["default"]["us"], rec["compression_ratio"]))
+        rows.append((f"kernel_{rec['name']}_tuned[{rec['tuned']['impl']}]",
+                     rec["tuned"]["us"], rec["speedup"]))
+        if not rec["ref_ok"]:
+            mismatches.append(
+                f"{rec['name']}: max_abs_err={rec['max_abs_err']:.2e}")
+    return rows, mismatches
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 3 iters — the CI benchmark-smoke job")
+    ap.add_argument("--output", default="BENCH_kernels.json")
+    ap.add_argument("--check-against", default=None,
+                    help="baseline BENCH_kernels.json; fail on >20%% "
+                         "regression or any kernel-vs-ref mismatch")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache path; default is a throwaway temp "
+                         "cache — benchmarking must not overwrite the "
+                         "user's live dispatch cache")
+    args = ap.parse_args(argv)
+
+    if args.tuning_cache:
+        cache = autotune.install_cache(args.tuning_cache)
+    else:
+        import tempfile
+
+        cache = autotune.TuningCache(
+            pathlib.Path(tempfile.mkdtemp(prefix="repro_bench_"))
+            / "tuning_cache.json")
+    result = sweep(smoke=args.smoke, iters=args.iters, cache=cache)
+
+    pathlib.Path(args.output).write_text(json.dumps(result, indent=1))
+    print(f"# wrote {args.output} ({len(result['records'])} records, "
+          f"backend={result['backend']})")
+    hdr = f"{'case':34s} {'default_us':>11s} {'tuned_us':>9s} {'speedup':>8s} {'tuned impl':>14s} ok"
+    print(hdr)
+    for rec in result["records"]:
+        print(f"{rec['name']:34s} {rec['default']['us']:11.1f} "
+              f"{rec['tuned']['us']:9.1f} {rec['speedup']:8.2f} "
+              f"{rec['tuned']['impl']:>14s} "
+              f"{'PASS' if rec['ref_ok'] else 'FAIL'}")
+
+    problems = []
+    if args.check_against:
+        problems = check_against(result, args.check_against)
+    else:
+        problems = [f"{r['name']}: kernel-vs-ref mismatch"
+                    for r in result["records"] if not r["ref_ok"]]
+    for p in problems:
+        print(f"REGRESSION: {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

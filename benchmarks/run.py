@@ -1,11 +1,22 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV followed by a model-vs-paper validation table (the reproduction gate).
+# Exits non-zero on any failed paper claim OR any kernel-vs-ref mismatch,
+# so CI can use it directly; ``--output-json`` writes the same data
+# machine-readable.
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--output-json", default=None,
+                    help="also write rows/checks/kernel results as JSON")
+    args = ap.parse_args(argv)
+
     from benchmarks import kernel_bench, paper_figs, paper_real_models
 
     rows: list[tuple] = []
@@ -14,7 +25,7 @@ def main() -> None:
         r, c = fn()
         rows.extend(r)
         checks.extend(c)
-    kr, _ = kernel_bench.run()
+    kr, kernel_mismatches = kernel_bench.run()
 
     print("name,us_per_call,derived")
     for name, val in rows:
@@ -34,7 +45,25 @@ def main() -> None:
         n_fail += 0 if ok else 1
         print(f"{claim:66s} {sval:>18s} {swin:>16s}  {mark}")
     print(f"\n# {len(checks) - n_fail}/{len(checks)} paper claims reproduced")
-    if n_fail:
+    for m in kernel_mismatches:
+        print(f"# KERNEL MISMATCH vs ref: {m}", file=sys.stderr)
+
+    if args.output_json:
+        payload = {
+            "rows": [{"name": n, "derived": v} for n, v in rows]
+            + [{"name": n, "us": us, "derived": d} for n, us, d in kr],
+            "checks": [
+                {"claim": c, "value": v, "window": list(w), "ok": ok}
+                for c, v, w, ok in checks
+            ],
+            "kernel_mismatches": kernel_mismatches,
+            "n_claims_failed": n_fail,
+        }
+        pathlib.Path(args.output_json).write_text(
+            json.dumps(payload, indent=1, default=str))
+        print(f"# wrote {args.output_json}")
+
+    if n_fail or kernel_mismatches:
         sys.exit(1)
 
 

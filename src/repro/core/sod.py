@@ -80,15 +80,22 @@ def pack_param(w: jax.Array, cfg: SoDConfig, prune: bool = True):
 
 
 def apply(x: jax.Array, w, cfg: SoDConfig | None = None, **kw) -> jax.Array:
-    """``x @ W`` through the Sparse-on-Dense datapath."""
+    """``x @ W`` through the Sparse-on-Dense datapath.
+
+    Packed operands dispatch through the kernel registry
+    (:mod:`repro.kernels.registry`): ``impl="auto"`` resolves to the
+    autotuner's persisted winner for this (format, shape, density, backend)
+    or the cost-model-prior default on a cold cache — the differentiable jnp
+    oracle on CPU, the fused Pallas kernel on TPU/interpret.  ``impl`` may
+    force ``jnp`` or ``pallas`` explicitly.
+    """
     from repro.kernels import ops  # local import: kernels depend on core
 
     impl = kw.pop("impl", cfg.impl if cfg else "auto")
     if isinstance(w, (TiledCSC, BlockCSR)):
-        if impl in ("jnp", "auto"):
-            # jnp path: differentiable scatter decompress + dense dot.  XLA
-            # fuses the scatter into the consumer on TPU; this is also the
-            # multi-device pjit path used by the dry-run.
+        if w.lead:
+            # Stacked layouts (lax.scan layer stacks / experts) keep the
+            # fused-by-XLA scatter+dot path; the kernels are per-matrix.
             return jnp.dot(
                 x, w.to_dense(), preferred_element_type=jnp.float32
             ).astype(kw.pop("out_dtype", x.dtype))

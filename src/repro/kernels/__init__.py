@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Sparse-on-Dense kernels: the fused decompress+matmul Pallas kernel
+# (sod_matmul.py), the VREG-block zero-tile-skip kernel (block_matmul.py),
+# jnp oracles (ref.py), the kernel registry + autotuner (registry.py,
+# autotune.py), and the public dispatch wrappers (ops.py).

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
 from repro.core.formats import TiledCSC
 from repro.kernels.sod_matmul import _decompress_tile
 
@@ -62,7 +63,7 @@ def decompress_pallas(
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda k, n: (k, n)),
         out_shape=jax.ShapeDtypeStruct((kt * bk, nt * bn), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         cost_estimate=cost,

@@ -1,10 +1,22 @@
 """Public jit'd wrappers around the Sparse-on-Dense kernels.
 
-These handle arbitrary leading batch dims, M/K padding, implementation
-dispatch (``pallas`` on TPU / interpret, ``jnp`` oracle elsewhere), and the
-dense bypass (paper Fig. 2c): a plain dense array flows straight to
-``jnp.dot`` with no decompression, exactly as dense-format data bypasses the
-decompression unit in the paper.
+These handle arbitrary leading batch dims and the dense bypass (paper
+Fig. 2c): a plain dense array flows straight to ``jnp.dot`` with no
+decompression, exactly as dense-format data bypasses the decompression unit
+in the paper.  Implementation choice and tile parameters come from the
+kernel registry (:mod:`repro.kernels.registry`) consulted with the
+autotuner's persisted winners (:mod:`repro.kernels.autotune`):
+
+* ``impl="auto"``   — registry dispatch: tuned entry if the tuning cache has
+  one for this (format, shape, density, backend), else the cost-model-prior
+  default.  On CPU this is the differentiable jnp oracle; on TPU (or under
+  ``backend="interpret"``) the fused Pallas kernel.
+* ``impl="pallas"`` — force the Pallas kernel (interpret mode off-TPU).
+* ``impl="jnp"``    — force the jnp scatter oracle.
+
+Dispatch is pure Python over static shapes, so it is trace-safe; nothing is
+ever measured inside ``jit`` (run :func:`repro.kernels.autotune.tune` or the
+launch scripts' ``--autotune`` to populate the cache).
 """
 from __future__ import annotations
 
@@ -12,12 +24,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BlockCSR, TiledCSC
-from repro.kernels import ref
-from repro.kernels.block_matmul import block_matmul_pallas
+from repro.kernels import registry
 from repro.kernels.decompress import decompress_pallas
-from repro.kernels.sod_matmul import sod_matmul_pallas
 
 __all__ = ["sod_matmul", "decompress"]
+
+_FORCED = {
+    "pallas": {"tiled_csc": "pallas_fused", "block_csr": "pallas_block"},
+    "jnp": {"tiled_csc": "jnp_oracle", "block_csr": "jnp_oracle"},
+}
 
 
 def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
@@ -25,28 +40,23 @@ def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
     return x.reshape(-1, x.shape[-1]), lead
 
 
-def _pick_bm(m: int, default: int = 128) -> int:
-    """Largest sublane-aligned block size dividing the padded M."""
-    if m >= default:
-        return default
-    for bm in (64, 32, 16, 8):
-        if m % bm == 0 or bm <= m:
-            return bm
-    return 8
-
-
 def sod_matmul(
     x: jax.Array,
     w,
     *,
     impl: str = "auto",
-    bm: int = 128,
-    interpret: bool = True,
+    bm: int | None = None,
+    interpret: bool | None = None,
     out_dtype=None,
+    backend: str | None = None,
+    params: dict | None = None,
 ) -> jax.Array:
     """``x @ W`` where ``W`` is dense, :class:`TiledCSC` or :class:`BlockCSR`.
 
     ``x``: (..., K).  Returns (..., N) in ``out_dtype`` (default: x.dtype).
+    ``params`` overrides individual tunables (e.g. ``{"bm": 64}``) on top of
+    the tuned/default choice; ``backend`` overrides dispatch-backend
+    detection (``cpu``/``tpu``/``interpret``).
     """
     out_dtype = out_dtype or x.dtype
     if isinstance(w, jax.Array) or not isinstance(w, (TiledCSC, BlockCSR)):
@@ -56,30 +66,36 @@ def sod_matmul(
     k_logical, n_logical = w.shape
     if x.shape[-1] != k_logical:
         raise ValueError(f"x inner dim {x.shape[-1]} != W K {k_logical}")
-    if impl == "jnp" or (impl == "auto" and jax.default_backend() not in ("tpu",)
-                         and not interpret):
-        fn = ref.sod_matmul_ref if isinstance(w, TiledCSC) else ref.block_matmul_ref
-        return fn(x, w, out_dtype=out_dtype)
 
     x2, lead = _as_2d(x)
-    m = x2.shape[0]
-    kt, _ = w.grid
-    bk, _ = w.tile
-    kp = kt * bk
-    bm_eff = _pick_bm(m, bm)
-    m_pad = (-m) % bm_eff
-    k_pad = kp - k_logical
-    if m_pad or k_pad:
-        x2 = jnp.pad(x2, ((0, m_pad), (0, k_pad)))
-    if isinstance(w, TiledCSC):
-        y = sod_matmul_pallas(
-            x2, w, bm=bm_eff, interpret=interpret, out_dtype=out_dtype
-        )
+    fmt = registry.format_of(w)
+    if backend is None:
+        backend = registry.current_backend()
+        if impl == "pallas" and backend not in ("tpu", "interpret"):
+            backend = "interpret"
+        if interpret:
+            backend = "interpret"
+    key = registry.problem_key(w, m=x2.shape[0], backend=backend)
+
+    if impl in _FORCED:
+        chosen = registry.get_impl(_FORCED[impl][fmt])
+        run_params = chosen.default_params(key)
+    elif impl == "auto":
+        from repro.kernels import autotune  # deferred: autotune imports registry
+
+        chosen, run_params = registry.choose(key, tuned=autotune.lookup(key))
     else:
-        y = block_matmul_pallas(
-            x2, w, bm=bm_eff, interpret=interpret, out_dtype=out_dtype
+        raise ValueError(f"unknown impl {impl!r}; want auto | jnp | pallas")
+    if params:
+        run_params = dict(run_params)
+        run_params.update(
+            (k, v) for k, v in params.items()
+            if k in chosen.param_space(key)
         )
-    y = y[:m, :n_logical]
+    if bm is not None and "bm" in chosen.param_space(key):
+        run_params = dict(run_params, bm=bm)
+
+    y = chosen.run(x2, w, out_dtype=out_dtype, backend=backend, **run_params)
     return y.reshape(*lead, n_logical)
 
 

@@ -1,0 +1,14 @@
+"""Version shims for the Pallas TPU API surface the kernels use.
+
+``pltpu.CompilerParams`` was named ``TPUCompilerParams`` in older JAX
+releases (≤0.4.x); resolve whichever exists once so every kernel stays
+importable across the versions the CI matrix and the baked container ship.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

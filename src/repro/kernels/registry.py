@@ -1,0 +1,428 @@
+"""Kernel registry: every matmul implementation, with its capabilities.
+
+The Sparse-on-Dense datapath has several realizations — the fused
+decompress+matmul Pallas kernel, the VREG-block kernel with zero-macro-tile
+skip, the differentiable jnp scatter oracle, the dense bypass — and which one
+is fastest depends on the backend, the operand format, the problem shape and
+the density.  Instead of a static if/else, each implementation registers
+itself here with
+
+  * a **capability predicate** (``supports``): which backends/formats/shapes
+    it can run at all;
+  * a **tunable-parameter space** (``param_space``): the (bm, slot_chunk,
+    k_slab, …) grid the autotuner may sweep;
+  * a **runner** that takes an un-padded 2-D ``x`` and the packed operand and
+    owns its own padding/slicing.
+
+:mod:`repro.kernels.autotune` consumes the registry to benchmark candidates
+and persist the winners; :func:`repro.kernels.ops.sod_matmul` consults it at
+trace time (pure Python on static shapes — never measures inside a trace).
+
+Backends are the strings ``cpu`` / ``gpu`` / ``tpu`` / ``interpret``, where
+``interpret`` means "TPU semantics emulated via the Pallas interpreter" — the
+way the kernels run in CI and on developer machines without a TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import pathlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BlockCSR, TiledCSC
+
+__all__ = [
+    "KernelImpl",
+    "ProblemKey",
+    "register",
+    "get_impl",
+    "all_impls",
+    "candidates",
+    "choose",
+    "problem_key",
+    "format_of",
+    "static_density",
+    "current_backend",
+    "set_backend_override",
+    "kernel_hash",
+]
+
+BACKENDS = ("cpu", "gpu", "tpu", "interpret")
+
+# VMEM budget for the resident decompressed K-slab (bytes); beyond this the
+# fused kernel must fall back to per-use decompression (k_slab=1).
+VMEM_SLAB_BUDGET = 12 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemKey:
+    """Static description of one matmul problem — everything the dispatcher
+    may depend on at trace time (shapes/dtypes are static under jit; weight
+    *values* are not, so density is a pack-time proxy, see
+    :func:`static_density`)."""
+
+    fmt: str                 # tiled_csc | block_csr | dense
+    m: int
+    k: int
+    n: int
+    density: float           # static proxy (cap/bk fill ratio), NOT data nnz
+    dtype: str
+    backend: str
+
+    # format-specific static layout facts the param spaces need
+    tile: tuple[int, int] = (128, 128)
+    cap: int = 0             # TiledCSC slot capacity / BlockCSR bcap*br
+    kt: int = 1              # K-tile grid size
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    """One registered implementation."""
+
+    name: str
+    formats: tuple[str, ...]
+    backends: tuple[str, ...]
+    differentiable: bool
+    # True when XLA/GSPMD can partition this impl inside pjit (plain jnp
+    # ops); pallas_call has no partitioning rule, so pallas impls are False
+    # and a cold cache on a real TPU mesh must not route sharded model
+    # matmuls through them (see choose()).
+    spmd_partitionable: bool
+    priority: int            # tie-break when the prior can't separate
+    param_space: Callable[[ProblemKey], dict[str, tuple]]
+    run: Callable[..., jax.Array]   # run(x2, w, out_dtype=?, backend=?, **params)
+    # maps requested params to what the runner will actually execute for a
+    # concrete M (bm clamping, slot_chunk sanitizing, k_slab residency) —
+    # the autotuner dedups trials on this so it never measures the same
+    # effective kernel twice; None = params are already canonical
+    canonicalize: Callable[[ProblemKey, dict, int], dict] | None = None
+
+    def supports(self, key: ProblemKey) -> bool:
+        return key.fmt in self.formats and key.backend in self.backends
+
+    def canonical_params(self, key: ProblemKey, params: dict, m: int) -> dict:
+        if self.canonicalize is None:
+            return dict(params)
+        return self.canonicalize(key, params, m)
+
+    def default_params(self, key: ProblemKey) -> dict:
+        """First element of every axis of the param space = the hard-coded
+        defaults the seed shipped with (kept first on purpose, so the tuner
+        always measures the status quo as one of its candidates)."""
+        return {k: v[0] for k, v in self.param_space(key).items()}
+
+    def param_grid(self, key: ProblemKey) -> list[dict]:
+        space = self.param_space(key)
+        grid: list[dict] = [{}]
+        for name, values in space.items():
+            grid = [dict(g, **{name: v}) for g in grid for v in values]
+        return grid
+
+
+_REGISTRY: dict[str, KernelImpl] = {}
+_BACKEND_OVERRIDE: str | None = None
+
+
+def register(impl: KernelImpl) -> KernelImpl:
+    _REGISTRY[impl.name] = impl
+    return impl
+
+
+def get_impl(name: str) -> KernelImpl:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel impl {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def all_impls() -> dict[str, KernelImpl]:
+    return dict(_REGISTRY)
+
+
+def candidates(key: ProblemKey) -> list[KernelImpl]:
+    """All implementations able to run this problem, best-priority first."""
+    out = [i for i in _REGISTRY.values() if i.supports(key)]
+    return sorted(out, key=lambda i: -i.priority)
+
+
+def current_backend() -> str:
+    """Dispatch backend: override > env REPRO_SOD_BACKEND > jax backend."""
+    if _BACKEND_OVERRIDE is not None:
+        return _BACKEND_OVERRIDE
+    env = os.environ.get("REPRO_SOD_BACKEND")
+    if env:
+        return env
+    return jax.default_backend()
+
+
+def set_backend_override(backend: str | None) -> None:
+    """Force the dispatch backend (tests / launch flags).  None resets."""
+    global _BACKEND_OVERRIDE
+    if backend is not None and backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+    _BACKEND_OVERRIDE = backend
+
+
+def format_of(w) -> str:
+    if isinstance(w, TiledCSC):
+        return "tiled_csc"
+    if isinstance(w, BlockCSR):
+        return "block_csr"
+    return "dense"
+
+
+def static_density(w) -> float:
+    """Trace-safe density proxy from the packed container's static layout.
+
+    For TiledCSC the per-column slot capacity bounds the fill; for BlockCSR
+    the block capacity does.  Dense is 1.0.  Rounded to 1/32 so nearby packs
+    share a tuning-cache entry.
+    """
+    if isinstance(w, TiledCSC):
+        d = min(w.cap / w.tile[0], 1.0)
+    elif isinstance(w, BlockCSR):
+        d = min(w.bcap * w.br / w.tile[0], 1.0)
+    else:
+        return 1.0
+    return round(d * 32) / 32
+
+
+def _m_bucket(m: int) -> int:
+    """Bucket M to the next power of two (≥8) so decode (m≈1) and prefill
+    (m≈batch·seq) tune separately but nearby batch sizes share entries."""
+    b = 8
+    while b < m:
+        b *= 2
+    return b
+
+
+def problem_key(w, m: int, backend: str | None = None) -> ProblemKey:
+    fmt = format_of(w)
+    backend = backend or current_backend()
+    if fmt == "dense":
+        k, n = int(w.shape[-2]), int(w.shape[-1])
+        return ProblemKey(fmt, _m_bucket(m), k, n, 1.0,
+                          str(jnp.result_type(w)), backend)
+    k, n = w.shape
+    if fmt == "tiled_csc":
+        cap, kt = w.cap, w.grid[0]
+    else:
+        cap, kt = w.bcap * w.br, w.grid[0]
+    return ProblemKey(
+        fmt, _m_bucket(m), int(k), int(n), static_density(w),
+        str(jnp.dtype(w.dtype)), backend,
+        tile=tuple(w.tile), cap=int(cap), kt=int(kt),
+    )
+
+
+def choose(key: ProblemKey, tuned: dict | None = None
+           ) -> tuple[KernelImpl, dict]:
+    """Resolve (impl, params) for a problem.
+
+    ``tuned`` is an autotune cache entry ``{"impl": ..., "params": ...}``;
+    when absent (cold cache inside a trace — we never measure there) the
+    highest-priority capable impl runs with its defaults, which the
+    cost-model prior in :mod:`autotune` later refines.
+    """
+    if tuned is not None:
+        impl = _REGISTRY.get(tuned.get("impl", ""))
+        if impl is not None and impl.supports(key):
+            params = dict(impl.default_params(key))
+            params.update(tuned.get("params") or {})
+            return impl, params
+    # cold cache: cheapest candidate under the analytical prior (deferred
+    # import — autotune imports this module at top level).  On a real TPU
+    # the model step typically runs under pjit with sharded weights, and
+    # pallas_call cannot be GSPMD-partitioned — so an *untuned* TPU
+    # dispatch is restricted to partitionable impls (the XLA scatter+dot
+    # oracle, which is what the pre-registry code always ran).  Explicitly
+    # tuned entries may still promote the pallas kernels (tuning runs
+    # per-host, outside pjit, so the operator opted in knowingly).
+    from repro.kernels import autotune
+
+    ranked = autotune.rank_candidates(key)
+    if key.backend == "tpu":
+        safe = [t for t in ranked if t[1].spmd_partitionable]
+        ranked = safe or ranked
+    if not ranked:
+        raise ValueError(f"no kernel impl supports {key}")
+    _, impl, params = ranked[0]
+    return impl, params
+
+
+def kernel_hash() -> str:
+    """Short content hash over the kernel sources — versions the tuning
+    cache: edit any kernel and every persisted measurement is invalidated."""
+    h = hashlib.sha256()
+    pkg = pathlib.Path(__file__).parent
+    for p in sorted(pkg.glob("*.py")):
+        h.update(p.name.encode())
+        h.update(p.read_bytes())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# built-in implementations
+# ---------------------------------------------------------------------------
+def _sanitize_slot_chunk(cap: int, slot_chunk: int) -> int:
+    slot_chunk = max(min(slot_chunk, cap), 1)
+    while cap % slot_chunk:
+        slot_chunk -= 1
+    return slot_chunk
+
+
+def _dtype_name(out_dtype) -> str | None:
+    return jnp.dtype(out_dtype).name if out_dtype is not None else None
+
+
+def _run_pallas_fused(x2, w, *, out_dtype=None, backend="interpret",
+                      bm=128, slot_chunk=8, k_slab=0):
+    from repro.kernels import vjp
+
+    fn = vjp.fused_matmul(
+        vjp.pick_bm(x2.shape[0], bm),
+        _sanitize_slot_chunk(w.cap, slot_chunk),
+        k_slab,
+        backend != "tpu",
+        _dtype_name(out_dtype),
+    )
+    return fn(x2, w)
+
+
+def _run_pallas_block(x2, w, *, out_dtype=None, backend="interpret", bm=128):
+    from repro.kernels import vjp
+
+    fn = vjp.block_matmul(
+        vjp.pick_bm(x2.shape[0], bm), backend != "tpu", _dtype_name(out_dtype)
+    )
+    return fn(x2, w)
+
+
+_JITTED: dict[str, Callable] = {}
+
+
+def _jitted_ref(name: str) -> Callable:
+    # jit once per oracle so registry-run calls (and the autotuner's
+    # measurements) see compiled-dispatch cost, same as the pallas wrappers
+    if not _JITTED:
+        from repro.kernels import ref
+
+        for n, fn in (("tiled", ref.sod_matmul_ref),
+                      ("block", ref.block_matmul_ref),
+                      ("dense", ref.dense_matmul_ref)):
+            _JITTED[n] = jax.jit(fn, static_argnames=("out_dtype",))
+    return _JITTED[name]
+
+
+def _run_jnp_oracle(x2, w, *, out_dtype=None, backend="cpu"):
+    fn = _jitted_ref("tiled" if isinstance(w, TiledCSC) else "block")
+    return fn(x2, w, out_dtype=out_dtype)
+
+
+def _run_dense(x2, w, *, out_dtype=None, backend="cpu"):
+    return _jitted_ref("dense")(x2, w, out_dtype=out_dtype)
+
+
+def _bm_axis(key: ProblemKey) -> tuple[int, ...]:
+    opts = [128] + [b for b in (256, 64, 32, 16, 8) if b <= max(key.m, 8)]
+    return tuple(dict.fromkeys(opts))  # keep order, drop dups
+
+
+def _fused_space(key: ProblemKey) -> dict[str, tuple]:
+    # k_slab: 0 = fully resident K-slab (the seed's hard-coded behaviour,
+    # kept first = default); 1 = re-decompress per use (minimal VMEM).  A
+    # resident slab larger than the VMEM budget is not offered at all.
+    # The slab scratch is allocated in the *activation* dtype, which can be
+    # wider than the packed weights — budget for f32 worst case.
+    bk, bn = key.tile
+    itemsize = max(jnp.dtype(key.dtype).itemsize, 4)
+    slab_bytes = key.kt * bk * bn * itemsize
+    k_slab = (0, 1) if slab_bytes <= VMEM_SLAB_BUDGET else (1,)
+    chunks = tuple(c for c in (8, 4, 16) if c <= key.cap)
+    return {
+        "bm": _bm_axis(key),
+        "slot_chunk": chunks or (1,),
+        "k_slab": k_slab,
+    }
+
+
+def _block_space(key: ProblemKey) -> dict[str, tuple]:
+    return {"bm": _bm_axis(key)}
+
+
+def _fused_canonical(key: ProblemKey, params: dict, m: int) -> dict:
+    from repro.kernels import vjp
+
+    k_slab = params.get("k_slab", 0)
+    if k_slab <= 0 or k_slab >= key.kt:
+        k_slab = 0               # fully resident, however it was spelled
+    return {
+        "bm": vjp.pick_bm(m, params.get("bm", 128)),
+        "slot_chunk": _sanitize_slot_chunk(key.cap,
+                                           params.get("slot_chunk", 8)),
+        "k_slab": k_slab,
+    }
+
+
+def _block_canonical(key: ProblemKey, params: dict, m: int) -> dict:
+    from repro.kernels import vjp
+
+    return {"bm": vjp.pick_bm(m, params.get("bm", 128))}
+
+
+# The pallas impls list "cpu" too: they run there through the interpreter,
+# which the autotuner's prior penalizes heavily — so a cold cache on CPU
+# still dispatches to the jnp oracle, but *measurement* may promote the
+# interpreted kernel where it genuinely wins (e.g. block-skip at high
+# zero-tile fractions).
+register(KernelImpl(
+    name="pallas_fused",
+    formats=("tiled_csc",),
+    backends=("tpu", "interpret", "cpu"),
+    differentiable=True,   # custom VJP in kernels/vjp.py
+    spmd_partitionable=False,
+    priority=30,
+    param_space=_fused_space,
+    run=_run_pallas_fused,
+    canonicalize=_fused_canonical,
+))
+
+register(KernelImpl(
+    name="pallas_block",
+    formats=("block_csr",),
+    backends=("tpu", "interpret", "cpu"),
+    differentiable=True,   # custom VJP in kernels/vjp.py
+    spmd_partitionable=False,
+    priority=30,
+    param_space=_block_space,
+    run=_run_pallas_block,
+    canonicalize=_block_canonical,
+))
+
+register(KernelImpl(
+    name="jnp_oracle",
+    formats=("tiled_csc", "block_csr"),
+    backends=("cpu", "gpu", "tpu"),
+    differentiable=True,
+    spmd_partitionable=True,
+    priority=20,
+    param_space=lambda key: {},
+    run=_run_jnp_oracle,
+))
+
+register(KernelImpl(
+    name="dense_ref",
+    formats=("dense",),
+    backends=BACKENDS,
+    differentiable=True,
+    spmd_partitionable=True,
+    priority=10,
+    param_space=lambda key: {},
+    run=_run_dense,
+))

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
 from repro.core.formats import TiledCSC
 
 __all__ = ["sod_matmul_pallas"]
@@ -59,30 +60,41 @@ def _sod_matmul_kernel(
     vals_ref,   # (1, 1, cap, bn)
     rows_ref,   # (1, 1, cap, bn)
     o_ref,      # (bm, bn)
-    slab_ref,   # (Kt, bk, bn) VMEM scratch — decompressed K-slab
+    slab_ref,   # (slab_len, bk, bn) VMEM scratch — decompressed K-slab
     acc_ref,    # (bm, bn) f32 VMEM scratch
     *,
     kt_total: int,
     bk: int,
     slot_chunk: int,
+    slab_len: int,
 ):
     m = pl.program_id(1)
     k = pl.program_id(2)
+    resident = slab_len >= kt_total
+    slot = k if resident else jax.lax.rem(k, slab_len)
 
-    @pl.when(m == 0)
+    # Resident slab: decompress each (k, n) tile once, at m == 0, and reuse
+    # it across the whole M sweep (the paper's weight-stationary reuse).
+    # Non-resident slab (slab_len < Kt — the VMEM-constrained k_slab tuning
+    # point): re-decompress on every visit, trading VPU work for VMEM.
     def _decompress():
         vals = vals_ref[0, 0]
         rows = rows_ref[0, 0].astype(jnp.int32)
-        slab_ref[k] = _decompress_tile(vals, rows, bk, slot_chunk).astype(
+        slab_ref[slot] = _decompress_tile(vals, rows, bk, slot_chunk).astype(
             slab_ref.dtype
         )
+
+    if resident:
+        pl.when(m == 0)(_decompress)
+    else:
+        _decompress()
 
     @pl.when(k == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     acc_ref[...] += jnp.dot(
-        x_ref[...], slab_ref[k], preferred_element_type=jnp.float32
+        x_ref[...], slab_ref[slot], preferred_element_type=jnp.float32
     )
 
     @pl.when(k == kt_total - 1)
@@ -92,7 +104,7 @@ def _sod_matmul_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "slot_chunk", "interpret", "out_dtype"),
+    static_argnames=("bm", "slot_chunk", "k_slab", "interpret", "out_dtype"),
 )
 def sod_matmul_pallas(
     x: jax.Array,
@@ -100,6 +112,7 @@ def sod_matmul_pallas(
     *,
     bm: int = 128,
     slot_chunk: int = 8,
+    k_slab: int = 0,
     interpret: bool = True,
     out_dtype=None,
 ):
@@ -108,11 +121,17 @@ def sod_matmul_pallas(
     ``x`` must already be padded to the packed operand's padded K
     (``packed.grid[0] * bk``) and to an M multiple of ``bm``; use
     :func:`repro.kernels.ops.sod_matmul` for the general wrapper.
+
+    ``k_slab`` bounds the VMEM scratch holding the decompressed K-slab:
+    0 (default) keeps all ``Kt`` tiles resident and decompresses each once;
+    ``0 < k_slab < Kt`` keeps only ``k_slab`` tiles and re-decompresses per
+    M-block — the autotuner's knob for weights whose full slab exceeds VMEM.
     """
     out_dtype = out_dtype or x.dtype
     kt, nt = packed.grid
     bk, bn = packed.tile
     cap = packed.cap
+    slab_len = kt if k_slab <= 0 else min(k_slab, kt)
     m_dim = x.shape[0]
     if x.shape[1] != kt * bk:
         raise ValueError(f"x K dim {x.shape[1]} != packed padded K {kt * bk}")
@@ -136,7 +155,8 @@ def sod_matmul_pallas(
     )
 
     kernel = functools.partial(
-        _sod_matmul_kernel, kt_total=kt, bk=bk, slot_chunk=slot_chunk
+        _sod_matmul_kernel, kt_total=kt, bk=bk, slot_chunk=slot_chunk,
+        slab_len=slab_len,
     )
     return pl.pallas_call(
         kernel,
@@ -149,10 +169,10 @@ def sod_matmul_pallas(
         out_specs=pl.BlockSpec((bm, bn), lambda n, m, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((m_dim, nt * bn), out_dtype),
         scratch_shapes=[
-            pltpu.VMEM((kt, bk, bn), x.dtype),
+            pltpu.VMEM((slab_len, bk, bn), x.dtype),
             pltpu.VMEM((bm, bn), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         cost_estimate=cost,

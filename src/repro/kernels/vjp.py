@@ -1,0 +1,144 @@
+"""Differentiable wrappers for the Pallas kernels (custom VJPs).
+
+``pallas_call`` has no autodiff rule, so without these the registry could
+never route a *training* matmul through the fused kernels — dispatch would
+have to special-case "am I under grad?" (impossible to detect at trace
+time).  Instead each Pallas matmul gets an analytical backward pass in plain
+jnp:
+
+* ``dL/dx = g @ W.Tᵀ``  with ``W`` re-densified once (scatter oracle);
+* ``dL/dvals`` is a *gather* of the dense weight cotangent ``xᵀ @ g`` at the
+  packed (row-index, column) coordinates — the exact transpose of the
+  scatter-add decompression, so padding slots (``row == -1``) receive
+  exactly-zero gradient and fixed-mask sparse training stays on the mask,
+  same as the jnp oracle path.
+
+Integer leaves (row indices, block ids, tile_nnz) get ``float0`` cotangents
+as JAX requires.  The wrapped callables are cached per static parameter
+tuple so ``jit`` retracing stays cheap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BlockCSR, TiledCSC
+
+__all__ = ["fused_matmul", "block_matmul", "pick_bm"]
+
+
+def pick_bm(m: int, requested: int) -> int:
+    """Largest sublane-aligned M-block ≤ requested that fits M."""
+    for bm in (requested, 128, 64, 32, 16, 8):
+        if bm <= requested and bm <= max(m, 8):
+            return bm
+    return 8
+
+
+def _pad_m_k(x2: jax.Array, bm: int, kp: int) -> jax.Array:
+    m_pad = (-x2.shape[0]) % bm
+    k_pad = kp - x2.shape[1]
+    if m_pad or k_pad:
+        x2 = jnp.pad(x2, ((0, m_pad), (0, k_pad)))
+    return x2
+
+
+def _grad_w_tiles(x2: jax.Array, g: jax.Array, shape, tile, grid):
+    """Cotangent of the padded dense weight, tiled to (Kt, Nt, bk, bn)."""
+    kt, nt = grid
+    bk, bn = tile
+    gw = jnp.dot(x2.T, g, preferred_element_type=jnp.float32)
+    gw = jnp.pad(gw, ((0, kt * bk - shape[0]), (0, nt * bn - shape[1])))
+    return gw.reshape(kt, bk, nt, bn).transpose(0, 2, 1, 3)
+
+
+@functools.lru_cache(maxsize=None)
+def fused_matmul(bm: int, slot_chunk: int, k_slab: int, interpret: bool,
+                 out_dtype: str | None):
+    """Differentiable ``(x2, packed: TiledCSC) -> y`` through the fused
+    Pallas kernel, for the given static kernel parameters."""
+    from repro.kernels.sod_matmul import sod_matmul_pallas
+
+    @jax.custom_vjp
+    def f(x2, w):
+        kt, _ = w.grid
+        bk, _ = w.tile
+        m, n_logical = x2.shape[0], w.shape[1]
+        xp = _pad_m_k(x2, bm, kt * bk)
+        y = sod_matmul_pallas(
+            xp, w, bm=bm, slot_chunk=slot_chunk, k_slab=k_slab,
+            interpret=interpret,
+            out_dtype=jnp.dtype(out_dtype) if out_dtype else None,
+        )
+        return y[:m, :n_logical]
+
+    def fwd(x2, w):
+        return f(x2, w), (x2, w)
+
+    def bwd(res, g):
+        x2, w = res
+        bk = w.tile[0]
+        wd = w.to_dense()
+        gx = jnp.dot(g, wd.T, preferred_element_type=jnp.float32
+                     ).astype(x2.dtype)
+        tiles = _grad_w_tiles(x2, g, w.shape, w.tile, w.grid)
+        rows = w.rows.astype(jnp.int32)
+        gvals = jnp.take_along_axis(tiles, jnp.clip(rows, 0, bk - 1), axis=2)
+        gvals = jnp.where(rows >= 0, gvals, 0).astype(w.vals.dtype)
+        grows = np.zeros(w.rows.shape, jax.dtypes.float0)
+        return gx, TiledCSC(vals=gvals, rows=grows, shape=w.shape,
+                            tile=w.tile)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def block_matmul(bm: int, interpret: bool, out_dtype: str | None):
+    """Differentiable ``(x2, packed: BlockCSR) -> y`` through the
+    zero-tile-skipping Pallas kernel."""
+    from repro.kernels.block_matmul import block_matmul_pallas
+
+    @jax.custom_vjp
+    def f(x2, w):
+        kt, _ = w.grid
+        bk, _ = w.tile
+        m, n_logical = x2.shape[0], w.shape[1]
+        xp = _pad_m_k(x2, bm, kt * bk)
+        y = block_matmul_pallas(
+            xp, w, bm=bm, interpret=interpret,
+            out_dtype=jnp.dtype(out_dtype) if out_dtype else None,
+        )
+        return y[:m, :n_logical]
+
+    def fwd(x2, w):
+        return f(x2, w), (x2, w)
+
+    def bwd(res, g):
+        x2, w = res
+        kt, nt = w.grid
+        bk, bn = w.tile
+        br = w.br
+        nb = bk // br
+        wd = w.to_dense()
+        gx = jnp.dot(g, wd.T, preferred_element_type=jnp.float32
+                     ).astype(x2.dtype)
+        tiles = _grad_w_tiles(x2, g, w.shape, w.tile, w.grid)
+        tiles5 = tiles.reshape(kt, nt, nb, br, bn)
+        ids = w.block_ids
+        idx = jnp.clip(ids, 0, nb - 1)[:, :, :, None, None]
+        gblocks = jnp.take_along_axis(
+            tiles5, jnp.broadcast_to(idx, ids.shape + (br, bn)), axis=2)
+        gblocks = jnp.where((ids >= 0)[:, :, :, None, None], gblocks, 0
+                            ).astype(w.block_vals.dtype)
+        gids = np.zeros(ids.shape, jax.dtypes.float0)
+        gnnz = np.zeros(w.tile_nnz.shape, jax.dtypes.float0)
+        return gx, BlockCSR(block_vals=gblocks, block_ids=gids,
+                            tile_nnz=gnnz, shape=w.shape, tile=w.tile,
+                            br=w.br)
+
+    f.defvjp(fwd, bwd)
+    return f

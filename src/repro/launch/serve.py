@@ -60,6 +60,13 @@ def main(argv=None):
     ap.add_argument("--sod", choices=("tiled_csc", "block_csr"), default=None)
     ap.add_argument("--density", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="warm the kernel tuning cache for this model's "
+                         "packed weight shapes before serving")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache JSON path (default: "
+                         "$REPRO_TUNING_CACHE or ~/.cache/repro/"
+                         "tuning_cache.json)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -71,8 +78,18 @@ def main(argv=None):
     model = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
+    tune_stats = None
     if cfg.sod.enabled:
         params = sodify_params(params, cfg.sod)
+        if args.autotune:
+            from repro.kernels import autotune
+
+            cache = autotune.install_cache(args.tuning_cache)
+            # prefill consumes (batch·prompt_len, K); decode (batch, K)
+            tune_stats = autotune.warmup_params(
+                params, (args.batch * args.prompt_len, args.batch),
+                cache=cache)
+            print(f"autotune: {tune_stats} -> {cache.path}")
 
     data = SyntheticLMData(cfg, args.batch, args.prompt_len, seed=args.seed)
     prompt = {k: v for k, v in data.batch(0).items() if k != "targets"}
@@ -104,6 +121,8 @@ def main(argv=None):
         "decode_tok_per_s": round(args.batch * args.gen / max(decode_s, 1e-9), 1),
         "sample": [int(x) for x in jnp.asarray(outs)[:8, 0].reshape(-1)[:8]],
     }
+    if tune_stats is not None:
+        summary["autotune"] = tune_stats
     print(json.dumps(summary))
     return summary
 

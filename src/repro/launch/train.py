@@ -45,6 +45,13 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune", action="store_true",
+                    help="warm the kernel tuning cache for this model's "
+                         "packed weight shapes before training")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning-cache JSON path (default: "
+                         "$REPRO_TUNING_CACHE or ~/.cache/repro/"
+                         "tuning_cache.json)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -60,6 +67,13 @@ def main(argv=None):
         params = sodify_params(params, cfg.sod)
         from repro.core.sod import tree_weight_bytes
         print("sod weight bytes:", tree_weight_bytes(params))
+        if args.autotune:
+            from repro.kernels import autotune
+
+            cache = autotune.install_cache(args.tuning_cache)
+            stats = autotune.warmup_params(
+                params, (args.batch * args.seq,), cache=cache)
+            print(f"autotune: {stats} -> {cache.path}")
 
     opt = AdamW(AdamWConfig(lr=args.lr),
                 schedule=cosine_schedule(args.lr, args.warmup, args.steps))

@@ -47,23 +47,28 @@ def shard_packed(packed: TiledCSC, mesh: Mesh, axis: str = "data") -> TiledCSC:
 
 
 def sod_fsdp_matmul(x: jax.Array, packed: TiledCSC, mesh: Mesh,
-                    axis: str = "data") -> jax.Array:
+                    axis: str = "data", impl: str = "auto") -> jax.Array:
     """``x @ W`` with W stored compressed + sharded on the data axis.
 
     Inside shard_map each chip all-gathers the *compressed* shard list
     (collective bytes ≈ 1.5·density·dense), decompresses locally, and runs
     its dense matmul.  x is replicated across ``axis`` (the usual FSDP
     situation: activations sharded on batch, weights gathered per layer).
+
+    The local decompress+matmul dispatches through the kernel registry
+    (``impl`` as in :func:`repro.kernels.ops.sod_matmul`): tuned Pallas
+    kernels on TPU, the differentiable jnp oracle elsewhere.
     """
     nd = packed.vals.ndim
     w_spec = P(*((None,) * (nd - 3) + (axis, None, None)))
 
     def body(x_l, vals_l, rows_l):
+        from repro.kernels import ops  # deferred: runtime layers over kernels
+
         vals = jax.lax.all_gather(vals_l, axis, axis=nd - 3, tiled=True)
         rows = jax.lax.all_gather(rows_l, axis, axis=nd - 3, tiled=True)
-        w = TiledCSC(vals, rows, packed.shape, packed.tile).to_dense()
-        return jnp.dot(x_l, w, preferred_element_type=jnp.float32
-                       ).astype(x_l.dtype)
+        w = TiledCSC(vals, rows, packed.shape, packed.tile)
+        return ops.sod_matmul(x_l, w, impl=impl, out_dtype=x_l.dtype)
 
     fn = shard_map(
         body, mesh=mesh,

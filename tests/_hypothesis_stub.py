@@ -1,0 +1,48 @@
+"""Fallback for environments without ``hypothesis`` installed.
+
+CI installs the real package (see requirements-dev.txt), where the property
+tests run for real.  In bare environments this stub keeps the test modules
+*collectable* — every ``@given``-decorated test is reported as skipped
+instead of the whole module dying with ``ModuleNotFoundError`` at
+collection time (which previously masked all the non-property tests in the
+same files).
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_stub import given, settings, st
+"""
+import pytest
+
+
+def given(*_args, **_kwargs):
+    def decorate(fn):
+        @pytest.mark.skip(reason="hypothesis not installed")
+        def skipped():  # arg-less: the strategies would have supplied args
+            pass
+
+        skipped.__name__ = fn.__name__
+        skipped.__doc__ = fn.__doc__
+        return skipped
+
+    return decorate
+
+
+def settings(*_args, **_kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+class _AnyStrategy:
+    """Stands in for ``strategies.*`` — every attribute is a callable
+    returning None; @given never invokes the test so values don't matter."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _AnyStrategy()

@@ -1,0 +1,11 @@
+"""Test-session hermeticity: never read/write the user's tuning cache."""
+import os
+import tempfile
+
+# Must be set before repro.kernels.autotune resolves the cache path (it
+# re-checks the env on every get_cache(), so setting it at conftest import
+# time is sufficient and keeps every test cold-cache by default).
+# Unconditional override: a developer's exported REPRO_TUNING_CACHE must
+# not leak stale tuned winners into dispatch-behavior tests.
+os.environ["REPRO_TUNING_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_test_"), "tuning_cache.json")
