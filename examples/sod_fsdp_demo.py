@@ -18,6 +18,7 @@ from jax.sharding import Mesh                       # noqa: E402
 
 from repro.core import pruning                      # noqa: E402
 from repro.core.formats import pack_tiled_csc       # noqa: E402
+from repro.kernels import registry                  # noqa: E402
 from repro.runtime import sod_fsdp                  # noqa: E402
 
 
@@ -30,7 +31,7 @@ def main():
     w = pruning.random_sparse(key, (1024, 1024), density)
     packed = pack_tiled_csc(w, tile=(128, 128))
     x = jax.random.normal(jax.random.fold_in(key, 1), (64, 1024))
-    with mesh:
+    with mesh, registry.record_dispatches() as dispatch_log:
         sharded = sod_fsdp.shard_packed(packed, mesh, axis="data")
         y = sod_fsdp.sod_fsdp_matmul(x, sharded, mesh, axis="data")
     err = float(jnp.abs(y - x @ w).max())
@@ -38,6 +39,10 @@ def main():
     comp_bytes = packed.nbytes_compressed()
     print(f"weight all-gather: {dense_bytes:,} B dense → {comp_bytes:,} B "
           f"compressed ({comp_bytes/dense_bytes:.2f}×), max|err|={err:.2e}")
+    # which registry impl + tuned params the shard_map body dispatched —
+    # a silent fallback to the XLA oracle would show up right here
+    for line in registry.dispatch_summary(dispatch_log):
+        print(f"  dispatched: {line}")
     print("savings model:", sod_fsdp.collective_savings(density, ratio=0.05))
 
     # ---- compressed gradient all-reduce with error feedback ----------------

@@ -42,6 +42,8 @@ class ModelConfig:
     router_aux_weight: float = 0.01
     ep_axis: int = 16                     # pad experts to a multiple of this
     moe_dispatch_blocks: int = 1          # = dp shards for local dispatch
+    moe_a2a_axis: str | None = None       # EP axis for shard_map all-to-all
+    #                                       dispatch (None = GSPMD scatter)
 
     # SSM / hybrid (zamba2)
     ssm_state: int = 0

@@ -80,11 +80,18 @@ def default_cache_path() -> pathlib.Path:
 def key_str(key: ProblemKey) -> str:
     # tile/cap are part of the key: two packs of the same logical (K, N)
     # with different tile geometry have different param spaces and winners,
-    # and must not collide on one cache entry
+    # and must not collide on one cache entry.  The mesh signature is
+    # appended only when set (SPMD dispatch): shapes are then per-local-
+    # shard, and a tile tuned for the (m/dp, k, n/tp) shard must not be
+    # served to an unsharded run of the same global shape (or to a
+    # different mesh).
     d = f"{key.density:.3f}"
     bk, bn = key.tile
-    return (f"{key.fmt}|m={key.m}|k={key.k}|n={key.n}|d={d}"
-            f"|t={bk}x{bn}|cap={key.cap}|{key.dtype}|{key.backend}")
+    s = (f"{key.fmt}|m={key.m}|k={key.k}|n={key.n}|d={d}"
+         f"|t={bk}x{bn}|cap={key.cap}|{key.dtype}|{key.backend}")
+    if key.mesh:
+        s += f"|mesh={key.mesh}"
+    return s
 
 
 class TuningCache:
@@ -260,6 +267,7 @@ def tune(
     w,
     *,
     backend: str | None = None,
+    mesh: str = "",
     cache: TuningCache | None = None,
     top_k: int = 4,
     iters: int = 3,
@@ -275,9 +283,15 @@ def tune(
     tests; when ``trials_out`` is a list it receives every measured
     ``(impl_name, params, us)`` (the benchmark sweep reads the default
     config's time out of it — same measurement session as the winner's).
+
+    ``mesh`` is an SPMD mesh signature (:func:`repro.runtime.spmd.mesh_key`
+    + plan): ``x``/``w`` must then be the per-device *local* shard shapes —
+    single-device measurement of the local problem is exactly what the
+    shard_map body will execute per chip — and the entry lands under the
+    mesh-qualified cache key the SPMD dispatcher reads.
     """
     cache = get_cache() if cache is None else cache
-    key = registry.problem_key(w, m=x.shape[0], backend=backend)
+    key = registry.problem_key(w, m=x.shape[0], backend=backend, mesh=mesh)
     hit = cache.get(key)
     if hit is not None and not force:
         return hit

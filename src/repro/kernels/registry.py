@@ -24,6 +24,7 @@ way the kernels run in CI and on developer machines without a TPU.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import os
@@ -49,6 +50,8 @@ __all__ = [
     "current_backend",
     "set_backend_override",
     "kernel_hash",
+    "record_dispatches",
+    "note_dispatch",
 ]
 
 BACKENDS = ("cpu", "gpu", "tpu", "interpret")
@@ -78,6 +81,13 @@ class ProblemKey:
     cap: int = 0             # TiledCSC slot capacity / BlockCSR bcap*br
     kt: int = 1              # K-tile grid size
 
+    # Non-empty when dispatching *inside* the SPMD execution layer
+    # (repro.runtime.spmd): a signature like "data=4,model=2|dp" naming the
+    # mesh shape and partition plan.  Shapes in the key are then per-local-
+    # shard, so tuned tiles are per-shard winners, and choose() knows the
+    # Pallas impls are mesh-legal (shard_map gives them per-device traces).
+    mesh: str = ""
+
 
 @dataclasses.dataclass(frozen=True)
 class KernelImpl:
@@ -87,10 +97,14 @@ class KernelImpl:
     formats: tuple[str, ...]
     backends: tuple[str, ...]
     differentiable: bool
-    # True when XLA/GSPMD can partition this impl inside pjit (plain jnp
-    # ops); pallas_call has no partitioning rule, so pallas impls are False
-    # and a cold cache on a real TPU mesh must not route sharded model
-    # matmuls through them (see choose()).
+    # True when the impl is legal inside a pjit-sharded model step on a
+    # mesh — either natively (plain jnp ops XLA/GSPMD can partition;
+    # ``mesh_axes == ()``) or via the shard_map wrappers in
+    # :mod:`repro.runtime.spmd` (``mesh_axes`` names the axis roles the
+    # wrapper supports).  pallas_call still has no GSPMD partitioning rule,
+    # so a Pallas impl traced *directly* under pjit (dispatch with an empty
+    # ``ProblemKey.mesh``) remains off-limits on a cold TPU cache — see
+    # choose().
     spmd_partitionable: bool
     priority: int            # tie-break when the prior can't separate
     param_space: Callable[[ProblemKey], dict[str, tuple]]
@@ -100,6 +114,15 @@ class KernelImpl:
     # the autotuner dedups trials on this so it never measures the same
     # effective kernel twice; None = params are already canonical
     canonicalize: Callable[[ProblemKey, dict, int], dict] | None = None
+    # mesh-axis *roles* the SPMD layer may shard this impl over inside its
+    # shard_map wrapper ("data" = M-sharding, "model" = N/K tensor
+    # parallelism).  Empty = natively partitionable, no wrapper needed.
+    mesh_axes: tuple[str, ...] = ()
+
+    @property
+    def requires_shard_map(self) -> bool:
+        """Mesh-legal only through the repro.runtime.spmd wrapper."""
+        return self.spmd_partitionable and bool(self.mesh_axes)
 
     def supports(self, key: ProblemKey) -> bool:
         return key.fmt in self.formats and key.backend in self.backends
@@ -202,13 +225,14 @@ def _m_bucket(m: int) -> int:
     return b
 
 
-def problem_key(w, m: int, backend: str | None = None) -> ProblemKey:
+def problem_key(w, m: int, backend: str | None = None,
+                mesh: str = "") -> ProblemKey:
     fmt = format_of(w)
     backend = backend or current_backend()
     if fmt == "dense":
         k, n = int(w.shape[-2]), int(w.shape[-1])
         return ProblemKey(fmt, _m_bucket(m), k, n, 1.0,
-                          str(jnp.result_type(w)), backend)
+                          str(jnp.result_type(w)), backend, mesh=mesh)
     k, n = w.shape
     if fmt == "tiled_csc":
         cap, kt = w.cap, w.grid[0]
@@ -217,7 +241,7 @@ def problem_key(w, m: int, backend: str | None = None) -> ProblemKey:
     return ProblemKey(
         fmt, _m_bucket(m), int(k), int(n), static_density(w),
         str(jnp.dtype(w.dtype)), backend,
-        tile=tuple(w.tile), cap=int(cap), kt=int(kt),
+        tile=tuple(w.tile), cap=int(cap), kt=int(kt), mesh=mesh,
     )
 
 
@@ -235,25 +259,92 @@ def choose(key: ProblemKey, tuned: dict | None = None
         if impl is not None and impl.supports(key):
             params = dict(impl.default_params(key))
             params.update(tuned.get("params") or {})
+            note_dispatch(key, impl, params, "tuned")
             return impl, params
     # cold cache: cheapest candidate under the analytical prior (deferred
     # import — autotune imports this module at top level).  On a real TPU
     # the model step typically runs under pjit with sharded weights, and
     # pallas_call cannot be GSPMD-partitioned — so an *untuned* TPU
-    # dispatch is restricted to partitionable impls (the XLA scatter+dot
-    # oracle, which is what the pre-registry code always ran).  Explicitly
-    # tuned entries may still promote the pallas kernels (tuning runs
-    # per-host, outside pjit, so the operator opted in knowingly).
+    # dispatch with no mesh signature (i.e. NOT inside the
+    # repro.runtime.spmd shard_map wrapper, where pallas is per-device and
+    # therefore legal) is restricted to natively partitionable impls (the
+    # XLA scatter+dot oracle, which is what the pre-registry code always
+    # ran).  Explicitly tuned entries may still promote the pallas kernels
+    # (tuning runs per-host, outside pjit, so the operator opted in
+    # knowingly).
     from repro.kernels import autotune
 
     ranked = autotune.rank_candidates(key)
-    if key.backend == "tpu":
-        safe = [t for t in ranked if t[1].spmd_partitionable]
+    if key.backend == "tpu" and not key.mesh:
+        safe = [t for t in ranked
+                if t[1].spmd_partitionable and not t[1].requires_shard_map]
         ranked = safe or ranked
     if not ranked:
         raise ValueError(f"no kernel impl supports {key}")
     _, impl, params = ranked[0]
+    note_dispatch(key, impl, params, "prior")
     return impl, params
+
+
+# ---------------------------------------------------------------------------
+# dispatch observability: what actually ran?
+# ---------------------------------------------------------------------------
+# Dispatch happens at trace time (pure Python), so a recording context
+# wrapped around a jit/lower call captures every registry resolution the
+# traced computation made — this is how the launch drivers and demos report
+# which impl a mesh step really used instead of silently falling back.
+_DISPATCH_LOGS: list[list] = []
+
+
+@contextlib.contextmanager
+def record_dispatches(log: list | None = None):
+    """Collect ``{"key", "impl", "params", "source"}`` dicts for every
+    dispatch resolved while the context is active (source is ``tuned`` /
+    ``prior`` / ``forced``)."""
+    log = [] if log is None else log
+    _DISPATCH_LOGS.append(log)
+    try:
+        yield log
+    finally:
+        # identity, not equality: content-equal nested logs must not
+        # remove each other
+        for i, entry in enumerate(_DISPATCH_LOGS):
+            if entry is log:
+                del _DISPATCH_LOGS[i]
+                break
+
+
+def note_dispatch(key: ProblemKey, impl: KernelImpl, params: dict,
+                  source: str) -> None:
+    for log in _DISPATCH_LOGS:
+        log.append({"key": key, "impl": impl.name, "params": dict(params),
+                    "source": source})
+
+
+def amend_last_dispatch(key: ProblemKey, impl: KernelImpl,
+                        params: dict) -> None:
+    """Rewrite the params of the dispatch just noted — callers that apply
+    overrides on top of the chosen params (ops.resolve) use this so the
+    recorded entry shows what actually ran."""
+    for log in _DISPATCH_LOGS:
+        if log and log[-1]["key"] == key and log[-1]["impl"] == impl.name:
+            log[-1]["params"] = dict(params)
+
+
+def dispatch_summary(log: list) -> list[str]:
+    """Human-readable one-liners, deduplicated, for a recorded log."""
+    seen: dict[str, int] = {}
+    lines: list[str] = []
+    for rec in log:
+        k = rec["key"]
+        desc = (f"{rec['impl']}[{rec['source']}] "
+                f"{k.fmt} m={k.m} k={k.k} n={k.n} {k.backend}"
+                + (f" mesh={k.mesh}" if k.mesh else "")
+                + (f" params={rec['params']}" if rec["params"] else ""))
+        if desc not in seen:
+            seen[desc] = len(lines)
+            lines.append(desc)
+    return lines
 
 
 def kernel_hash() -> str:
@@ -381,16 +472,21 @@ def _block_canonical(key: ProblemKey, params: dict, m: int) -> dict:
 # still dispatches to the jnp oracle, but *measurement* may promote the
 # interpreted kernel where it genuinely wins (e.g. block-skip at high
 # zero-tile fractions).
+# mesh-legal via the repro.runtime.spmd shard_map wrappers ("data" =
+# M-sharding / compressed FSDP gather, "model" = column/row tensor
+# parallelism); dispatch outside the wrapper (empty key.mesh) still treats
+# them as unpartitionable — see choose().
 register(KernelImpl(
     name="pallas_fused",
     formats=("tiled_csc",),
     backends=("tpu", "interpret", "cpu"),
     differentiable=True,   # custom VJP in kernels/vjp.py
-    spmd_partitionable=False,
+    spmd_partitionable=True,
     priority=30,
     param_space=_fused_space,
     run=_run_pallas_fused,
     canonicalize=_fused_canonical,
+    mesh_axes=("data", "model"),
 ))
 
 register(KernelImpl(
@@ -398,11 +494,12 @@ register(KernelImpl(
     formats=("block_csr",),
     backends=("tpu", "interpret", "cpu"),
     differentiable=True,   # custom VJP in kernels/vjp.py
-    spmd_partitionable=False,
+    spmd_partitionable=True,
     priority=30,
     param_space=_block_space,
     run=_run_pallas_block,
     canonicalize=_block_canonical,
+    mesh_axes=("data", "model"),
 ))
 
 register(KernelImpl(

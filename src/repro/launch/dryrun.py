@@ -109,14 +109,14 @@ def _build_from_cfg(cfg, shape, mesh):
         o_sh = shard_mod.to_shardings(o_specs, mesh)
         b_specs = shard_mod.batch_specs(inputs["batch"], mesh)
         b_sh = shard_mod.to_shardings(b_specs, mesh)
-        step = steps_mod.make_train_step(model, opt)
+        step = steps_mod.make_train_step(model, opt, mesh=mesh)
         jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                          out_shardings=(p_sh, o_sh, None))
         args = (params, opt_state, inputs["batch"])
     elif shape.kind == "prefill":
         b_specs = shard_mod.batch_specs(inputs["batch"], mesh)
         b_sh = shard_mod.to_shardings(b_specs, mesh)
-        step = steps_mod.make_prefill_step(model)
+        step = steps_mod.make_prefill_step(model, mesh=mesh)
         jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
         args = (params, inputs["batch"])
     else:  # decode
@@ -125,7 +125,7 @@ def _build_from_cfg(cfg, shape, mesh):
             seq_len=shape.seq_len,
             seq_shard=os.environ.get("SOD_SEQ_SHARD_CACHE", "1") == "1")
         c_sh = shard_mod.to_shardings(c_specs, mesh)
-        step = steps_mod.make_decode_step(model)
+        step = steps_mod.make_decode_step(model, mesh=mesh)
         jitted = jax.jit(
             step, in_shardings=(p_sh, c_sh, None, None),
             out_shardings=(None, None, c_sh),
@@ -235,9 +235,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     t0 = time.time()
     cfg, shape, mesh, jitted, args = build_cell(
         arch, shape_name, multi_pod, sod_mode, density, scan_layers=True)
-    with mesh:
+    from repro.kernels import registry as kreg
+
+    with mesh, kreg.record_dispatches() as dispatch_log:
         compiled = jitted.lower(*args).compile()
     rec["compile_s"] = round(time.time() - t0, 1)
+    # which registry impls the traced step really ran (mesh fallbacks to
+    # the XLA oracle are visible here instead of silent)
+    rec["kernel_dispatch"] = kreg.dispatch_summary(dispatch_log)
     full = _analyze(compiled)
     rec["memory"] = full["memory"]
     rec["cost_scan_hlo"] = full["cost"]          # while-bodies counted once

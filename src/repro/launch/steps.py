@@ -1,4 +1,11 @@
-"""Jittable train / prefill / decode step builders."""
+"""Jittable train / prefill / decode step builders.
+
+Every builder takes an optional ``mesh``: when given, the step body traces
+inside ``with mesh:``, so the SPMD kernel routing
+(:mod:`repro.runtime.spmd`) sees the mesh even if the caller jits the step
+without an enclosing mesh context — packed matmuls then dispatch
+shard_map-wrapped Pallas kernels instead of falling back to the XLA oracle.
+"""
 from __future__ import annotations
 
 from typing import Any
@@ -6,48 +13,53 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import mesh_context
 from repro.models.model import LM
 from repro.optim.adamw import AdamW
 
 Params = Any
 
 
-def make_train_step(model: LM, optimizer: AdamW):
+def make_train_step(model: LM, optimizer: AdamW, mesh=None):
     def train_step(params: Params, opt_state: Params, batch: Params):
         def loss_fn(p):
             return model.loss(p, batch)
 
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True, allow_int=True)(params)
-        params, opt_state, opt_metrics = optimizer.update(
-            params, grads, opt_state)
+        with mesh_context(mesh):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(params)
+            params, opt_state, opt_metrics = optimizer.update(
+                params, grads, opt_state)
         return params, opt_state, {**metrics, **opt_metrics}
 
     return train_step
 
 
-def make_loss_and_grads(model: LM):
+def make_loss_and_grads(model: LM, mesh=None):
     def loss_and_grads(params: Params, batch: Params):
-        (loss, metrics), grads = jax.value_and_grad(
-            lambda p: model.loss(p, batch), has_aux=True, allow_int=True
-        )(params)
+        with mesh_context(mesh):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch), has_aux=True, allow_int=True
+            )(params)
         return loss, metrics, grads
 
     return loss_and_grads
 
 
-def make_prefill_step(model: LM):
+def make_prefill_step(model: LM, mesh=None):
     def prefill_step(params: Params, batch: Params):
-        last_logits, cache = model.prefill(params, batch)
+        with mesh_context(mesh):
+            last_logits, cache = model.prefill(params, batch)
         next_tokens = jnp.argmax(last_logits, axis=-1)
         return next_tokens, cache
 
     return prefill_step
 
 
-def make_decode_step(model: LM, greedy: bool = True):
+def make_decode_step(model: LM, greedy: bool = True, mesh=None):
     def decode_step(params: Params, cache: Params, tokens, pos):
-        logits, cache = model.decode_step(params, cache, tokens, pos)
+        with mesh_context(mesh):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
         next_tokens = jnp.argmax(logits, axis=-1)
         return next_tokens, logits, cache
 

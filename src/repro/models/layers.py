@@ -97,10 +97,15 @@ def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
     }
 
 
-def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
-    gate = sod.apply(x, params["w_gate"])
-    up = sod.apply(x, params["w_up"])
-    return sod.apply(activate(gate, act) * up, params["w_down"])
+def mlp(params: Params, x: jax.Array, act: str = "silu",
+        spmd="auto") -> jax.Array:
+    """SwiGLU MLP.  ``spmd`` forwards to the packed-matmul dispatcher: under
+    an active mesh the packed projections run shard_map-wrapped (an explicit
+    :class:`repro.runtime.spmd.SpmdPlan` pins the partitioning; ``None``
+    opts out)."""
+    gate = sod.apply(x, params["w_gate"], spmd=spmd)
+    up = sod.apply(x, params["w_up"], spmd=spmd)
+    return sod.apply(activate(gate, act) * up, params["w_down"], spmd=spmd)
 
 
 # ---------------------------------------------------------------------------
@@ -113,13 +118,14 @@ def embed(table: jax.Array, tokens: jax.Array, scale: bool = False) -> jax.Array
     return x
 
 
-def lm_head(x: jax.Array, table_or_w, tied: bool, cap: float | None = None):
+def lm_head(x: jax.Array, table_or_w, tied: bool, cap: float | None = None,
+            spmd="auto"):
     """Project to vocab logits in float32 (loss numerics)."""
     if tied:
         w = table_or_w.T if isinstance(table_or_w, jax.Array) else table_or_w
         logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
     else:
-        logits = sod.apply(x, table_or_w, out_dtype=jnp.float32)
+        logits = sod.apply(x, table_or_w, out_dtype=jnp.float32, spmd=spmd)
     return softcap(logits.astype(jnp.float32), cap)
 
 

@@ -16,6 +16,12 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:  # moved out of experimental in newer jax
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover - version dependent
+    from jax import shard_map
 
 from repro.core import sod
 from repro.models import layers
@@ -70,6 +76,14 @@ class MoESpec:
     # scatter is shard-local — no capacity-buffer all-reduce over the data
     # axis (EXPERIMENTS.md §Perf B2).  1 = global dispatch.
     dispatch_blocks: int = 1
+    # Mesh axis for the shard_map all-to-all token exchange (the §Perf B3
+    # fix): tokens shard over (data axes × this axis), each shard ranks its
+    # block locally and trades per-expert capacity buffers with its EP
+    # peers — only routed tokens cross the links, never the full capacity
+    # buffer.  None (default) keeps the GSPMD capacity-scatter dispatch;
+    # the a2a path engages when a mesh with this axis is active and shapes
+    # divide, and falls back silently otherwise.
+    a2a_axis: str | None = None
 
     def capacity(self, n_tokens: int) -> int:
         c = int(n_tokens * self.top_k / max(self.n_experts, 1)
@@ -105,12 +119,107 @@ def init_moe(key, spec: MoESpec, dtype=jnp.bfloat16) -> Params:
     return params
 
 
+def _rank_in_expert(assign: jax.Array, e: int) -> jax.Array:
+    """First-come slot rank of each assignment within its expert.
+
+    Stable argsort — O(N log N), no (T·K × E) one-hot, same first-come slot
+    semantics as a running per-expert counter (§Perf B1).
+    """
+    order = jnp.argsort(assign, stable=True)
+    sorted_e = assign[order]
+    hist = jnp.zeros((e,), jnp.int32).at[assign].add(1)
+    starts = jnp.cumsum(hist) - hist                          # (E,) tiny
+    rank = jnp.arange(assign.shape[0], dtype=jnp.int32) - starts[sorted_e]
+    return jnp.zeros_like(assign).at[order].set(rank)
+
+
+def _a2a_dispatch(params: Params, xt: jax.Array, gate_vals: jax.Array,
+                  expert_ids: jax.Array, spec: MoESpec):
+    """shard_map all-to-all token exchange (the §Perf B3 fix), or None.
+
+    Tokens shard over (data axes × ``spec.a2a_axis``); each shard ranks its
+    contiguous block locally (same semantics as ``dispatch_blocks`` = the
+    number of token shards), scatters its tokens into a per-expert capacity
+    buffer, and ``all_to_all`` over the EP axis hands every expert owner
+    exactly the routed tokens — the giant (E, NB, C, D) capacity buffer is
+    never materialized globally and no GSPMD resharding of ``src`` happens.
+    Expert weights stay resident sharded on the EP axis; their cotangents
+    psum over the data axes via the shard_map transpose.
+    """
+    from repro.runtime import spmd  # deferred: models layer under runtime
+
+    mesh = spmd.active_mesh()
+    ep_ax = spec.a2a_axis
+    if mesh is None or ep_ax not in mesh.axis_names or spmd.in_spmd_body():
+        return None
+    t, d = xt.shape
+    e = spec.n_experts_padded
+    ep = mesh.shape[ep_ax]
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if ep_ax in dp:
+        return None                      # EP axis must be distinct from dp
+    n_tok_shards = ep
+    for a in dp:
+        n_tok_shards *= mesh.shape[a]
+    if e % ep or t % n_tok_shards:
+        return None                      # shapes don't divide: fall back
+    t_l = t // n_tok_shards
+    cap = spec.capacity(t_l)
+    k = spec.top_k
+    e_per = e // ep
+    tok_axes = dp + (ep_ax,)
+
+    def body(xt_l, gate_l, eid_l, wg_l, wu_l, wd_l):
+        assign = eid_l.reshape(-1)                       # (A,) A = t_l·K
+        slot = _rank_in_expert(assign, e)
+        keep = slot < cap
+        # local per-expert capacity buffer, drop bin at cap
+        src = jnp.repeat(xt_l[:, None, :], k, axis=1).reshape(-1, d)
+        buf = jnp.zeros((e, cap + 1, d), xt_l.dtype)
+        buf = buf.at[assign, jnp.where(keep, slot, cap)].add(src,
+                                                             mode="drop")
+        buf = buf[:, :cap]                               # (E, C, D)
+        # trade expert slices: every EP peer receives, for its e_per local
+        # experts, the capacity buffers of all ep sources
+        recv = jax.lax.all_to_all(buf, ep_ax, split_axis=0, concat_axis=1,
+                                  tiled=True)            # (E/ep, ep·C, D)
+        h_gate = jnp.einsum("ecd,edf->ecf", recv, wg_l,
+                            preferred_element_type=jnp.float32
+                            ).astype(xt_l.dtype)
+        h_up = jnp.einsum("ecd,edf->ecf", recv, wu_l,
+                          preferred_element_type=jnp.float32
+                          ).astype(xt_l.dtype)
+        h = layers.activate(h_gate, spec.act) * h_up
+        out_e = jnp.einsum("ecf,efd->ecd", h, wd_l,
+                           preferred_element_type=jnp.float32
+                           ).astype(xt_l.dtype)          # (E/ep, ep·C, D)
+        # route results back to their source shards
+        back = jax.lax.all_to_all(out_e, ep_ax, split_axis=1, concat_axis=0,
+                                  tiled=True)            # (E, C, D)
+        gathered = back[assign, jnp.clip(slot, 0, cap - 1)]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        weights = (gate_l.reshape(-1) * keep).astype(xt_l.dtype)
+        return jnp.sum((gathered * weights[:, None]).reshape(t_l, k, d),
+                       axis=1)
+
+    tok_spec = P(tok_axes, None)
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(tok_spec, tok_spec, tok_spec,
+                  P(ep_ax, None, None), P(ep_ax, None, None),
+                  P(ep_ax, None, None)),
+        out_specs=tok_spec,
+        check_rep=False)
+    return fn(xt, gate_vals, expert_ids,
+              params["w_gate"], params["w_up"], params["w_down"])
+
+
 def moe_mlp(params: Params, x: jax.Array, spec: MoESpec):
     """x (B, S, D) → (B, S, D), plus router aux loss."""
     b, s, d = x.shape
     t = b * s
+    e = spec.n_experts_padded
     xt = x.reshape(t, d)
-    cap = spec.capacity(t)
 
     logits = jnp.dot(xt, params["router"].astype(xt.dtype),
                      preferred_element_type=jnp.float32)
@@ -121,57 +230,55 @@ def moe_mlp(params: Params, x: jax.Array, spec: MoESpec):
     gate_vals, expert_ids = jax.lax.top_k(probs, spec.top_k)  # (T, K)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
 
-    # ---- capacity-based dispatch (block-local, sort-based ranking) --------
-    # B1: rank assignments within their expert via a stable argsort —
-    #     O(N log N), no (T·K × E) one-hot, same first-come slot semantics.
-    # B2: ranking/scatter happen independently per token *block*; blocks
-    #     align with the data sharding so the dispatch scatter is local.
-    e = spec.n_experts_padded
-    nb = spec.dispatch_blocks if t % spec.dispatch_blocks == 0 else 1
-    tb = t // nb
-    cap = spec.capacity(tb)
-    a_blk = expert_ids.reshape(nb, tb * spec.top_k)           # (NB, A)
+    combined = None
+    if spec.a2a_axis is not None:
+        combined = _a2a_dispatch(params, xt, gate_vals, expert_ids, spec)
 
-    def rank_block(assign):
-        order = jnp.argsort(assign, stable=True)
-        sorted_e = assign[order]
-        hist = jnp.zeros((e,), jnp.int32).at[assign].add(1)
-        starts = jnp.cumsum(hist) - hist                      # (E,) tiny
-        rank = jnp.arange(assign.shape[0], dtype=jnp.int32) \
-            - starts[sorted_e]
-        return jnp.zeros_like(assign).at[order].set(rank)
+    if combined is None:
+        # ---- capacity-based dispatch (block-local, sort-based ranking) ----
+        # B1: rank assignments within their expert via a stable argsort.
+        # B2: ranking/scatter happen independently per token *block*; blocks
+        #     align with the data sharding so the dispatch scatter is local.
+        nb = spec.dispatch_blocks if t % spec.dispatch_blocks == 0 else 1
+        tb = t // nb
+        cap = spec.capacity(tb)
+        a_blk = expert_ids.reshape(nb, tb * spec.top_k)       # (NB, A)
+        slot = jax.vmap(lambda a: _rank_in_expert(a, e))(a_blk) \
+            .reshape(t, spec.top_k)
+        keep = slot < cap
+        # scatter tokens into (E, NB, C, D); NB rides the token sharding
+        flat_e = expert_ids.reshape(-1)
+        flat_b = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), tb * spec.top_k)
+        flat_slot = jnp.where(keep, slot, cap).reshape(-1)    # cap = drop bin
+        dispatched = jnp.zeros((e, nb, cap + 1, d), xt.dtype)
+        src = jnp.repeat(xt[:, None, :], spec.top_k, axis=1).reshape(-1, d)
+        dispatched = dispatched.at[flat_e, flat_b, flat_slot].add(
+            src, mode="drop")
+        # NOTE: forcing P('model','data',·,·) here makes GSPMD reshard the
+        # giant src instead (16× more traffic — §Perf B3, refuted).  The
+        # real fix is the shard_map all-to-all exchange above
+        # (spec.a2a_axis); this path remains for meshless runs and
+        # non-dividing shapes.
+        dispatched = dispatched[:, :, :cap]                   # (E, NB, C, D)
 
-    slot = jax.vmap(rank_block)(a_blk).reshape(t, spec.top_k)
-    keep = slot < cap
-    # scatter tokens into (E, NB, C, D); NB rides the token sharding
-    flat_e = expert_ids.reshape(-1)
-    flat_b = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), tb * spec.top_k)
-    flat_slot = jnp.where(keep, slot, cap).reshape(-1)        # cap = drop bin
-    dispatched = jnp.zeros((e, nb, cap + 1, d), xt.dtype)
-    src = jnp.repeat(xt[:, None, :], spec.top_k, axis=1).reshape(-1, d)
-    dispatched = dispatched.at[flat_e, flat_b, flat_slot].add(
-        src, mode="drop")
-    # NOTE: forcing P('model','data',·,·) here makes GSPMD reshard the giant
-    # src instead (16× more traffic — §Perf B3, refuted).  The real fix is a
-    # shard_map all-to-all token exchange; left as the documented next step.
-    dispatched = dispatched[:, :, :cap]                       # (E, NB, C, D)
+        # ---- batched expert MLP (E shards on "model", NB on data) --------
+        h_gate = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_gate"],
+                            preferred_element_type=jnp.float32
+                            ).astype(xt.dtype)
+        h_up = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_up"],
+                          preferred_element_type=jnp.float32).astype(xt.dtype)
+        h = layers.activate(h_gate, spec.act) * h_up
+        out_e = jnp.einsum("ebcf,efd->ebcd", h, params["w_down"],
+                           preferred_element_type=jnp.float32
+                           ).astype(xt.dtype)
 
-    # ---- batched expert MLP (E shards on "model", NB on data) ------------
-    h_gate = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_gate"],
-                        preferred_element_type=jnp.float32).astype(xt.dtype)
-    h_up = jnp.einsum("ebcd,edf->ebcf", dispatched, params["w_up"],
-                      preferred_element_type=jnp.float32).astype(xt.dtype)
-    h = layers.activate(h_gate, spec.act) * h_up
-    out_e = jnp.einsum("ebcf,efd->ebcd", h, params["w_down"],
-                       preferred_element_type=jnp.float32).astype(xt.dtype)
-
-    # ---- combine ----------------------------------------------------------
-    gathered = out_e[flat_e, flat_b, jnp.clip(flat_slot, 0, cap - 1)]
-    gathered = jnp.where(keep.reshape(-1, 1), gathered, 0)
-    weights = (gate_vals * keep).reshape(-1, 1).astype(xt.dtype)
-    combined = jnp.sum(
-        (gathered * weights).reshape(t, spec.top_k, d), axis=1
-    )
+        # ---- combine ------------------------------------------------------
+        gathered = out_e[flat_e, flat_b, jnp.clip(flat_slot, 0, cap - 1)]
+        gathered = jnp.where(keep.reshape(-1, 1), gathered, 0)
+        weights = (gate_vals * keep).reshape(-1, 1).astype(xt.dtype)
+        combined = jnp.sum(
+            (gathered * weights).reshape(t, spec.top_k, d), axis=1
+        )
 
     if "shared" in params:
         sg = jax.nn.sigmoid(

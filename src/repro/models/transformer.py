@@ -75,6 +75,7 @@ def moe_spec(cfg: ModelConfig) -> moe.MoESpec:
         router_aux_weight=cfg.router_aux_weight,
         act=cfg.act,
         dispatch_blocks=cfg.moe_dispatch_blocks,
+        a2a_axis=cfg.moe_a2a_axis,
     )
 
 

@@ -119,16 +119,43 @@ def _leaf_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
     return P(*fixed)
 
 
+_PACKED_SUBS = {
+    TiledCSC: ("vals", "rows"),
+    BlockCSR: ("block_vals", "block_ids", "tile_nnz"),
+}
+
+
+def _packed_specs(name: str, leaf, cfg: ModelConfig, mesh: Mesh):
+    """Container-of-PartitionSpecs for one packed leaf.
+
+    Flattening a registered pytree node yields index-keyed paths
+    (``[<flat index 0>]``), never ``.vals`` — so the sub-arrays are named
+    explicitly here or the format-aware grid-dim rules in
+    :func:`_leaf_spec` would silently fall through to the dense rules and
+    shard a within-tile dim.
+    """
+    subs = _PACKED_SUBS[type(leaf)]
+    fields = {s: _leaf_spec(f"{name}.{s}", getattr(leaf, s), cfg, mesh)
+              for s in subs}
+    if isinstance(leaf, TiledCSC):
+        return TiledCSC(shape=leaf.shape, tile=leaf.tile, **fields)
+    return BlockCSR(shape=leaf.shape, tile=leaf.tile, br=leaf.br, **fields)
+
+
 def param_specs(params: Params, cfg: ModelConfig, mesh: Mesh) -> Params:
     """PartitionSpec pytree matching ``params`` (packed leaves expanded)."""
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    is_packed = lambda l: isinstance(l, (TiledCSC, BlockCSR))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=is_packed)
     specs = []
     for path, leaf in flat:
         name = jax.tree_util.keystr(path).replace("'", "").replace("]", "")
         name = name.replace("[", ".")
-        specs.append(_leaf_spec(name, leaf, cfg, mesh))
-    return jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(params), specs)
+        if is_packed(leaf):
+            specs.append(_packed_specs(name, leaf, cfg, mesh))
+        else:
+            specs.append(_leaf_spec(name, leaf, cfg, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
 
 
 # ---------------------------------------------------------------------------
@@ -252,3 +279,34 @@ def to_shardings(spec_tree: Params, mesh: Mesh) -> Params:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# SPMD matmul plans for packed leaves
+# ---------------------------------------------------------------------------
+def packed_matmul_plans(params: Params, cfg: ModelConfig, mesh: Mesh) -> dict:
+    """``{param path: SpmdPlan}`` for every packed (TiledCSC/BlockCSR) leaf.
+
+    The plan mirrors the leaf's *resident* sharding from
+    :func:`param_specs` — a Kt grid dim sharded on ``model`` becomes row
+    parallelism, a sharded Nt dim column parallelism — so wrapping the
+    matmul in :func:`repro.runtime.spmd.sod_matmul_spmd` under this plan
+    adds no weight resharding at the shard_map boundary.  Consumed by the
+    dry-run's dispatch report and by per-layer plan plumbing.
+    """
+    from repro.runtime import spmd
+
+    is_packed = lambda l: isinstance(l, (TiledCSC, BlockCSR))
+    flat, _ = jax.tree_util.tree_flatten_with_path(params, is_leaf=is_packed)
+    plans: dict[str, object] = {}
+    for path, leaf in flat:
+        if not is_packed(leaf) or leaf.lead:
+            continue
+        name = jax.tree_util.keystr(path).replace("'", "").replace("]", "")
+        name = name.replace("[", ".")
+        vals = leaf.vals if isinstance(leaf, TiledCSC) else leaf.block_vals
+        vals_spec = _leaf_spec(
+            name + (".vals" if isinstance(leaf, TiledCSC) else ".block_vals"),
+            vals, cfg, mesh)
+        plans[name] = spmd.plan_from_spec(vals_spec, mesh)
+    return plans

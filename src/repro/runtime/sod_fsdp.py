@@ -55,11 +55,21 @@ def sod_fsdp_matmul(x: jax.Array, packed: TiledCSC, mesh: Mesh,
     its dense matmul.  x is replicated across ``axis`` (the usual FSDP
     situation: activations sharded on batch, weights gathered per layer).
 
-    The local decompress+matmul dispatches through the kernel registry
-    (``impl`` as in :func:`repro.kernels.ops.sod_matmul`): tuned Pallas
-    kernels on TPU, the differentiable jnp oracle elsewhere.
+    The gather-then-matmul is the ``gather_axis`` plan of
+    :mod:`repro.runtime.spmd`, so the local decompress+matmul dispatches
+    through the kernel registry with a mesh-qualified problem key: tuned
+    Pallas kernels on TPU (shard_map makes them mesh-legal), the
+    differentiable jnp oracle elsewhere.  Stacked (lead-dim) layouts keep
+    the explicit per-layout gather below.
     """
     nd = packed.vals.ndim
+    if nd == 4:
+        from repro.runtime import spmd
+
+        return spmd.sod_matmul_spmd(
+            x, packed, mesh=mesh, plan=spmd.SpmdPlan(gather_axis=axis),
+            impl=impl, out_dtype=x.dtype)
+
     w_spec = P(*((None,) * (nd - 3) + (axis, None, None)))
 
     def body(x_l, vals_l, rows_l):
@@ -68,7 +78,8 @@ def sod_fsdp_matmul(x: jax.Array, packed: TiledCSC, mesh: Mesh,
         vals = jax.lax.all_gather(vals_l, axis, axis=nd - 3, tiled=True)
         rows = jax.lax.all_gather(rows_l, axis, axis=nd - 3, tiled=True)
         w = TiledCSC(vals, rows, packed.shape, packed.tile)
-        return ops.sod_matmul(x_l, w, impl=impl, out_dtype=x_l.dtype)
+        return ops.sod_matmul(x_l, w, impl=impl, out_dtype=x_l.dtype,
+                              spmd=None)
 
     fn = shard_map(
         body, mesh=mesh,

@@ -1,0 +1,436 @@
+"""SPMD execution layer: shard_map wrappers that make every kernel-registry
+impl mesh-legal inside pjit-sharded model steps.
+
+``pallas_call`` has no GSPMD partitioning rule, so tracing a Pallas kernel
+directly under a sharded ``pjit`` step either fails or forces the whole
+operand to one device — which is why cold-cache TPU dispatch historically
+fell back to the XLA scatter+dot oracle (``registry.choose``).  This module
+closes that gap the way the paper's datapath wants it closed: keep the
+*compressed* operand at the memory/interconnect boundary, re-densify
+per-chip, and keep the dense MXU kernel saturated.  Concretely, a matmul is
+wrapped in ``shard_map`` under a partition *plan*:
+
+* **data-parallel M-sharding** (``batch_axes``) — the flattened batch rows
+  split across the data axes; every chip runs the full kernel on its row
+  block.  No collectives in forward; the weight cotangent is psummed by the
+  shard_map transpose.
+* **column tensor parallelism** (``col_axis``) — the packed operand's Nt
+  tile-grid dim stays sharded (exactly how ``runtime.sharding`` lays packed
+  projections out on the ``model`` axis); each chip computes its N-slice.
+* **row tensor parallelism** (``row_axis``) — Kt sharded, ``x`` split along
+  K, partial products psummed.
+* **compressed all-gather / SoD-FSDP** (``gather_axis``) — the operand
+  lives sharded on Nt, each chip all-gathers the *compressed* (vals, rows)
+  payload (≈1.5·density of the dense bytes) and decompresses locally before
+  the dense matmul — the :mod:`repro.runtime.sod_fsdp` pattern, now
+  available to every registry impl.
+
+Inside the body the per-device problem is plain single-device code, so
+dispatch goes through the ordinary registry/autotune resolver — with the
+mesh signature in the :class:`~repro.kernels.registry.ProblemKey`, so tuned
+tiles are per-*local-shard* (m/dp, k, n/tp), never confused with the global
+shape, and ``registry.choose`` knows the Pallas impls are legal here.
+
+Gradients: the kernels' custom VJPs (:mod:`repro.kernels.vjp`) run inside
+the body; ``shard_map``'s transpose inserts the psums the plan implies
+(weight grads over ``batch_axes``, activation grads over ``col_axis``) and
+carries the integer leaves' ``float0`` cotangents through, so padding slots
+keep their exactly-zero gradients under every plan.
+"""
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # moved out of experimental in newer jax
+    from jax.experimental.shard_map import shard_map
+except ImportError:  # pragma: no cover - version dependent
+    from jax import shard_map
+
+from repro.core.formats import BlockCSR, TiledCSC
+from repro.kernels import registry
+
+__all__ = [
+    "SpmdPlan",
+    "active_mesh",
+    "in_spmd_body",
+    "mesh_key",
+    "auto_plan",
+    "plan_from_spec",
+    "packed_specs",
+    "sod_matmul_spmd",
+    "warmup_params_spmd",
+]
+
+_IN_BODY = contextvars.ContextVar("repro_spmd_in_body", default=False)
+
+
+def in_spmd_body() -> bool:
+    """True while tracing inside one of this module's shard_map bodies —
+    the guard :func:`repro.kernels.ops.sod_matmul` uses to avoid wrapping a
+    shard_map inside a shard_map."""
+    return _IN_BODY.get()
+
+
+def active_mesh() -> Mesh | None:
+    """The mesh of an enclosing ``with mesh:`` block, or None."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if not mesh.empty:
+            return mesh
+    except Exception:  # pragma: no cover - jax-version dependent internals
+        pass
+    try:  # newer jax: jax.sharding.use_mesh / get_abstract_mesh
+        from jax.sharding import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def mesh_key(mesh: Mesh) -> str:
+    """Stable signature of a mesh's (axis, size) layout: ``data=4,model=2``."""
+    return ",".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpmdPlan:
+    """How one packed matmul is partitioned over the mesh.
+
+    ``col_axis``, ``row_axis`` and ``gather_axis`` are mutually exclusive
+    weight shardings (Nt-local, Kt-local, Nt-gathered); ``batch_axes`` may
+    combine with any of them.
+    """
+
+    batch_axes: tuple[str, ...] = ()
+    col_axis: str | None = None
+    row_axis: str | None = None
+    gather_axis: str | None = None
+
+    def __post_init__(self):
+        w_axes = [a for a in (self.col_axis, self.row_axis, self.gather_axis)
+                  if a is not None]
+        if len(w_axes) > 1:
+            raise ValueError(f"plan shards the weight twice: {self}")
+        if set(w_axes) & set(self.batch_axes):
+            raise ValueError(f"axis both batch and weight sharded: {self}")
+
+    def signature(self) -> str:
+        parts = []
+        if self.batch_axes:
+            parts.append("dp=" + "+".join(self.batch_axes))
+        if self.col_axis:
+            parts.append(f"col={self.col_axis}")
+        if self.row_axis:
+            parts.append(f"row={self.row_axis}")
+        if self.gather_axis:
+            parts.append(f"gather={self.gather_axis}")
+        return ";".join(parts) or "replicated"
+
+    def axes(self) -> tuple[str, ...]:
+        return self.batch_axes + tuple(
+            a for a in (self.col_axis, self.row_axis, self.gather_axis)
+            if a is not None)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _grid(w) -> tuple[int, int]:
+    return tuple(int(g) for g in w.grid)
+
+
+def auto_plan(mesh: Mesh, w, m: int | None = None) -> SpmdPlan | None:
+    """Default plan for a packed matmul on ``mesh``, or None when wrapping
+    isn't applicable (single device, stacked/lead layouts).
+
+    Batch rows shard over the data axes; the Nt grid dim additionally
+    shards over ``model`` when it divides — matching how
+    :mod:`repro.runtime.sharding` lays packed projection weights out, so
+    the shard_map in_specs coincide with the parameters' resident sharding
+    and GSPMD inserts no weight resharding at the boundary.
+    """
+    if not isinstance(w, (TiledCSC, BlockCSR)) or w.lead:
+        return None
+    if _axes_size(mesh, mesh.axis_names) <= 1:
+        return None
+    batch = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if not batch:
+        batch = tuple(a for a in mesh.axis_names if a != "model")
+    col = None
+    if "model" in mesh.axis_names:
+        _, nt = _grid(w)
+        if mesh.shape["model"] > 1 and nt % mesh.shape["model"] == 0:
+            col = "model"
+    if not batch and col is None:
+        return None
+    return SpmdPlan(batch_axes=batch, col_axis=col)
+
+
+def plan_from_spec(vals_spec: P, mesh: Mesh, grid_dims: tuple[int, int] = (0, 1)
+                   ) -> SpmdPlan:
+    """Plan matching a packed leaf's resident PartitionSpec (the output of
+    :func:`repro.runtime.sharding.param_specs` for its ``vals`` array):
+    a sharded Kt grid dim becomes row parallelism, a sharded Nt dim column
+    parallelism, and batch rows ride the data axes either way."""
+    spec = tuple(vals_spec)
+    kt_dim, nt_dim = grid_dims
+    kt_ax = spec[kt_dim] if kt_dim < len(spec) else None
+    nt_ax = spec[nt_dim] if nt_dim < len(spec) else None
+    if isinstance(kt_ax, tuple):
+        kt_ax = kt_ax[0] if kt_ax else None
+    if isinstance(nt_ax, tuple):
+        nt_ax = nt_ax[0] if nt_ax else None
+    batch = tuple(a for a in mesh.axis_names
+                  if a in ("pod", "data") and a not in (kt_ax, nt_ax))
+    return SpmdPlan(batch_axes=batch, col_axis=nt_ax, row_axis=kt_ax)
+
+
+# ---------------------------------------------------------------------------
+# spec trees / local containers
+# ---------------------------------------------------------------------------
+def packed_specs(w, kt_ax: str | None = None, nt_ax: str | None = None):
+    """Same-container-type pytree of PartitionSpecs for the packed leaves,
+    sharding the (Kt, Nt) tile-grid dims on the given axes."""
+    if isinstance(w, TiledCSC):
+        s = P(kt_ax, nt_ax, None, None)
+        return TiledCSC(vals=s, rows=s, shape=w.shape, tile=w.tile)
+    if isinstance(w, BlockCSR):
+        return BlockCSR(
+            block_vals=P(kt_ax, nt_ax, None, None, None),
+            block_ids=P(kt_ax, nt_ax, None),
+            tile_nnz=P(kt_ax, nt_ax),
+            shape=w.shape, tile=w.tile, br=w.br)
+    raise TypeError(f"not a packed operand: {type(w)}")
+
+
+def _with_shape(w, shape: tuple[int, int]):
+    """Container with the same leaves but a different logical shape — used
+    to restate a shard's leaves as a standalone local problem."""
+    if isinstance(w, TiledCSC):
+        return TiledCSC(vals=w.vals, rows=w.rows, shape=shape, tile=w.tile)
+    return BlockCSR(block_vals=w.block_vals, block_ids=w.block_ids,
+                    tile_nnz=w.tile_nnz, shape=shape, tile=w.tile, br=w.br)
+
+
+def _gather_packed(w, axis: str):
+    """All-gather the compressed leaves along their Nt grid dim — the
+    SoD-FSDP collective: ≈1.5·density of the dense bytes cross the links."""
+    if isinstance(w, TiledCSC):
+        return TiledCSC(
+            vals=jax.lax.all_gather(w.vals, axis, axis=1, tiled=True),
+            rows=jax.lax.all_gather(w.rows, axis, axis=1, tiled=True),
+            shape=w.shape, tile=w.tile)
+    return BlockCSR(
+        block_vals=jax.lax.all_gather(w.block_vals, axis, axis=1, tiled=True),
+        block_ids=jax.lax.all_gather(w.block_ids, axis, axis=1, tiled=True),
+        tile_nnz=jax.lax.all_gather(w.tile_nnz, axis, axis=1, tiled=True),
+        shape=w.shape, tile=w.tile, br=w.br)
+
+
+def _validate(plan: SpmdPlan, mesh: Mesh, w) -> None:
+    names = set(mesh.axis_names)
+    for a in plan.axes():
+        if a not in names:
+            raise ValueError(f"plan axis {a!r} not in mesh {mesh.axis_names}")
+    kt, nt = _grid(w)
+    if plan.col_axis and nt % mesh.shape[plan.col_axis]:
+        raise ValueError(
+            f"Nt={nt} not divisible by {plan.col_axis}={mesh.shape[plan.col_axis]}")
+    if plan.gather_axis and nt % mesh.shape[plan.gather_axis]:
+        raise ValueError(
+            f"Nt={nt} not divisible by {plan.gather_axis}="
+            f"{mesh.shape[plan.gather_axis]}")
+    if plan.row_axis and kt % mesh.shape[plan.row_axis]:
+        raise ValueError(
+            f"Kt={kt} not divisible by {plan.row_axis}={mesh.shape[plan.row_axis]}")
+
+
+# ---------------------------------------------------------------------------
+# the wrapper
+# ---------------------------------------------------------------------------
+def sod_matmul_spmd(
+    x: jax.Array,
+    w,
+    *,
+    mesh: Mesh | None = None,
+    plan: SpmdPlan | None = None,
+    impl: str = "auto",
+    bm: int | None = None,
+    out_dtype=None,
+    backend: str | None = None,
+    params: dict | None = None,
+) -> jax.Array:
+    """``x @ W`` with the registry impl running inside ``shard_map``.
+
+    ``x``: (..., K); returns (..., N).  Rows (and K under row parallelism)
+    are zero-padded to divide the mesh and sliced back after — padding is
+    differentiable, so grads keep their logical shapes.
+    """
+    mesh = mesh or active_mesh()
+    if mesh is None:
+        raise ValueError("sod_matmul_spmd needs a mesh (arg or `with mesh:`)")
+    if plan is None:
+        plan = auto_plan(mesh, w)
+        if plan is None:
+            raise ValueError(f"no auto plan for {type(w).__name__} on "
+                             f"{mesh_key(mesh)}")
+    _validate(plan, mesh, w)
+    out_dtype = out_dtype or x.dtype
+    backend = backend or registry.current_backend()
+
+    k_logical, n_logical = (int(s) for s in w.shape)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    m = x2.shape[0]
+    kt, nt = _grid(w)
+    bk, bn = (int(t) for t in w.tile)
+
+    dp = _axes_size(mesh, plan.batch_axes)
+    m_pad = (-m) % dp
+    row_shards = mesh.shape[plan.row_axis] if plan.row_axis else 1
+    k_pad = kt * bk - k_logical if row_shards > 1 else 0
+    if m_pad or k_pad:
+        x2 = jnp.pad(x2, ((0, m_pad), (0, k_pad)))
+    m_local = (m + m_pad) // dp
+
+    col_shards = mesh.shape[plan.col_axis] if plan.col_axis else 1
+    # local logical shape of the per-shard problem: full tile slabs when a
+    # grid dim is sharded (the wrapper slices the global padding tail off
+    # the reassembled output), the true logical size otherwise
+    k_local = (kt // row_shards) * bk if row_shards > 1 else k_logical
+    n_local = (nt // col_shards) * bn if col_shards > 1 else n_logical
+
+    mesh_sig = f"{mesh_key(mesh)}|{plan.signature()}"
+    batch_spec = plan.batch_axes if plan.batch_axes else None
+    x_spec = P(batch_spec, plan.row_axis)
+    y_spec = P(batch_spec, plan.col_axis)
+    w_specs = packed_specs(w, kt_ax=plan.row_axis,
+                           nt_ax=plan.col_axis or plan.gather_axis)
+
+    def body(x_l, w_l):
+        from repro.kernels import ops  # deferred: runtime layers over kernels
+
+        token = _IN_BODY.set(True)
+        try:
+            if plan.gather_axis:
+                w_l = _gather_packed(w_l, plan.gather_axis)
+            w_loc = _with_shape(w_l, (k_local, n_local))
+            key = registry.problem_key(w_loc, m=m_local, backend=backend,
+                                       mesh=mesh_sig)
+            chosen, run_params = ops.resolve(key, impl, params=params, bm=bm)
+            y = chosen.run(x_l, w_loc, out_dtype=out_dtype, backend=backend,
+                           **run_params)
+            if plan.row_axis:
+                y = jax.lax.psum(y, plan.row_axis)
+            return y
+        finally:
+            _IN_BODY.reset(token)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(x_spec, w_specs),
+                   out_specs=y_spec, check_rep=False)
+    y = fn(x2, w)
+    y = y[:m, :n_logical]
+    return y.reshape(*lead, n_logical)
+
+
+# ---------------------------------------------------------------------------
+# per-shard autotuning (what launch --autotune does under a mesh)
+# ---------------------------------------------------------------------------
+def _local_packed(w, mesh: Mesh, plan: SpmdPlan):
+    """A concrete one-shard slice of ``w`` under ``plan`` — the local
+    problem the shard_map body sees, suitable for single-device tuning."""
+    kt, nt = _grid(w)
+    row = mesh.shape[plan.row_axis] if plan.row_axis else 1
+    col = mesh.shape[plan.col_axis] if plan.col_axis else 1
+    if row == 1 and col == 1:
+        return w
+    bk, bn = (int(t) for t in w.tile)
+    kt_l, nt_l = kt // row, nt // col
+    k_l = kt_l * bk if row > 1 else int(w.shape[0])
+    n_l = nt_l * bn if col > 1 else int(w.shape[1])
+    if isinstance(w, TiledCSC):
+        return TiledCSC(vals=w.vals[:kt_l, :nt_l], rows=w.rows[:kt_l, :nt_l],
+                        shape=(k_l, n_l), tile=w.tile)
+    return BlockCSR(block_vals=w.block_vals[:kt_l, :nt_l],
+                    block_ids=w.block_ids[:kt_l, :nt_l],
+                    tile_nnz=w.tile_nnz[:kt_l, :nt_l],
+                    shape=(k_l, n_l), tile=w.tile, br=w.br)
+
+
+def warmup_params_spmd(
+    params,
+    m_values,
+    mesh: Mesh,
+    *,
+    plan: SpmdPlan | None = None,
+    backend: str | None = None,
+    cache=None,
+    iters: int = 1,
+    seed: int = 0,
+) -> dict:
+    """Tune every distinct packed layout at its per-local-shard shape.
+
+    Mirrors :func:`repro.kernels.autotune.warmup_params` but slices each
+    layout down to one shard of ``plan`` (default: the auto plan) and keys
+    the entries with the mesh signature, so a subsequent mesh run's
+    shard_map bodies hit the cache exactly.  ``m_values`` are *global* row
+    counts (batch·seq); the local m is derived per plan.
+    """
+    from repro.kernels import autotune
+
+    cache = autotune.get_cache() if cache is None else cache
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda l: isinstance(l, (TiledCSC, BlockCSR)))
+    stats = {"tuned": 0, "cached": 0, "skipped": 0}
+    rng = jax.random.PRNGKey(seed)
+    seen: set = set()
+    for leaf in leaves:
+        if not isinstance(leaf, (TiledCSC, BlockCSR)) or leaf.lead:
+            continue
+        p = plan or auto_plan(mesh, leaf)
+        if p is None:
+            stats["skipped"] += 1
+            continue
+        try:
+            _validate(p, mesh, leaf)
+        except ValueError:
+            stats["skipped"] += 1
+            continue
+        local = _local_packed(leaf, mesh, p)
+        sig = (type(leaf).__name__, local.shape, str(local.dtype),
+               tuple(local.tile), p.signature())
+        if sig in seen:
+            continue
+        seen.add(sig)
+        mesh_sig = f"{mesh_key(mesh)}|{p.signature()}"
+        dp = _axes_size(mesh, p.batch_axes)
+        for m in dict.fromkeys(int(v) for v in m_values):
+            m_local = max(-(-m // dp), 1)
+            pk = registry.problem_key(local, m=m_local, backend=backend,
+                                      mesh=mesh_sig)
+            if cache.get(pk) is not None:
+                stats["cached"] += 1
+                continue
+            sig_digest = zlib.crc32(repr(sig).encode())
+            x = jax.random.normal(
+                jax.random.fold_in(rng, (sig_digest ^ m) % (2**31)),
+                (m_local, local.shape[0]), jnp.float32)
+            autotune.tune(x, local, backend=backend, mesh=mesh_sig,
+                          cache=cache, iters=iters)
+            stats["tuned"] += 1
+    return stats
