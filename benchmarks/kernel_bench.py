@@ -163,6 +163,59 @@ def bench_case(m, k, n, density, fmt, *, iters=3, top_k=4,
     }
 
 
+def planner_case(cache=None) -> dict:
+    """Planner-produced pack: the bench gate covers the per-layer plan path
+    (build → pack-through-plan → dispatch under the active plan), not just
+    global-config packing.
+
+    Checks: the planned dispatch matches the jnp oracle on the packed
+    operand, and the planner's per-layer choices never exceed the
+    global-config pack in compressed bytes (the planner's core invariant —
+    it may only swap a layer to a smaller format or leave it dense).
+    """
+    from repro.core import plan as plan_mod
+    from repro.core import sod
+    from repro.core.sod import SoDConfig, sodify_params, tree_weight_bytes
+    from repro.runtime import planner
+
+    key = jax.random.PRNGKey(7)
+
+    def mk(i, shape):
+        return pruning.random_sparse(jax.random.fold_in(key, i), shape, 0.3)
+
+    params = {"blocks": {
+        "mlp": {"w_gate": mk(0, (256, 512)), "w_down": mk(1, (512, 256))},
+        "attn": {"wo": mk(2, (256, 256))},
+    }}
+    sodc = SoDConfig(mode="tiled_csc", density=0.3, min_dim=128)
+    plan = planner.build_plan(params, sodc, cache=cache, m_values=(64,))
+    packed = sodify_params(params, sodc, plan=plan)
+    packed_global = sodify_params(params, sodc)
+    pb = tree_weight_bytes(packed)
+    gb = tree_weight_bytes(packed_global)
+
+    w = packed["blocks"]["mlp"]["w_gate"]
+    x = jax.random.normal(jax.random.fold_in(key, 9), (64, 256), jnp.float32)
+    with plan_mod.use_plan(plan):
+        y = np.asarray(sod.apply(x, w))
+    if hasattr(w, "to_dense"):
+        y_ref = np.asarray(ref.sod_matmul_ref(x, w))
+    else:  # planner left this layer dense
+        y_ref = np.asarray(x @ w)
+    err = float(np.max(np.abs(y - y_ref)))
+    return {
+        "name": "planner_tiled_csc_smoke",
+        "fmt": "planner", "m": 64, "k": 256, "n": 512, "density": 0.3,
+        "plan": {p: e.describe() for p, e in sorted(plan.entries.items())},
+        "compression_ratio": round(pb["compressed"] / max(pb["dense"], 1), 5),
+        "planner_bytes": pb["compressed"],
+        "global_bytes": gb["compressed"],
+        "planner_bytes_le_global": bool(pb["compressed"] <= gb["compressed"]),
+        "max_abs_err": err,
+        "ref_ok": bool(err <= ATOL),
+    }
+
+
 def sweep(smoke=False, iters=None, cache=None) -> dict:
     cases = SWEEP_SMOKE if smoke else SWEEP_FULL
     iters = iters or (3 if smoke else 5)
@@ -185,6 +238,7 @@ def sweep(smoke=False, iters=None, cache=None) -> dict:
                              cache=cache)
         rec["tripwire_retries"] = retries
         records.append(rec)
+    records.append(planner_case(cache=cache))
     return {
         "schema": 1,
         "backend": registry.current_backend(),
@@ -234,13 +288,17 @@ def check_against(result: dict, baseline_path: str, tol=0.2) -> list[str]:
         if not rec["ref_ok"]:
             problems.append(f"{rec['name']}: kernel-vs-ref mismatch "
                             f"(max_abs_err={rec['max_abs_err']:.2e})")
+        if rec.get("planner_bytes_le_global") is False:
+            problems.append(
+                f"{rec['name']}: planner pack {rec['planner_bytes']}B "
+                f"exceeds global-config pack {rec['global_bytes']}B")
         b = base_recs.get(rec["name"])
         if b is not None:
             cr, bcr = rec["compression_ratio"], b["compression_ratio"]
             if abs(cr - bcr) > tol * bcr:
                 problems.append(
                     f"{rec['name']}: compression_ratio {cr} vs baseline {bcr}")
-        if _tripwire_violation(rec, tol):
+        if "tuned" in rec and _tripwire_violation(rec, tol):
             problems.append(
                 f"{rec['name']}: tuned config {rec['tuned']['us']}us lost to "
                 f"default {rec['default']['us']}us by >{tol:.0%} "
@@ -265,10 +323,15 @@ def run():
     result = sweep(smoke=True, cache=scratch)
     rows, mismatches = [], []
     for rec in result["records"]:
-        rows.append((f"kernel_{rec['name']}_default",
-                     rec["default"]["us"], rec["compression_ratio"]))
-        rows.append((f"kernel_{rec['name']}_tuned[{rec['tuned']['impl']}]",
-                     rec["tuned"]["us"], rec["speedup"]))
+        if "default" in rec:
+            rows.append((f"kernel_{rec['name']}_default",
+                         rec["default"]["us"], rec["compression_ratio"]))
+            rows.append(
+                (f"kernel_{rec['name']}_tuned[{rec['tuned']['impl']}]",
+                 rec["tuned"]["us"], rec["speedup"]))
+        else:  # planner record: ratio only, no timed default/tuned pair
+            rows.append((f"kernel_{rec['name']}", 0.0,
+                         rec["compression_ratio"]))
         if not rec["ref_ok"]:
             mismatches.append(
                 f"{rec['name']}: max_abs_err={rec['max_abs_err']:.2e}")
@@ -306,6 +369,11 @@ def main(argv=None) -> int:
     hdr = f"{'case':34s} {'default_us':>11s} {'tuned_us':>9s} {'speedup':>8s} {'tuned impl':>14s} ok"
     print(hdr)
     for rec in result["records"]:
+        if "default" not in rec:   # planner record: bytes, not wall time
+            print(f"{rec['name']:34s} planner {rec['planner_bytes']}B vs "
+                  f"global {rec['global_bytes']}B "
+                  f"{'PASS' if rec['ref_ok'] else 'FAIL'}")
+            continue
         print(f"{rec['name']:34s} {rec['default']['us']:11.1f} "
               f"{rec['tuned']['us']:9.1f} {rec['speedup']:8.2f} "
               f"{rec['tuned']['impl']:>14s} "

@@ -45,6 +45,8 @@ __all__ = [
     "unpack_csc",
     "density",
     "padded_shape",
+    "observed_tiled_cap",
+    "observed_block_cap",
 ]
 
 
@@ -68,6 +70,40 @@ def _pad_to_tiles(w: jax.Array, tile: tuple[int, int]) -> jax.Array:
     if (kp, np_) != (k, n):
         w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
     return w
+
+
+def observed_tiled_cap(w, tile: tuple[int, int]) -> int:
+    """Max per-tile-column non-zero count over a (possibly stacked) matrix —
+    the data-dependent capacity :func:`pack_tiled_csc` uses (unaligned).
+
+    The single source of truth for this number: the packer's stacked branch
+    and the planner's observed-cap pass both call it, so planned capacities
+    can never drift from what a lossless global pack would choose.
+    """
+    w = jnp.asarray(w)
+    if not w.size:
+        return 0
+    bk, bn = tile
+    flat = w.reshape((-1,) + w.shape[-2:])
+    wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
+    kp, np_ = wp.shape[-2:]
+    t = wp.reshape(flat.shape[0], kp // bk, bk, np_ // bn, bn)
+    return int(jnp.max(jnp.sum(t != 0, axis=2)))
+
+
+def observed_block_cap(w, tile: tuple[int, int], br: int) -> int:
+    """Max non-zero (br, bn) sub-block count per macro tile over a (possibly
+    stacked) matrix — the data-dependent bcap :func:`pack_block_csr` uses."""
+    w = jnp.asarray(w)
+    if not w.size:
+        return 0
+    bk, bn = tile
+    flat = w.reshape((-1,) + w.shape[-2:])
+    wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
+    kp, np_ = wp.shape[-2:]
+    blk = wp.reshape(flat.shape[0], kp // bk, bk // br, br, np_ // bn, bn)
+    nz = jnp.any(blk != 0, axis=(3, 5))
+    return int(jnp.max(jnp.sum(nz, axis=2)))
 
 
 # ---------------------------------------------------------------------------
@@ -185,12 +221,7 @@ def pack_tiled_csc(
         lead = w.shape[:-2]
         flat = w.reshape((-1,) + w.shape[-2:])
         if cap is None:
-            bk, bn = tile
-            wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
-            kp, np_ = wp.shape[-2:]
-            t = wp.reshape(-1, kp // bk, bk, np_ // bn, bn)
-            cap = int(jnp.max(jnp.sum(t != 0, axis=2)))
-            cap = max((cap + 7) // 8 * 8, 8)
+            cap = max((observed_tiled_cap(w, tile) + 7) // 8 * 8, 8)
         packed = [pack_tiled_csc(flat[i], tile, cap, index_dtype)
                   for i in range(flat.shape[0])]
         vals = jnp.stack([p.vals for p in packed]).reshape(
@@ -360,11 +391,7 @@ def pack_block_csr(
         lead = w.shape[:-2]
         flat = w.reshape((-1,) + w.shape[-2:])
         if bcap is None:
-            wp = jax.vmap(lambda m: _pad_to_tiles(m, tile))(flat)
-            kp, np_ = wp.shape[-2:]
-            blk = wp.reshape(-1, kp // bk, bk // br, br, np_ // bn, bn)
-            nz = jnp.any(blk != 0, axis=(3, 5))
-            bcap = max(int(jnp.max(jnp.sum(nz, axis=2))), 1)
+            bcap = max(observed_block_cap(w, tile, br), 1)
         packed = [pack_block_csr(flat[i], tile, br, bcap)
                   for i in range(flat.shape[0])]
         return BlockCSR(
@@ -386,8 +413,22 @@ def pack_block_csr(
     tile_nnz = jnp.sum(nz, axis=2).astype(jnp.int32)
     if bcap is None:
         bcap = max(int(jnp.max(tile_nnz)) if w.size else 0, 1)
-    order = jnp.argsort(~nz, axis=2, stable=True)[:, :, :bcap]  # (Kt, Nt, bcap)
-    valid = jnp.take_along_axis(nz, order, axis=2)
+    else:
+        # an explicit (plan-provided) bcap may truncate; tile_nnz must
+        # count the *stored* sub-blocks, not the pre-truncation ones
+        tile_nnz = jnp.minimum(tile_nnz, bcap)
+    # Keep the largest-L2 sub-blocks when bcap truncates (ESE-style load
+    # capping, mirroring pack_tiled_csc's lossy path), then restore
+    # ascending block-index order within the kept set — so the lossless
+    # case (bcap ≥ every tile's count) lays out exactly as a plain
+    # valid-first index-ordered pack.
+    norms = jnp.sum(blocks.astype(jnp.float32) ** 2, axis=(3, 4))
+    sel = jnp.argsort(jnp.where(nz, -norms, jnp.inf), axis=2,
+                      stable=True)[:, :, :bcap]              # (Kt, Nt, bcap)
+    sel_valid = jnp.take_along_axis(nz, sel, axis=2)
+    asc = jnp.argsort(jnp.where(sel_valid, sel, nb), axis=2, stable=True)
+    order = jnp.take_along_axis(sel, asc, axis=2)
+    valid = jnp.take_along_axis(sel_valid, asc, axis=2)
     block_vals = jnp.take_along_axis(
         blocks, order[:, :, :, None, None], axis=2
     )

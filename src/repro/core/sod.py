@@ -23,9 +23,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats, pruning
+from repro.core import plan as plan_mod
 from repro.core.formats import BlockCSR, TiledCSC
+from repro.core.plan import ModelPlan, PackPlan
 
-__all__ = ["SoDConfig", "pack_param", "apply", "weight_bytes", "DENSE"]
+__all__ = ["SoDConfig", "pack_param", "prune_weight", "apply",
+           "weight_bytes", "DENSE"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +55,31 @@ class SoDConfig:
 DENSE = SoDConfig()
 
 
+def prune_weight(w: jax.Array, density: float, method: str = "magnitude",
+                 tile: tuple[int, int] = (128, 128), br: int = 8) -> jax.Array:
+    """Prune one 2-D weight to ``density`` with the named method.
+
+    The single pruning entry point shared by :func:`pack_param`, the
+    stacked-leaf path in :func:`sodify_params`, and the planner — so every
+    path supports all three methods and unknown methods raise instead of
+    silently falling through.
+    """
+    if density >= 1.0:
+        return w
+    if method == "magnitude":
+        return pruning.magnitude_prune(w, density)
+    if method == "block":
+        return pruning.block_prune(w, density, block=(br, tile[1]))
+    if method == "nm":
+        m = 8
+        n = max(int(round(density * m)), 1)
+        pad = (-w.shape[0]) % m
+        return pruning.nm_prune(
+            jnp.pad(w, ((0, pad), (0, 0))), n=n, m=m, axis=0
+        )[: w.shape[0]]
+    raise ValueError(f"unknown prune method {method!r}")
+
+
 def pack_param(w: jax.Array, cfg: SoDConfig, prune: bool = True):
     """Prune (optional) and pack one dense 2-D weight per the config.
 
@@ -61,25 +89,41 @@ def pack_param(w: jax.Array, cfg: SoDConfig, prune: bool = True):
     if not cfg.enabled or w.ndim != 2 or min(w.shape) < cfg.min_dim:
         return w
     if prune and cfg.density < 1.0:
-        if cfg.prune_method == "magnitude":
-            w = pruning.magnitude_prune(w, cfg.density)
-        elif cfg.prune_method == "block":
-            w = pruning.block_prune(w, cfg.density, block=(cfg.br, cfg.tile[1]))
-        elif cfg.prune_method == "nm":
-            m = 8
-            n = max(int(round(cfg.density * m)), 1)
-            pad = (-w.shape[0]) % m
-            w = pruning.nm_prune(
-                jnp.pad(w, ((0, pad), (0, 0))), n=n, m=m, axis=0
-            )[: w.shape[0]]
-        else:
-            raise ValueError(f"unknown prune method {cfg.prune_method!r}")
+        w = prune_weight(w, cfg.density, cfg.prune_method, cfg.tile, cfg.br)
     if cfg.mode == "tiled_csc":
         return formats.pack_tiled_csc(w, tile=cfg.tile)
     return formats.pack_block_csr(w, tile=cfg.tile, br=cfg.br)
 
 
-def apply(x: jax.Array, w, cfg: SoDConfig | None = None, **kw) -> jax.Array:
+def _layout_key(w) -> tuple:
+    """Layout signature of a packed operand — matches
+    :meth:`repro.core.plan.PackPlan.layout_key`."""
+    if isinstance(w, TiledCSC):
+        return ("tiled_csc", tuple(int(s) for s in w.shape),
+                tuple(int(t) for t in w.tile), int(w.cap), 0)
+    return ("block_csr", tuple(int(s) for s in w.shape),
+            tuple(int(t) for t in w.tile), int(w.bcap), int(w.br))
+
+
+def _plan_spmd(entry: PackPlan):
+    """Runtime :class:`repro.runtime.spmd.SpmdPlan` from a plan entry's
+    serialized spmd fields — only when a matching mesh is active."""
+    from repro.runtime import spmd as spmd_mod  # deferred: runtime over core
+
+    mesh = spmd_mod.active_mesh()
+    if mesh is None or spmd_mod.in_spmd_body():
+        return None
+    mp = plan_mod.active_plan()
+    if mp is not None and mp.mesh and mp.mesh != spmd_mod.mesh_key(mesh):
+        return None  # plan was built for a different mesh
+    sp = spmd_mod.SpmdPlan.from_dict(entry.spmd)
+    if not set(sp.axes()) <= set(mesh.axis_names):
+        return None
+    return sp
+
+
+def apply(x: jax.Array, w, cfg: SoDConfig | None = None,
+          plan: PackPlan | None = None, **kw) -> jax.Array:
     """``x @ W`` through the Sparse-on-Dense datapath.
 
     Packed operands dispatch through the kernel registry
@@ -88,10 +132,16 @@ def apply(x: jax.Array, w, cfg: SoDConfig | None = None, **kw) -> jax.Array:
     or the cost-model-prior default on a cold cache — the differentiable jnp
     oracle on CPU, the fused Pallas kernel on TPU/interpret.  ``impl`` may
     force ``jnp`` or ``pallas`` explicitly.
+
+    ``plan`` is the layer's :class:`~repro.core.plan.PackPlan` (model blocks
+    thread it through); when omitted and a :class:`~repro.core.plan.ModelPlan`
+    is active (:func:`repro.core.plan.use_plan`), the operand's layout
+    signature resolves it.  The plan supplies the impl hint, tuned dispatch
+    parameters, and the per-layer SPMD partition plan — explicit kwargs
+    always win.
     """
     from repro.kernels import ops  # local import: kernels depend on core
 
-    impl = kw.pop("impl", cfg.impl if cfg else "auto")
     if isinstance(w, (TiledCSC, BlockCSR)):
         if w.lead:
             # Stacked layouts (lax.scan layer stacks / experts) keep the
@@ -99,7 +149,26 @@ def apply(x: jax.Array, w, cfg: SoDConfig | None = None, **kw) -> jax.Array:
             return jnp.dot(
                 x, w.to_dense(), preferred_element_type=jnp.float32
             ).astype(kw.pop("out_dtype", x.dtype))
+        if plan is None:
+            plan = plan_mod.lookup_active(_layout_key(w))
+        if plan is not None:
+            # an explicit impl= from the caller (e.g. debugging a kernel at
+            # its defaults) disables the plan's impl hint AND its params
+            user_forced = "impl" in kw
+            if not user_forced and plan.impl != "auto":
+                kw["impl"] = plan.impl
+            if (plan.dispatch_params and not user_forced
+                    and "fallback_params" not in kw):
+                # hint seeds cold-cache dispatch only; a measured tuning-
+                # cache entry for the actual (layout, M) always wins
+                kw["fallback_params"] = plan.dispatch_params
+            if plan.spmd and kw.get("spmd", "auto") == "auto":
+                sp = _plan_spmd(plan)
+                if sp is not None:
+                    kw["spmd"] = sp
+        impl = kw.pop("impl", cfg.impl if cfg else "auto")
         return ops.sod_matmul(x, w, impl=impl, **kw)
+    kw.pop("impl", None)
     return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
         kw.pop("out_dtype", x.dtype)
     )
@@ -110,13 +179,10 @@ def expected_cap(bk: int, density: float) -> int:
 
     mean + 4σ of Binomial(bk, density), sublane-aligned — the deterministic
     cap the dry-run uses so abstract shapes don't depend on weight values.
+    (The math lives in :mod:`repro.core.plan` next to the other shared
+    sizing functions; this re-export keeps the historical name.)
     """
-    import math
-
-    mean = bk * density
-    sigma = math.sqrt(max(bk * density * (1 - density), 1e-9))
-    cap = min(bk, int(math.ceil(mean + 4 * sigma)))
-    return max((cap + 7) // 8 * 8, 8)
+    return plan_mod.expected_cap(bk, density)
 
 
 _SOD_PATHS = re.compile(
@@ -131,28 +197,101 @@ def _packable(name: str, leaf) -> bool:
     )
 
 
-def sodify_params(params, cfg: SoDConfig, prune: bool = True):
-    """Pack every eligible 2-D projection weight in a param pytree."""
-    if not cfg.enabled:
+def _prune_leaf(leaf, density: float, method: str, tile: tuple[int, int],
+                br: int):
+    """Prune one (possibly stacked) leaf — the single per-slice prune loop
+    shared by :func:`sodify_params`, :func:`_pack_planned` and the
+    planner's observed-capacity pass."""
+    if leaf.ndim == 2:
+        return prune_weight(leaf, density, method, tile, br)
+    lead = leaf.shape[:-2]
+    flat_w = leaf.reshape((-1,) + leaf.shape[-2:])
+    flat_w = jnp.stack([
+        prune_weight(flat_w[i], density, method, tile, br)
+        for i in range(flat_w.shape[0])
+    ])
+    return flat_w.reshape(lead + leaf.shape[-2:])
+
+
+def _check_plan_truncation(name: str, w, packed) -> None:
+    """Warn when a plan's fixed capacity dropped non-zeros.
+
+    A plan built from abstract shapes budgets capacities statistically
+    (mean + 4σ); weights whose survivors cluster by column can need more.
+    Packing still succeeds (ESE-style load capping, largest-|value| kept)
+    but the replay is then lossy — that must never be silent.
+    """
+    import warnings
+
+    total = int(jnp.count_nonzero(w))
+    if isinstance(packed, TiledCSC):
+        stored = int(jnp.sum(packed.rows >= 0))
+    else:
+        # invalid blocks are zeroed; valid blocks store raw values
+        stored = int(jnp.count_nonzero(packed.block_vals))
+    if stored < total:
+        warnings.warn(
+            f"pack plan capacity truncated {total - stored} of {total} "
+            f"non-zeros on {name!r} (cap budget below the data's "
+            f"requirement); re-plan against concrete weights or raise the "
+            f"entry's cap/bcap", stacklevel=2)
+
+
+def _pack_planned(name: str, leaf, entry: PackPlan, prune: bool):
+    """Prune + pack one leaf per its :class:`~repro.core.plan.PackPlan`.
+
+    The plan's explicit ``cap``/``bcap`` (not the data) size the containers,
+    so a plan built against abstract shapes replays on concrete weights with
+    byte-identical layouts — and hence identical tuning-cache keys.  A
+    ``mode="dense"`` entry stores the layer dense but still prunes it — the
+    plan chooses the storage format, not whether the layer is sparse.
+    """
+    if getattr(leaf, "ndim", 0) < 2:
+        return leaf
+    w = leaf
+    if prune and entry.density < 1.0:
+        w = _prune_leaf(w, entry.density, entry.prune_method, entry.tile,
+                        entry.br)
+    if entry.mode == "dense":
+        return w
+    if entry.mode == "tiled_csc":
+        packed = formats.pack_tiled_csc(w, tile=entry.tile, cap=entry.cap)
+    else:
+        packed = formats.pack_block_csr(w, tile=entry.tile, br=entry.br,
+                                        bcap=entry.bcap)
+    _check_plan_truncation(name, w, packed)
+    return packed
+
+
+def sodify_params(params, cfg: SoDConfig, prune: bool = True,
+                  plan: ModelPlan | None = None):
+    """Pack every eligible 2-D projection weight in a param pytree.
+
+    With a :class:`~repro.core.plan.ModelPlan` (see
+    :mod:`repro.runtime.planner`) each leaf follows its own per-layer entry
+    — format, tile, explicit capacity — and unplanned leaves stay dense
+    (strict replay: the packed tree is exactly what the plan says, nothing
+    more).  Without a plan, behaviour is the historical global-config pack
+    with data-dependent (lossless) capacities.
+    """
+    if plan is None and not cfg.enabled:
         return params
     flat, treedef = _flatten_named(params)
     out = []
     for name, leaf in flat:
+        if plan is not None:
+            entry = plan.get(name)
+            out.append(leaf if entry is None
+                       else _pack_planned(name, leaf, entry, prune))
+            continue
         if _packable(name, leaf) and min(leaf.shape[-2:]) >= cfg.min_dim:
             if leaf.ndim == 2:
                 out.append(pack_param(leaf, cfg, prune=prune))
             else:
-                lead = leaf.shape[:-2]
-                flat_w = leaf.reshape((-1,) + leaf.shape[-2:])
+                w = leaf
                 if prune and cfg.density < 1.0:
-                    flat_w = jnp.stack([
-                        pruning.magnitude_prune(flat_w[i], cfg.density)
-                        if cfg.prune_method == "magnitude" else
-                        pruning.block_prune(flat_w[i], cfg.density,
-                                            block=(cfg.br, cfg.tile[1]))
-                        for i in range(flat_w.shape[0])
-                    ])
-                w = flat_w.reshape(lead + leaf.shape[-2:])
+                    w = _prune_leaf(w, cfg.density, cfg.prune_method,
+                                    cfg.tile, cfg.br)
                 if cfg.mode == "tiled_csc":
                     out.append(formats.pack_tiled_csc(w, tile=cfg.tile))
                 else:
@@ -163,38 +302,76 @@ def sodify_params(params, cfg: SoDConfig, prune: bool = True):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def sodify_abstract(params_sds, cfg: SoDConfig):
-    """ShapeDtypeStruct version for the dry-run: deterministic cap."""
-    if not cfg.enabled:
+def _abstract_tiled(lead, k, n, dtype, tile, cap) -> TiledCSC:
+    bk, bn = tile
+    kt, nt = -(-k // bk), -(-n // bn)
+    idx = jnp.int8 if bk <= 128 else jnp.int32
+    return TiledCSC(
+        vals=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), dtype),
+        rows=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), idx),
+        shape=(k, n), tile=tuple(tile))
+
+
+def _abstract_block(lead, k, n, dtype, tile, br, bcap) -> BlockCSR:
+    bk, bn = tile
+    kt, nt = -(-k // bk), -(-n // bn)
+    return BlockCSR(
+        block_vals=jax.ShapeDtypeStruct(lead + (kt, nt, bcap, br, bn), dtype),
+        block_ids=jax.ShapeDtypeStruct(lead + (kt, nt, bcap), jnp.int32),
+        tile_nnz=jax.ShapeDtypeStruct(lead + (kt, nt), jnp.int32),
+        shape=(k, n), tile=tuple(tile), br=br)
+
+
+def sodify_abstract(params_sds, cfg: SoDConfig,
+                    plan: ModelPlan | None = None):
+    """ShapeDtypeStruct version for the dry-run: deterministic capacities.
+
+    With a plan, each entry's explicit ``cap``/``bcap`` is used — the exact
+    shapes :func:`sodify_params` produces under the same plan.  Without one,
+    capacities come from the shared sizing functions in
+    :mod:`repro.core.plan` (:func:`~repro.core.plan.tiled_cap` /
+    :func:`~repro.core.plan.block_bcap`), the same budgets the planner
+    assigns when it has no weight values to observe.
+    """
+    if plan is None and not cfg.enabled:
         return params_sds
     flat, treedef = _flatten_named(params_sds)
     bk, bn = cfg.tile
     out = []
     for name, leaf in flat:
+        if plan is not None:
+            entry = plan.get(name)
+            if entry is None or entry.mode == "dense":
+                out.append(leaf)
+                continue
+            lead = tuple(leaf.shape[:-2])
+            k, n = leaf.shape[-2:]
+            if entry.mode == "tiled_csc":
+                cap = entry.cap if entry.cap is not None else \
+                    plan_mod.tiled_cap(entry.tile[0], entry.density)
+                out.append(_abstract_tiled(lead, k, n, leaf.dtype,
+                                           entry.tile, cap))
+            else:
+                bcap = entry.bcap if entry.bcap is not None else \
+                    plan_mod.block_bcap(
+                        entry.tile[0] // entry.br, entry.density,
+                        entry.prune_method, entry.br * entry.tile[1])
+                out.append(_abstract_block(lead, k, n, leaf.dtype,
+                                           entry.tile, entry.br, bcap))
+            continue
         if not (_packable(name, leaf) and min(leaf.shape[-2:]) >= cfg.min_dim):
             out.append(leaf)
             continue
         lead = tuple(leaf.shape[:-2])
         k, n = leaf.shape[-2:]
-        kt, nt = -(-k // bk), -(-n // bn)
         if cfg.mode == "tiled_csc":
-            cap = expected_cap(bk, cfg.density)
-            idx = jnp.int8 if bk <= 128 else jnp.int32
-            out.append(TiledCSC(
-                vals=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn),
-                                          leaf.dtype),
-                rows=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), idx),
-                shape=(k, n), tile=cfg.tile))
+            cap = plan_mod.tiled_cap(bk, cfg.density)
+            out.append(_abstract_tiled(lead, k, n, leaf.dtype, cfg.tile, cap))
         else:
-            nb = bk // cfg.br
-            bcap = max(min(int(nb * cfg.density * 1.5 + 2), nb), 1)
-            out.append(BlockCSR(
-                block_vals=jax.ShapeDtypeStruct(
-                    lead + (kt, nt, bcap, cfg.br, bn), leaf.dtype),
-                block_ids=jax.ShapeDtypeStruct(lead + (kt, nt, bcap),
-                                               jnp.int32),
-                tile_nnz=jax.ShapeDtypeStruct(lead + (kt, nt), jnp.int32),
-                shape=(k, n), tile=cfg.tile, br=cfg.br))
+            bcap = plan_mod.block_bcap(bk // cfg.br, cfg.density,
+                                       cfg.prune_method, cfg.br * bn)
+            out.append(_abstract_block(lead, k, n, leaf.dtype, cfg.tile,
+                                       cfg.br, bcap))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 

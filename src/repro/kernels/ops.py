@@ -53,14 +53,26 @@ def _as_2d(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
 
 def resolve(key: "registry.ProblemKey", impl: str,
             params: dict | None = None,
-            bm: int | None = None) -> tuple["registry.KernelImpl", dict]:
+            bm: int | None = None,
+            fallback_params: dict | None = None,
+            ) -> tuple["registry.KernelImpl", dict]:
     """(impl, run_params) for a problem key — the one dispatch resolver.
 
     Shared by the local path below and the shard_map bodies in
     :mod:`repro.runtime.spmd`, so mesh dispatch sees exactly the same
     tuned-entry/prior/forcing semantics as single-device dispatch.
+
+    ``params`` always overrides the tuned/default choice;
+    ``fallback_params`` (a pack plan's dispatch hint) only seeds dispatch
+    when no measured tuning-cache entry was found — a hint recorded at one
+    M must never override a winner tuned at another.  Under forced impls
+    the cache is never consulted, so the hint applies over the forced
+    impl's defaults (``sod.apply`` only passes both together when the
+    forcing came from the same plan entry as the hint; a caller-forced
+    ``impl=`` suppresses the hint there).
     """
     fmt = key.fmt
+    tuned = None
     if impl in _FORCED:
         chosen = registry.get_impl(_FORCED[impl][fmt])
         run_params = chosen.default_params(key)
@@ -68,9 +80,18 @@ def resolve(key: "registry.ProblemKey", impl: str,
     elif impl == "auto":
         from repro.kernels import autotune  # deferred: autotune imports registry
 
-        chosen, run_params = registry.choose(key, tuned=autotune.lookup(key))
+        tuned = autotune.lookup(key)
+        chosen, run_params = registry.choose(key, tuned=tuned)
     else:
         raise ValueError(f"unknown impl {impl!r}; want auto | jnp | pallas")
+    amend = False
+    if fallback_params and tuned is None:
+        run_params = dict(run_params)
+        run_params.update(
+            (k, v) for k, v in fallback_params.items()
+            if k in chosen.param_space(key)
+        )
+        amend = True
     if params:
         run_params = dict(run_params)
         run_params.update(
@@ -79,7 +100,7 @@ def resolve(key: "registry.ProblemKey", impl: str,
         )
     if bm is not None and "bm" in chosen.param_space(key):
         run_params = dict(run_params, bm=bm)
-    if params or bm is not None:
+    if params or bm is not None or amend:
         registry.amend_last_dispatch(key, chosen, run_params)
     return chosen, run_params
 
@@ -94,6 +115,7 @@ def sod_matmul(
     out_dtype=None,
     backend: str | None = None,
     params: dict | None = None,
+    fallback_params: dict | None = None,
     spmd: object = "auto",
 ) -> jax.Array:
     """``x @ W`` where ``W`` is dense, :class:`TiledCSC` or :class:`BlockCSR`.
@@ -137,11 +159,13 @@ def sod_matmul(
             if plan is not None:
                 return spmd_mod.sod_matmul_spmd(
                     x, w, mesh=mesh, plan=plan, impl=impl, bm=bm,
-                    out_dtype=out_dtype, backend=backend, params=params)
+                    out_dtype=out_dtype, backend=backend, params=params,
+                    fallback_params=fallback_params)
 
     x2, lead = _as_2d(x)
     key = registry.problem_key(w, m=x2.shape[0], backend=backend)
-    chosen, run_params = resolve(key, impl, params=params, bm=bm)
+    chosen, run_params = resolve(key, impl, params=params, bm=bm,
+                                 fallback_params=fallback_params)
     y = chosen.run(x2, w, out_dtype=out_dtype, backend=backend, **run_params)
     return y.reshape(*lead, n_logical)
 

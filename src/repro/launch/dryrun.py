@@ -93,11 +93,11 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
-def _build_from_cfg(cfg, shape, mesh):
+def _build_from_cfg(cfg, shape, mesh, plan=None):
     """jit'd step + abstract args for one (config × shape) on a mesh."""
     model = LM(cfg)
     params = specs_mod.abstract_params(
-        model, cfg.sod if cfg.sod.enabled else None)
+        model, cfg.sod if cfg.sod.enabled else None, plan=plan)
     p_specs = shard_mod.param_specs(params, cfg, mesh)
     p_sh = shard_mod.to_shardings(p_specs, mesh)
     inputs = specs_mod.input_specs(cfg, shape)
@@ -109,14 +109,14 @@ def _build_from_cfg(cfg, shape, mesh):
         o_sh = shard_mod.to_shardings(o_specs, mesh)
         b_specs = shard_mod.batch_specs(inputs["batch"], mesh)
         b_sh = shard_mod.to_shardings(b_specs, mesh)
-        step = steps_mod.make_train_step(model, opt, mesh=mesh)
+        step = steps_mod.make_train_step(model, opt, mesh=mesh, plan=plan)
         jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
                          out_shardings=(p_sh, o_sh, None))
         args = (params, opt_state, inputs["batch"])
     elif shape.kind == "prefill":
         b_specs = shard_mod.batch_specs(inputs["batch"], mesh)
         b_sh = shard_mod.to_shardings(b_specs, mesh)
-        step = steps_mod.make_prefill_step(model, mesh=mesh)
+        step = steps_mod.make_prefill_step(model, mesh=mesh, plan=plan)
         jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
         args = (params, inputs["batch"])
     else:  # decode
@@ -125,7 +125,7 @@ def _build_from_cfg(cfg, shape, mesh):
             seq_len=shape.seq_len,
             seq_shard=os.environ.get("SOD_SEQ_SHARD_CACHE", "1") == "1")
         c_sh = shard_mod.to_shardings(c_specs, mesh)
-        step = steps_mod.make_decode_step(model, mesh=mesh)
+        step = steps_mod.make_decode_step(model, mesh=mesh, plan=plan)
         jitted = jax.jit(
             step, in_shardings=(p_sh, c_sh, None, None),
             out_shardings=(None, None, c_sh),
@@ -134,9 +134,29 @@ def _build_from_cfg(cfg, shape, mesh):
     return jitted, args
 
 
+def _plan_for_cell(cfg, shape, mesh, plan_path: str | None):
+    """Per-layer pack plan for a dry-run cell: replayed from ``plan_path``
+    when given, else built by the planner against the cell's abstract
+    shapes, mesh, and the persisted tuning cache."""
+    if not cfg.sod.enabled:
+        return None
+    from repro.core.plan import ModelPlan
+    from repro.runtime import planner
+
+    if plan_path:
+        return ModelPlan.load(plan_path)
+    shapes = jax.eval_shape(lambda: LM(cfg).init(jax.random.PRNGKey(0)))
+    m_probe = shape.global_batch * (shape.seq_len
+                                    if shape.kind != "decode" else 1)
+    return planner.build_plan(
+        shapes, cfg.sod, cfg=cfg, mesh=mesh,
+        m_values=(max(min(m_probe, 4096), 1), shape.global_batch))
+
+
 def build_cell(arch: str, shape_name: str, multi_pod: bool,
                sod_mode: str | None, density: float,
-               scan_layers: bool = True, n_layers: int | None = None):
+               scan_layers: bool = True, n_layers: int | None = None,
+               plan_path: str | None = None):
     cfg = configs.get_config(arch).with_(scan_layers=scan_layers)
     if n_layers is not None:
         cfg = cfg.with_(n_layers=n_layers)
@@ -147,8 +167,9 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = cfg.with_(moe_dispatch_blocks=dp)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    jitted, args = _build_from_cfg(cfg, shape, mesh)
-    return cfg, shape, mesh, jitted, args
+    plan = _plan_for_cell(cfg, shape, mesh, plan_path)
+    jitted, args = _build_from_cfg(cfg, shape, mesh, plan=plan)
+    return cfg, shape, mesh, jitted, args, plan
 
 
 def _analyze(compiled) -> dict:
@@ -219,7 +240,8 @@ def _extrapolate(a1: dict, a2: dict, g1: int, g2: int, g_full: int) -> dict:
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
              sod_mode: str | None = None, density: float = 0.3,
-             probes: bool | None = None) -> dict:
+             probes: bool | None = None, plan_path: str | None = None,
+             plan_out: str | None = None) -> dict:
     rec = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
@@ -233,8 +255,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     # ---- 1) full-config compile (scan layers): THE dry-run gate ----------
     t0 = time.time()
-    cfg, shape, mesh, jitted, args = build_cell(
-        arch, shape_name, multi_pod, sod_mode, density, scan_layers=True)
+    cfg, shape, mesh, jitted, args, plan = build_cell(
+        arch, shape_name, multi_pod, sod_mode, density, scan_layers=True,
+        plan_path=plan_path)
     from repro.kernels import registry as kreg
 
     with mesh, kreg.record_dispatches() as dispatch_log:
@@ -243,6 +266,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     # which registry impls the traced step really ran (mesh fallbacks to
     # the XLA oracle are visible here instead of silent)
     rec["kernel_dispatch"] = kreg.dispatch_summary(dispatch_log)
+    if plan is not None:
+        # the chosen per-layer plan, path → one-liner (format, tile, cap,
+        # dispatch hint, SPMD partitioning)
+        rec["pack_plan"] = plan.summary()
+        rec["pack_plan_bytes"] = plan.compressed_bytes()
+        if plan_out:
+            plan.save(plan_out)
+            rec["pack_plan_file"] = str(plan_out)
     full = _analyze(compiled)
     rec["memory"] = full["memory"]
     rec["cost_scan_hlo"] = full["cost"]          # while-bodies counted once
@@ -260,9 +291,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         analyses = []
         for n_groups in (1, 2):
             t0 = time.time()
-            _, _, pmesh, pjit, pargs = build_cell(
+            # probes replay the same plan as the gated cell (a replayed
+            # plan's concrete-observed caps differ from freshly built
+            # abstract budgets; probe shapes must match the cell's)
+            _, _, pmesh, pjit, pargs, _ = build_cell(
                 arch, shape_name, multi_pod, sod_mode, density,
-                scan_layers=False, n_layers=g * n_groups)
+                scan_layers=False, n_layers=g * n_groups,
+                plan_path=plan_path)
             with pmesh:
                 pcomp = pjit.lower(*pargs).compile()
             analyses.append(_analyze(pcomp))
@@ -292,6 +327,11 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--sod", choices=("tiled_csc", "block_csr"), default=None)
     ap.add_argument("--density", type=float, default=0.3)
+    ap.add_argument("--plan", default=None,
+                    help="replay a pack-plan JSON instead of building one")
+    ap.add_argument("--plan-json", default=None,
+                    help="dump the cell's per-layer pack plan to this path "
+                         "(replayable by train/serve --plan)")
     ap.add_argument("--all", action="store_true",
                     help="run every cell in subprocesses")
     ap.add_argument("--force", action="store_true", help="recompute cached")
@@ -326,9 +366,12 @@ def main():
 
     if not (args.arch and args.shape):
         ap.error("--arch and --shape required (or --all)")
+    if (args.plan or args.plan_json) and not args.sod:
+        ap.error("--plan/--plan-json require --sod tiled_csc|block_csr")
     try:
         rec = run_cell(args.arch, args.shape, args.multi_pod, args.sod,
-                       args.density)
+                       args.density, plan_path=args.plan,
+                       plan_out=args.plan_json)
     except Exception:
         rec = {"arch": args.arch, "shape": args.shape,
                "mesh": "2x16x16" if args.multi_pod else "16x16",

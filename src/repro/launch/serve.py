@@ -16,28 +16,31 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
+from repro.core import plan as plan_mod
 from repro.core.sod import SoDConfig, sodify_params
 from repro.data.pipeline import SyntheticLMData
 from repro.launch import steps as steps_mod
 from repro.models.model import LM
 
 
-def prefill_cache(model: LM, params, prompt, max_len: int):
+def prefill_cache(model: LM, params, prompt, max_len: int, plan=None):
     """Family-appropriate cache construction for a (B, S) prompt batch."""
     cfg = model.cfg
     b, s = prompt["tokens"].shape[:2]
-    if cfg.family in ("hybrid", "ssm"):
-        cache = model.init_cache(b, max_len)
-        logits = None
-        step = jax.jit(model.decode_step)
-        for t in range(s):
-            tok = prompt["tokens"][:, t:t + 1]
-            logits, cache = step(params, cache, tok, jnp.asarray(t))
-        return logits[:, -1], cache, s
-    last_logits, cache = jax.jit(
-        lambda p, b_: model.prefill(p, b_))(params, prompt)
+    with plan_mod.use_plan(plan):
+        if cfg.family in ("hybrid", "ssm"):
+            cache = model.init_cache(b, max_len)
+            logits = None
+            step = jax.jit(model.decode_step)
+            for t in range(s):
+                tok = prompt["tokens"][:, t:t + 1]
+                logits, cache = step(params, cache, tok, jnp.asarray(t))
+            return logits[:, -1], cache, s
+        last_logits, cache = jax.jit(
+            lambda p, b_: model.prefill(p, b_))(params, prompt)
     # right-size the cache to max_len
     def grow(t):
         if t.ndim >= 4 and t.shape[-3] == s:  # (..., S, KV, hd)
@@ -47,6 +50,26 @@ def prefill_cache(model: LM, params, prompt, max_len: int):
         return t
     cache = jax.tree_util.tree_map(grow, cache)
     return last_logits, cache, s
+
+
+def _sample_tokens(outs, limit: int = 8) -> list[int]:
+    """First generated token id per step for batch row 0, shape-agnostic.
+
+    Step outputs differ by family — (B, 1) for token models, (B, 1, C) for
+    the audio codebook stack — and the list may be shorter than ``limit``
+    for small ``--gen`` (or empty for ``--gen 0``); indexing each step's
+    array defensively handles all of them.
+    """
+    toks: list[int] = []
+    for o in outs:
+        a = np.asarray(o)
+        if a.size == 0:
+            continue
+        toks.append(int(a.reshape(a.shape[0], -1)[0, 0]) if a.ndim >= 1
+                    else int(a))
+        if len(toks) >= limit:
+            break
+    return toks
 
 
 def main(argv=None):
@@ -67,6 +90,12 @@ def main(argv=None):
                     help="tuning-cache JSON path (default: "
                          "$REPRO_TUNING_CACHE or ~/.cache/repro/"
                          "tuning_cache.json)")
+    ap.add_argument("--plan", default=None,
+                    help="pack plan: JSON path to replay (e.g. dumped by "
+                         "dryrun --plan-json), or 'auto' to build one with "
+                         "the planner; default: global-config packing")
+    ap.add_argument("--plan-json", default=None,
+                    help="write the effective pack plan to this path")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -79,27 +108,42 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
     tune_stats = None
+    plan = None
+    if args.plan and not cfg.sod.enabled:
+        ap.error("--plan requires Sparse-on-Dense packing "
+                 "(pass --sod tiled_csc|block_csr)")
+    # prefill consumes (batch·prompt_len, K); decode (batch, K)
+    m_values = (args.batch * args.prompt_len, args.batch)
     if cfg.sod.enabled:
-        params = sodify_params(params, cfg.sod)
-        if args.autotune:
-            from repro.kernels import autotune
+        from repro.kernels import autotune
+        from repro.runtime import planner
 
-            cache = autotune.install_cache(args.tuning_cache)
-            # prefill consumes (batch·prompt_len, K); decode (batch, K)
-            tune_stats = autotune.warmup_params(
-                params, (args.batch * args.prompt_len, args.batch),
-                cache=cache)
+        # install the cache BEFORE planning: the planner's dispatch hints
+        # must come from the same cache file dispatch will read
+        cache = autotune.install_cache(args.tuning_cache)
+        plan = planner.load_or_build(args.plan, params, cfg.sod, cfg=cfg,
+                                     cache=cache, m_values=m_values)
+        params = sodify_params(params, cfg.sod, plan=plan)
+        if args.autotune:
+            if plan is not None:
+                tune_stats = planner.warmup_plan(plan, m_values, cache=cache)
+            else:
+                tune_stats = autotune.warmup_params(params, m_values,
+                                                    cache=cache)
             print(f"autotune: {tune_stats} -> {cache.path}")
+    if args.plan_json and plan is not None:
+        print(f"pack plan -> {plan.save(args.plan_json)}")
 
     data = SyntheticLMData(cfg, args.batch, args.prompt_len, seed=args.seed)
     prompt = {k: v for k, v in data.batch(0).items() if k != "targets"}
     max_len = args.prompt_len + args.gen
 
     t0 = time.time()
-    last_logits, cache, pos0 = prefill_cache(model, params, prompt, max_len)
+    last_logits, cache, pos0 = prefill_cache(model, params, prompt, max_len,
+                                             plan=plan)
     prefill_s = time.time() - t0
 
-    decode = jax.jit(steps_mod.make_decode_step(model))
+    decode = jax.jit(steps_mod.make_decode_step(model, plan=plan))
     tok = jnp.argmax(last_logits, axis=-1)
     if cfg.family == "audio":
         tok = tok.reshape(args.batch, 1, cfg.n_codebooks)
@@ -119,10 +163,13 @@ def main(argv=None):
         "prompt_len": args.prompt_len, "generated": args.gen,
         "prefill_s": round(prefill_s, 3),
         "decode_tok_per_s": round(args.batch * args.gen / max(decode_s, 1e-9), 1),
-        "sample": [int(x) for x in jnp.asarray(outs)[:8, 0].reshape(-1)[:8]],
+        "sample": _sample_tokens(outs),
     }
     if tune_stats is not None:
         summary["autotune"] = tune_stats
+    if plan is not None:
+        summary["plan_layers"] = len(plan)
+        summary["plan_bytes"] = plan.compressed_bytes()
     print(json.dumps(summary))
     return summary
 

@@ -61,12 +61,18 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
     }
 
 
-def abstract_params(model: LM, sod_cfg=None) -> Params:
-    """eval_shape of init (+ optional abstract Sparse-on-Dense packing)."""
+def abstract_params(model: LM, sod_cfg=None, plan=None) -> Params:
+    """eval_shape of init (+ optional abstract Sparse-on-Dense packing).
+
+    ``plan`` (a :class:`repro.core.plan.ModelPlan`) packs each leaf at its
+    planned format/capacity instead of the global config — the shapes then
+    match a concrete ``sodify_params(..., plan=plan)`` exactly.
+    """
     from repro.core import sod as sod_mod
 
     params = jax.eval_shape(
         lambda: model.init(jax.random.PRNGKey(0)))
-    if sod_cfg is not None and sod_cfg.enabled:
-        params = sod_mod.sodify_abstract(params, sod_cfg)
+    if plan is not None or (sod_cfg is not None and sod_cfg.enabled):
+        params = sod_mod.sodify_abstract(params, sod_cfg or model.cfg.sod,
+                                         plan=plan)
     return params

@@ -5,6 +5,13 @@ inside ``with mesh:``, so the SPMD kernel routing
 (:mod:`repro.runtime.spmd`) sees the mesh even if the caller jits the step
 without an enclosing mesh context — packed matmuls then dispatch
 shard_map-wrapped Pallas kernels instead of falling back to the XLA oracle.
+
+Every builder also takes an optional ``plan`` (a
+:class:`repro.core.plan.ModelPlan`): the step body traces inside
+:func:`repro.core.plan.use_plan`, so each packed matmul dispatches with its
+layer's :class:`~repro.core.plan.PackPlan` (impl hint, tuned dispatch
+params, per-layer SPMD partition plan) instead of rediscovering a choice
+per call.
 """
 from __future__ import annotations
 
@@ -13,6 +20,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import use_plan
 from repro.launch.mesh import mesh_context
 from repro.models.model import LM
 from repro.optim.adamw import AdamW
@@ -20,12 +28,12 @@ from repro.optim.adamw import AdamW
 Params = Any
 
 
-def make_train_step(model: LM, optimizer: AdamW, mesh=None):
+def make_train_step(model: LM, optimizer: AdamW, mesh=None, plan=None):
     def train_step(params: Params, opt_state: Params, batch: Params):
         def loss_fn(p):
             return model.loss(p, batch)
 
-        with mesh_context(mesh):
+        with mesh_context(mesh), use_plan(plan):
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True, allow_int=True)(params)
             params, opt_state, opt_metrics = optimizer.update(
@@ -35,9 +43,9 @@ def make_train_step(model: LM, optimizer: AdamW, mesh=None):
     return train_step
 
 
-def make_loss_and_grads(model: LM, mesh=None):
+def make_loss_and_grads(model: LM, mesh=None, plan=None):
     def loss_and_grads(params: Params, batch: Params):
-        with mesh_context(mesh):
+        with mesh_context(mesh), use_plan(plan):
             (loss, metrics), grads = jax.value_and_grad(
                 lambda p: model.loss(p, batch), has_aux=True, allow_int=True
             )(params)
@@ -46,9 +54,9 @@ def make_loss_and_grads(model: LM, mesh=None):
     return loss_and_grads
 
 
-def make_prefill_step(model: LM, mesh=None):
+def make_prefill_step(model: LM, mesh=None, plan=None):
     def prefill_step(params: Params, batch: Params):
-        with mesh_context(mesh):
+        with mesh_context(mesh), use_plan(plan):
             last_logits, cache = model.prefill(params, batch)
         next_tokens = jnp.argmax(last_logits, axis=-1)
         return next_tokens, cache
@@ -56,9 +64,9 @@ def make_prefill_step(model: LM, mesh=None):
     return prefill_step
 
 
-def make_decode_step(model: LM, greedy: bool = True, mesh=None):
+def make_decode_step(model: LM, greedy: bool = True, mesh=None, plan=None):
     def decode_step(params: Params, cache: Params, tokens, pos):
-        with mesh_context(mesh):
+        with mesh_context(mesh), use_plan(plan):
             logits, cache = model.decode_step(params, cache, tokens, pos)
         next_tokens = jnp.argmax(logits, axis=-1)
         return next_tokens, logits, cache

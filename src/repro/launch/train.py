@@ -52,6 +52,12 @@ def main(argv=None):
                     help="tuning-cache JSON path (default: "
                          "$REPRO_TUNING_CACHE or ~/.cache/repro/"
                          "tuning_cache.json)")
+    ap.add_argument("--plan", default=None,
+                    help="pack plan: JSON path to replay (e.g. dumped by "
+                         "dryrun --plan-json), or 'auto' to build one with "
+                         "the planner; default: global-config packing")
+    ap.add_argument("--plan-json", default=None,
+                    help="write the effective pack plan to this path")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -63,23 +69,44 @@ def main(argv=None):
     model = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
+    plan = None
+    if args.plan and not cfg.sod.enabled:
+        ap.error("--plan requires Sparse-on-Dense packing "
+                 "(pass --sod tiled_csc|block_csr)")
     if cfg.sod.enabled:
-        params = sodify_params(params, cfg.sod)
+        from repro.kernels import autotune
+        from repro.runtime import planner
+
+        # install the cache BEFORE planning: the planner's dispatch hints
+        # must come from the same cache file dispatch will read
+        cache = autotune.install_cache(args.tuning_cache)
+        plan = planner.load_or_build(args.plan, params, cfg.sod, cfg=cfg,
+                                     cache=cache,
+                                     m_values=(args.batch * args.seq,))
+        if plan is not None:
+            n_dense = sum(e.mode == "dense" for e in plan.entries.values())
+            print(f"pack plan: {len(plan)} layers "
+                  f"({len(plan) - n_dense} packed, {n_dense} dense), "
+                  f"{plan.compressed_bytes():,} planned bytes")
+        params = sodify_params(params, cfg.sod, plan=plan)
         from repro.core.sod import tree_weight_bytes
         print("sod weight bytes:", tree_weight_bytes(params))
         if args.autotune:
-            from repro.kernels import autotune
-
-            cache = autotune.install_cache(args.tuning_cache)
-            stats = autotune.warmup_params(
-                params, (args.batch * args.seq,), cache=cache)
+            if plan is not None:
+                stats = planner.warmup_plan(
+                    plan, (args.batch * args.seq,), cache=cache)
+            else:
+                stats = autotune.warmup_params(
+                    params, (args.batch * args.seq,), cache=cache)
             print(f"autotune: {stats} -> {cache.path}")
+    if args.plan_json and plan is not None:
+        print(f"pack plan -> {plan.save(args.plan_json)}")
 
     opt = AdamW(AdamWConfig(lr=args.lr),
                 schedule=cosine_schedule(args.lr, args.warmup, args.steps))
     opt_state = opt.init(params)
     data = SyntheticLMData(cfg, args.batch, args.seq, seed=args.seed)
-    train_step = jax.jit(steps_mod.make_train_step(model, opt))
+    train_step = jax.jit(steps_mod.make_train_step(model, opt, plan=plan))
     ckpt = Checkpointer(args.ckpt_dir)
 
     state = {"params": params, "opt": opt_state}
@@ -123,6 +150,9 @@ def main(argv=None):
         "mean_last10": sum(losses[-10:]) / min(len(losses), 10),
         "wall_s": round(dt, 1),
     }
+    if plan is not None:
+        summary["plan_layers"] = len(plan)
+        summary["plan_bytes"] = plan.compressed_bytes()
     print(json.dumps(summary))
     return summary
 

@@ -98,14 +98,19 @@ def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
 
 
 def mlp(params: Params, x: jax.Array, act: str = "silu",
-        spmd="auto") -> jax.Array:
+        spmd="auto", plans=None) -> jax.Array:
     """SwiGLU MLP.  ``spmd`` forwards to the packed-matmul dispatcher: under
     an active mesh the packed projections run shard_map-wrapped (an explicit
     :class:`repro.runtime.spmd.SpmdPlan` pins the partitioning; ``None``
-    opts out)."""
-    gate = sod.apply(x, params["w_gate"], spmd=spmd)
-    up = sod.apply(x, params["w_up"], spmd=spmd)
-    return sod.apply(activate(gate, act) * up, params["w_down"], spmd=spmd)
+    opts out).  ``plans`` maps projection names (``w_gate``/``w_up``/
+    ``w_down``) to their :class:`repro.core.plan.PackPlan`, so each matmul
+    dispatches with its layer's plan — absent entries fall back to the
+    active :class:`~repro.core.plan.ModelPlan`'s layout lookup."""
+    pl = (plans or {}).get
+    gate = sod.apply(x, params["w_gate"], spmd=spmd, plan=pl("w_gate"))
+    up = sod.apply(x, params["w_up"], spmd=spmd, plan=pl("w_up"))
+    return sod.apply(activate(gate, act) * up, params["w_down"], spmd=spmd,
+                     plan=pl("w_down"))
 
 
 # ---------------------------------------------------------------------------
@@ -119,13 +124,16 @@ def embed(table: jax.Array, tokens: jax.Array, scale: bool = False) -> jax.Array
 
 
 def lm_head(x: jax.Array, table_or_w, tied: bool, cap: float | None = None,
-            spmd="auto"):
-    """Project to vocab logits in float32 (loss numerics)."""
+            spmd="auto", plan=None):
+    """Project to vocab logits in float32 (loss numerics).  ``plan`` is the
+    head's :class:`repro.core.plan.PackPlan` (or None for active-plan /
+    layout fallback)."""
     if tied:
         w = table_or_w.T if isinstance(table_or_w, jax.Array) else table_or_w
         logits = jnp.dot(x, w, preferred_element_type=jnp.float32)
     else:
-        logits = sod.apply(x, table_or_w, out_dtype=jnp.float32, spmd=spmd)
+        logits = sod.apply(x, table_or_w, out_dtype=jnp.float32, spmd=spmd,
+                           plan=plan)
     return softcap(logits.astype(jnp.float32), cap)
 
 

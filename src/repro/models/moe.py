@@ -214,8 +214,14 @@ def _a2a_dispatch(params: Params, xt: jax.Array, gate_vals: jax.Array,
               params["w_gate"], params["w_up"], params["w_down"])
 
 
-def moe_mlp(params: Params, x: jax.Array, spec: MoESpec):
-    """x (B, S, D) → (B, S, D), plus router aux loss."""
+def moe_mlp(params: Params, x: jax.Array, spec: MoESpec, plans=None):
+    """x (B, S, D) → (B, S, D), plus router aux loss.
+
+    ``plans`` maps the *shared* expert's projection names to their
+    :class:`repro.core.plan.PackPlan` (routed experts are stacked on the EP
+    dim and dispatch through the batched einsum path, which plans don't
+    cover).
+    """
     b, s, d = x.shape
     t = b * s
     e = spec.n_experts_padded
@@ -284,7 +290,8 @@ def moe_mlp(params: Params, x: jax.Array, spec: MoESpec):
         sg = jax.nn.sigmoid(
             jnp.dot(xt, params["shared_gate"].astype(xt.dtype))
         ).astype(xt.dtype)
-        combined = combined + sg * layers.mlp(params["shared"], xt, spec.act)
+        combined = combined + sg * layers.mlp(params["shared"], xt, spec.act,
+                                              plans=plans)
 
     # ---- load-balance aux loss (Switch-style) ------------------------------
     me = jnp.mean(probs, axis=0)                                   # (E,)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import plan as plan_mod
 from repro.core import sod
 from repro.models import attention as attn
 from repro.models import layers, moe, ssm, xlstm
@@ -121,9 +122,13 @@ def init_attn_block(key, cfg: ModelConfig) -> Params:
 
 
 def _apply_mlp(bp: Params, h: jax.Array, cfg: ModelConfig):
+    # Per-layer pack plans: the active ModelPlan's entries for this block's
+    # projections (layer stacks share one path, hence one plan entry).
     if cfg.family == "moe":
-        return moe.moe_mlp(bp["moe"], h, moe_spec(cfg))
-    return layers.mlp(bp["mlp"], h, cfg.act), 0.0
+        return moe.moe_mlp(bp["moe"], h, moe_spec(cfg),
+                           plans=plan_mod.active_subplans("shared"))
+    return layers.mlp(bp["mlp"], h, cfg.act,
+                      plans=plan_mod.active_subplans("mlp")), 0.0
 
 
 def attn_block_full(bp: Params, x: jax.Array, cfg: ModelConfig,
@@ -136,7 +141,8 @@ def attn_block_full(bp: Params, x: jax.Array, cfg: ModelConfig,
     s = x.shape[1]
     eff_window = None if (window is None or window >= s) else window
     ao = attn.chunked_attention(q, k, v, spec, window=eff_window)
-    ao = sod.apply(ao.reshape(*x.shape[:2], -1), bp["attn"]["wo"])
+    ao = sod.apply(ao.reshape(*x.shape[:2], -1), bp["attn"]["wo"],
+                   plan=plan_mod.active_entry("attn.wo"))
     if cfg.use_post_norms:
         ao = layers.rms_norm(ao, bp["norm1_post"], cfg.norm_eps)
     x = x + ao
@@ -209,14 +215,17 @@ def embed_inputs(params: Params, batch: Params, cfg: ModelConfig) -> jax.Array:
 def project_logits(params: Params, x: jax.Array, cfg: ModelConfig):
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     v = cfg.padded_vocab
+    head_plan = plan_mod.active_entry("head")
     if cfg.family == "audio":
-        logits = sod.apply(x, params["head"], out_dtype=jnp.float32)
+        logits = sod.apply(x, params["head"], out_dtype=jnp.float32,
+                           plan=head_plan)
         logits = logits.reshape(*x.shape[:-1], cfg.n_codebooks, v)
     elif cfg.tie_embeddings:
         logits = jnp.dot(x, params["embed"].T.astype(x.dtype),
                          preferred_element_type=jnp.float32)
     else:
-        logits = sod.apply(x, params["head"], out_dtype=jnp.float32)
+        logits = sod.apply(x, params["head"], out_dtype=jnp.float32,
+                           plan=head_plan)
     logits = layers.softcap(logits.astype(jnp.float32), cfg.final_softcap)
     if v != cfg.vocab:   # mask padded vocabulary slots
         mask = jnp.arange(v) >= cfg.vocab

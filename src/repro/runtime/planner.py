@@ -1,0 +1,318 @@
+"""Packing planner: tuning-cache + cost model → per-layer ModelPlan.
+
+:func:`build_plan` walks a parameter pytree (concrete arrays *or* the
+``eval_shape`` ShapeDtypeStructs the dry-run uses), and emits one
+:class:`repro.core.plan.PackPlan` per packable leaf:
+
+* **capacity** — from the shared sizing functions in :mod:`repro.core.plan`:
+  the exact data-dependent capacity when the weights are concrete (what a
+  lossless global-config pack would use), the deterministic mean+4σ budget
+  otherwise.  Either way the number is recorded in the plan, so replaying it
+  — in train, serve, or a dry-run — produces byte-identical packed layouts
+  and therefore identical tuning-cache keys.
+* **format** — per layer, the configured packed mode or plain dense,
+  whichever stores fewer bytes.  A high-density layer whose padded packed
+  footprint exceeds its dense bytes stays dense (the paper's argument that
+  format parameters must track per-layer sparsity structure); a per-layer
+  plan therefore never exceeds the global-config pack in compressed bytes.
+* **dispatch hint** — the persisted tuning cache is consulted at the plan's
+  layout/M: a measured winner's parameters ride along in
+  ``dispatch_params`` (and seed dispatch even on a machine with a cold
+  cache); otherwise the analytical prior's choice is recorded in ``note``.
+* **SpmdPlan** — when a mesh (and a :class:`~repro.configs.base.ModelConfig`)
+  is given, each non-stacked packed leaf gets the partition plan matching
+  its resident sharding from
+  :func:`repro.runtime.sharding.packed_matmul_plans`.
+
+:func:`warmup_plan` keys tuning-cache warmup off a plan: every distinct
+planned layout is materialized (random weights packed at the plan's exact
+capacity) and tuned at the plan's M values — no model parameters needed, so
+a plan dumped by the dry-run can pre-warm a serving host's cache before the
+checkpoint even loads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats, pruning, sod
+from repro.core import plan as plan_mod
+from repro.core.plan import ModelPlan, PackPlan
+from repro.core.sod import SoDConfig
+from repro.kernels import registry
+
+__all__ = ["build_plan", "warmup_plan", "load_or_build"]
+
+
+def _is_abstract(leaf) -> bool:
+    return isinstance(leaf, jax.ShapeDtypeStruct)
+
+
+def _pruned_leaf(leaf, sod_cfg: SoDConfig, tile, prune: bool):
+    """Pruned copy of one (possibly stacked) leaf, via the same
+    :func:`repro.core.sod._prune_leaf` loop ``sodify_params`` packs with.
+
+    Note ``--plan auto`` prunes twice by design: once here to *observe*
+    capacities, once in ``sodify_params`` when actually packing — the plan
+    stays a pure value (JSON-serializable, replayable) instead of carrying
+    device arrays.  Pruning is deterministic, so both passes agree.
+    """
+    leaf = jnp.asarray(leaf)
+    if prune and sod_cfg.density < 1.0:
+        return sod._prune_leaf(leaf, sod_cfg.density, sod_cfg.prune_method,
+                               tile, sod_cfg.br)
+    return leaf
+
+
+def _packed_candidate(leaf, sod_cfg: SoDConfig, tile: tuple[int, int],
+                      prune: bool) -> PackPlan:
+    shape = tuple(int(s) for s in leaf.shape[-2:])
+    lead = tuple(int(s) for s in leaf.shape[:-2])
+    bk, bn = tile
+    common = dict(shape=shape, lead=lead, density=sod_cfg.density,
+                  prune_method=sod_cfg.prune_method, tile=tuple(tile),
+                  br=sod_cfg.br, dtype=str(jnp.dtype(leaf.dtype)))
+    # observed capacities come from the packers' own counting helpers
+    # (formats.observed_*_cap), so planned caps can never drift from what a
+    # lossless global-config pack would choose
+    observe = not _is_abstract(leaf)
+    pruned = _pruned_leaf(leaf, sod_cfg, tile, prune) if observe else None
+    if sod_cfg.mode == "tiled_csc":
+        cap = plan_mod.tiled_cap(
+            bk, sod_cfg.density,
+            observed=formats.observed_tiled_cap(pruned, tile)
+            if observe else None)
+        return PackPlan(mode="tiled_csc", cap=cap, **common)
+    bcap = plan_mod.block_bcap(
+        bk // sod_cfg.br, sod_cfg.density, sod_cfg.prune_method,
+        sod_cfg.br * bn,
+        observed=formats.observed_block_cap(pruned, tile, sod_cfg.br)
+        if observe else None)
+    return PackPlan(mode="block_csr", bcap=bcap, **common)
+
+
+def _abstract_operand(e: PackPlan, dtype):
+    """Packed container of ShapeDtypeStructs with the entry's exact layout
+    (enough for :func:`repro.kernels.registry.problem_key`).  Built by the
+    same constructors ``sodify_abstract`` uses, so hint/warmup cache keys
+    can never drift from the dry-run's abstract shapes."""
+    k, n = e.shape
+    if e.mode == "tiled_csc":
+        return sod._abstract_tiled((), k, n, dtype, e.tile, e.cap)
+    return sod._abstract_block((), k, n, dtype, e.tile, e.br, e.bcap)
+
+
+def _attach_hint(e: PackPlan, dtype, cache, backend, m: int) -> PackPlan:
+    """Dispatch hint from the persisted tuning cache (measured winner) or
+    the analytical prior at the plan's layout."""
+    from repro.kernels import autotune  # deferred: autotune imports registry
+
+    cache = autotune.get_cache() if cache is None else cache
+    key = registry.problem_key(_abstract_operand(e, dtype), m=int(m),
+                               backend=backend)
+    hit = cache.get(key)
+    if hit is not None:
+        return dataclasses.replace(
+            e, dispatch_params=dict(hit.get("params") or {}),
+            note=f"tuned:{hit.get('impl', '?')}")
+    ranked = autotune.rank_candidates(key)
+    if ranked:
+        return dataclasses.replace(e, note=f"prior:{ranked[0][1].name}")
+    return e
+
+
+def _spmd_dict(sp) -> dict:
+    return {
+        "batch_axes": list(sp.batch_axes),
+        "col_axis": sp.col_axis,
+        "row_axis": sp.row_axis,
+        "gather_axis": sp.gather_axis,
+    }
+
+
+def build_plan(
+    params,
+    sod_cfg: SoDConfig,
+    *,
+    cfg=None,
+    mesh=None,
+    cache=None,
+    backend: str | None = None,
+    m_values: tuple[int, ...] = (128, 8),
+    tiles: tuple[tuple[int, int], ...] | None = None,
+    allow_dense: bool = True,
+    prune: bool = True,
+) -> ModelPlan:
+    """Per-layer :class:`~repro.core.plan.ModelPlan` for a param pytree.
+
+    ``params`` may hold concrete arrays (exact observed capacities) or
+    ShapeDtypeStructs (deterministic budgets).  ``cfg``/``mesh`` enable the
+    SPMD pass; ``tiles`` widens the tile-geometry search beyond
+    ``sod_cfg.tile`` (candidates are ranked by compressed bytes).
+    """
+    entries: dict[str, PackPlan] = {}
+    if sod_cfg.enabled:
+        flat, _ = sod._flatten_named(params)
+        for name, leaf in flat:
+            if isinstance(leaf, (formats.TiledCSC, formats.BlockCSR)):
+                raise ValueError(
+                    f"build_plan expects unpacked params; {name} is already "
+                    f"a {type(leaf).__name__}")
+            if not (sod._packable(name, leaf)
+                    and min(leaf.shape[-2:]) >= sod_cfg.min_dim):
+                continue
+            cands = [_packed_candidate(leaf, sod_cfg, tuple(t), prune)
+                     for t in (tiles or (tuple(sod_cfg.tile),))]
+            best = min(cands, key=lambda e: e.compressed_bytes())
+            if allow_dense and best.dense_bytes() < best.compressed_bytes():
+                # keep the pruning geometry (tile/br) — dense fallback
+                # changes the storage format, not the sparsity pattern
+                best = PackPlan(
+                    mode="dense", shape=best.shape, lead=best.lead,
+                    density=sod_cfg.density,
+                    prune_method=sod_cfg.prune_method,
+                    tile=tuple(sod_cfg.tile), br=sod_cfg.br,
+                    dtype=best.dtype, note="packed would exceed dense bytes")
+            if best.mode != "dense":
+                best = _attach_hint(best, leaf.dtype, cache, backend,
+                                    m_values[0] if m_values else 128)
+            entries[name] = best
+
+    mesh_sig = ""
+    if mesh is not None and cfg is not None and entries:
+        from repro.runtime import sharding as shard_mod
+        from repro.runtime import spmd as spmd_mod
+
+        shapes = jax.tree_util.tree_map(
+            lambda leaf: jax.ShapeDtypeStruct(tuple(leaf.shape),
+                                              jnp.dtype(leaf.dtype)),
+            params)
+        packed_abs = sod.sodify_abstract(shapes, sod_cfg,
+                                         plan=ModelPlan(entries))
+        for path, sp in shard_mod.packed_matmul_plans(
+                packed_abs, cfg, mesh).items():
+            e = entries.get(path)
+            if e is not None:
+                entries[path] = dataclasses.replace(e, spmd=_spmd_dict(sp))
+        mesh_sig = spmd_mod.mesh_key(mesh)
+
+    meta = {
+        "sod": {"mode": sod_cfg.mode, "density": sod_cfg.density,
+                "prune_method": sod_cfg.prune_method,
+                "tile": list(sod_cfg.tile), "br": sod_cfg.br,
+                "min_dim": sod_cfg.min_dim},
+        "m_values": [int(m) for m in m_values],
+        "backend": backend or registry.current_backend(),
+        "arch": getattr(cfg, "name", ""),
+    }
+    return ModelPlan(entries, mesh=mesh_sig, meta=meta)
+
+
+def _concrete_operand(e: PackPlan, key):
+    """Random concrete operand with the entry's exact packed layout."""
+    w = pruning.random_sparse(key, e.shape, min(max(e.density, 0.05), 1.0))
+    if e.prune_method == "block" and e.density < 1.0:
+        w = pruning.block_prune(w, e.density, block=(e.br, e.tile[1]))
+    w = w.astype(jnp.dtype(e.dtype))
+    if e.mode == "tiled_csc":
+        return formats.pack_tiled_csc(w, tile=e.tile, cap=e.cap)
+    return formats.pack_block_csr(w, tile=e.tile, br=e.br, bcap=e.bcap)
+
+
+def warmup_plan(
+    plan: ModelPlan,
+    m_values: tuple[int, ...] | None = None,
+    *,
+    mesh=None,
+    backend: str | None = None,
+    cache=None,
+    iters: int = 1,
+    seed: int = 0,
+) -> dict:
+    """Tune every distinct planned layout at the plan's M values.
+
+    Layouts are synthesized from the plan alone (random weights packed at
+    the planned capacity — kernel runtime depends on the static layout, not
+    the values), so warmup needs no model parameters.  With ``mesh``,
+    entries carrying an SPMD sub-plan are tuned at their per-local-shard
+    shape under the mesh-qualified cache key instead, mirroring
+    :func:`repro.runtime.spmd.warmup_params_spmd`.
+    """
+    from repro.kernels import autotune
+
+    cache = autotune.get_cache() if cache is None else cache
+    m_values = tuple(int(m) for m in
+                     (m_values or plan.meta.get("m_values") or (128,)))
+    stats = {"tuned": 0, "cached": 0, "skipped": 0}
+    rng = jax.random.PRNGKey(seed)
+    seen: set = set()
+    for path, e in sorted(plan.entries.items()):
+        if e.mode == "dense":
+            stats["skipped"] += 1
+            continue
+        # Stacked entries tune at their per-matrix slice layout — exactly
+        # what the scan body dispatches after lead-dim slicing.
+        sig = e.layout_key() + (e.dtype,
+                                repr(sorted((e.spmd or {}).items())))
+        if sig in seen:
+            continue
+        seen.add(sig)
+        w = _concrete_operand(
+            e, jax.random.fold_in(rng, zlib.crc32(path.encode()) % (2**31)))
+        mesh_sig = ""
+        dp = 1
+        if mesh is not None and e.spmd:
+            from repro.runtime import spmd as spmd_mod
+
+            sp = spmd_mod.SpmdPlan.from_dict(e.spmd)
+            try:
+                spmd_mod._validate(sp, mesh, w)
+            except ValueError:
+                stats["skipped"] += 1
+                continue
+            w = spmd_mod._local_packed(w, mesh, sp)
+            mesh_sig = f"{spmd_mod.mesh_key(mesh)}|{sp.signature()}"
+            dp = spmd_mod._axes_size(mesh, sp.batch_axes)
+        for m in dict.fromkeys(m_values):
+            m_local = max(-(-m // dp), 1)
+            pk = registry.problem_key(w, m=m_local, backend=backend,
+                                      mesh=mesh_sig)
+            if cache.get(pk) is not None:
+                stats["cached"] += 1
+                continue
+            x = jax.random.normal(
+                jax.random.fold_in(rng, (zlib.crc32(repr(sig).encode())
+                                         ^ m) % (2**31)),
+                (m_local, w.shape[0]), jnp.float32)
+            if jnp.issubdtype(jnp.dtype(e.dtype), jnp.floating):
+                x = x.astype(e.dtype)
+            autotune.tune(x, w, backend=backend, mesh=mesh_sig, cache=cache,
+                          iters=iters)
+            stats["tuned"] += 1
+    return stats
+
+
+def load_or_build(
+    plan_arg: str | None,
+    params,
+    sod_cfg: SoDConfig,
+    *,
+    cfg=None,
+    mesh=None,
+    cache=None,
+    m_values: tuple[int, ...] = (),
+) -> ModelPlan | None:
+    """Resolve a launch script's ``--plan`` argument.
+
+    ``None``/empty → no plan (historical global-config packing); ``"auto"``
+    → build one with the planner; anything else is a JSON path to replay.
+    """
+    if not plan_arg:
+        return None
+    if plan_arg == "auto":
+        return build_plan(params, sod_cfg, cfg=cfg, mesh=mesh, cache=cache,
+                          m_values=tuple(m_values) or (128, 8))
+    return ModelPlan.load(plan_arg)

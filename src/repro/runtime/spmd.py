@@ -142,6 +142,16 @@ class SpmdPlan:
             a for a in (self.col_axis, self.row_axis, self.gather_axis)
             if a is not None)
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "SpmdPlan":
+        """Rebuild from the serialized form a :class:`repro.core.plan.PackPlan`
+        carries (the one place plan-dict → SpmdPlan conversion lives)."""
+        return cls(
+            batch_axes=tuple(d.get("batch_axes", ())),
+            col_axis=d.get("col_axis"),
+            row_axis=d.get("row_axis"),
+            gather_axis=d.get("gather_axis"))
+
 
 def _axes_size(mesh: Mesh, axes) -> int:
     n = 1
@@ -274,6 +284,7 @@ def sod_matmul_spmd(
     out_dtype=None,
     backend: str | None = None,
     params: dict | None = None,
+    fallback_params: dict | None = None,
 ) -> jax.Array:
     """``x @ W`` with the registry impl running inside ``shard_map``.
 
@@ -332,7 +343,9 @@ def sod_matmul_spmd(
             w_loc = _with_shape(w_l, (k_local, n_local))
             key = registry.problem_key(w_loc, m=m_local, backend=backend,
                                        mesh=mesh_sig)
-            chosen, run_params = ops.resolve(key, impl, params=params, bm=bm)
+            chosen, run_params = ops.resolve(
+                key, impl, params=params, bm=bm,
+                fallback_params=fallback_params)
             y = chosen.run(x_l, w_loc, out_dtype=out_dtype, backend=backend,
                            **run_params)
             if plan.row_axis:

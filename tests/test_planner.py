@@ -1,0 +1,436 @@
+"""Layer-wise packing planner: plan build/replay, pack/abstract parity,
+dispatch plumbing, and the prune-method regression fixes."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import plan as plan_mod
+from repro.core import pruning, sod
+from repro.core.formats import BlockCSR, TiledCSC
+from repro.core.plan import ModelPlan, PackPlan
+from repro.core.sod import SoDConfig, sodify_abstract, sodify_params
+from repro.kernels import autotune, registry
+from repro.models.model import build_model
+from repro.runtime import planner
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _shapes_of(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.dtype(l.dtype)),
+        tree)
+
+
+def _leaf_shapes(tree):
+    return [(tuple(l.shape), str(jnp.dtype(l.dtype)))
+            for l in jax.tree_util.tree_leaves(tree)]
+
+
+# ---------------------------------------------------------------------------
+# pack / abstract parity (the shared sizing function at work)
+# ---------------------------------------------------------------------------
+SOD_SAMPLE = [
+    ("llama3.2-1b", SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)),
+    ("llama3.2-1b", SoDConfig(mode="block_csr", density=0.4,
+                              prune_method="block", min_dim=64)),
+    ("gemma2-27b", SoDConfig(mode="tiled_csc", density=0.5, min_dim=64)),
+    ("musicgen-medium", SoDConfig(mode="block_csr", density=0.25,
+                                  prune_method="block", min_dim=64)),
+]
+
+
+@pytest.mark.parametrize("arch,sod_cfg", SOD_SAMPLE,
+                         ids=[f"{a}-{c.mode}" for a, c in SOD_SAMPLE])
+def test_plan_pack_abstract_parity(arch, sod_cfg):
+    """sodify_abstract(shapes, plan) ≡ shapes of sodify_params(params, plan)
+    — same treedef, same leaf shapes and dtypes, for both formats."""
+    cfg = configs.reduced(configs.get_config(arch)).with_(sod=sod_cfg)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(32,))
+    assert len(plan) >= 4
+    concrete = sodify_params(params, sod_cfg, plan=plan)
+    abstract = sodify_abstract(_shapes_of(params), sod_cfg, plan=plan)
+    assert (jax.tree_util.tree_structure(concrete)
+            == jax.tree_util.tree_structure(abstract))
+    assert _leaf_shapes(concrete) == _leaf_shapes(abstract)
+
+
+def test_abstract_plan_replays_on_concrete_params():
+    """The dry-run direction: a plan built from ShapeDtypeStructs (no weight
+    values) replays on concrete weights with identical packed shapes AND
+    identical tuning-cache keys."""
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    plan = planner.build_plan(_shapes_of(params), sod_cfg, cfg=cfg,
+                              m_values=(32,))
+    concrete = sodify_params(params, sod_cfg, plan=plan)
+    abstract = sodify_abstract(_shapes_of(params), sod_cfg, plan=plan)
+    assert _leaf_shapes(concrete) == _leaf_shapes(abstract)
+
+    is_packed = lambda l: isinstance(l, (TiledCSC, BlockCSR))
+    c_leaves = [l for l in jax.tree_util.tree_leaves(
+        concrete, is_leaf=is_packed) if is_packed(l)]
+    a_leaves = [l for l in jax.tree_util.tree_leaves(
+        abstract, is_leaf=is_packed) if is_packed(l)]
+    assert c_leaves and len(c_leaves) == len(a_leaves)
+    for c, a in zip(c_leaves, a_leaves):
+        if c.lead:
+            continue  # stacked layouts dispatch via the dense bypass
+        kc = autotune.key_str(registry.problem_key(c, m=32, backend="cpu"))
+        ka = autotune.key_str(registry.problem_key(a, m=32, backend="cpu"))
+        assert kc == ka
+
+
+def test_plan_json_roundtrip_identical_pack():
+    sod_cfg = SoDConfig(mode="block_csr", density=0.4, prune_method="block",
+                        min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(16,))
+    blob = json.dumps(plan.to_json())
+    plan2 = ModelPlan.from_json(json.loads(blob))
+    assert plan2.entries == plan.entries
+    assert _leaf_shapes(sodify_params(params, sod_cfg, plan=plan)) \
+        == _leaf_shapes(sodify_params(params, sod_cfg, plan=plan2))
+
+
+def test_plan_save_load(tmp_path):
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    params = build_model(cfg).init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(16,))
+    path = plan.save(tmp_path / "plan.json")
+    assert ModelPlan.load(path).entries == plan.entries
+
+
+# ---------------------------------------------------------------------------
+# planner never loses to the global-config pack; wins when packing doesn't pay
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("density", [0.3, 0.85])
+def test_plan_bytes_never_exceed_global_pack(density):
+    sod_cfg = SoDConfig(mode="tiled_csc", density=density, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(32,))
+    planned = sod.tree_weight_bytes(sodify_params(params, sod_cfg, plan=plan))
+    global_ = sod.tree_weight_bytes(sodify_params(params, sod_cfg))
+    assert planned["compressed"] <= global_["compressed"]
+    if density == 0.85:
+        # packing at this density exceeds dense bytes; the planner must
+        # have left at least one layer dense and strictly win
+        assert any(e.mode == "dense" for e in plan.entries.values())
+        assert planned["compressed"] < global_["compressed"]
+
+
+def test_plan_entry_bytes_match_packed_leaves():
+    """PackPlan.compressed_bytes agrees with the packed containers' own
+    accounting — the planner's comparisons are real bytes."""
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.4, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    params = build_model(cfg).init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(32,))
+    packed = sodify_params(params, sod_cfg, plan=plan)
+    flat, _ = sod._flatten_named(packed)
+    checked = 0
+    for name, leaf in flat:
+        e = plan.get(name)
+        if e is None or not isinstance(leaf, (TiledCSC, BlockCSR)):
+            continue
+        assert e.compressed_bytes() == leaf.nbytes_compressed()
+        checked += 1
+    assert checked >= 3
+
+
+# ---------------------------------------------------------------------------
+# dispatch plumbing: blocks run under their layer's plan
+# ---------------------------------------------------------------------------
+def test_apply_honors_plan_impl_hint():
+    w = pruning.random_sparse(KEY, (256, 256), 0.3)
+    p = sod.pack_param(w, SoDConfig(mode="tiled_csc", density=1.0))
+    entry = PackPlan(mode="tiled_csc", shape=(256, 256), cap=p.cap,
+                     impl="jnp", dtype=str(p.dtype))
+    x = jax.random.normal(KEY, (8, 256), jnp.float32)
+    with registry.record_dispatches() as log:
+        y = sod.apply(x, p, plan=entry)
+    assert log and log[-1]["impl"] == "jnp_oracle"
+    assert log[-1]["source"] == "forced"
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_active_plan_layout_lookup_and_params():
+    """With a ModelPlan installed, a bare sod.apply resolves the operand's
+    entry by layout signature and applies its tuned dispatch params."""
+    w = pruning.random_sparse(KEY, (256, 384), 0.3)
+    p = sod.pack_param(w, SoDConfig(mode="tiled_csc", density=1.0))
+    entry = PackPlan(mode="tiled_csc", shape=(256, 384), cap=p.cap,
+                     impl="pallas", dispatch_params={"bm": 64},
+                     dtype=str(p.dtype))
+    mp = ModelPlan({".blocks.mlp.w_gate": entry})
+    x = jax.random.normal(KEY, (16, 256), jnp.float32)
+    with plan_mod.use_plan(mp), registry.record_dispatches() as log:
+        y = sod.apply(x, p)
+    assert log[-1]["impl"] == "pallas_fused"
+    assert log[-1]["params"]["bm"] == 64  # the plan's tuned param applied
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               atol=2e-3, rtol=1e-3)
+    # outside the context the same call falls back to ordinary dispatch
+    with registry.record_dispatches() as log2:
+        sod.apply(x, p)
+    assert log2[-1]["source"] != "forced"
+
+
+def test_model_forward_under_plan_matches_no_plan():
+    """Installing the plan changes dispatch hints, not numerics."""
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.4, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(32,))
+    packed = sodify_params(params, sod_cfg, plan=plan)
+    from repro.data.pipeline import SyntheticLMData
+
+    batch = SyntheticLMData(cfg, 2, 32, seed=0).batch(0)
+    with plan_mod.use_plan(plan):
+        loss_planned, _ = model.loss(packed, batch)
+    loss_plain, _ = model.loss(packed, batch)
+    assert float(loss_planned) == pytest.approx(float(loss_plain), abs=1e-5)
+
+
+def test_subplans_and_suffix_lookup():
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    params = build_model(cfg).init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(32,))
+    sub = plan.subplans("mlp")
+    assert set(sub) >= {"w_gate", "w_up", "w_down"}
+    assert plan.for_suffix("attn.wo") is plan.get(".blocks.attn.wo")
+    assert plan.for_suffix("definitely.not.there") is None
+
+
+# ---------------------------------------------------------------------------
+# tuning-cache feedback: warmup keyed off the plan; hints read the cache
+# ---------------------------------------------------------------------------
+def test_warmup_plan_populates_cache_at_plan_keys(tmp_path):
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    params = build_model(cfg).init(KEY)
+    plan = planner.build_plan(params, sod_cfg, cfg=cfg, m_values=(16,))
+    cache = autotune.TuningCache(tmp_path / "cache.json")
+    stats = planner.warmup_plan(plan, (16,), backend="cpu", cache=cache)
+    assert stats["tuned"] >= 1
+    # every packed leaf of the planned pack hits the cache at the layout the
+    # model dispatches (scan stacks dispatch their per-matrix slice)
+    packed = sodify_params(params, sod_cfg, plan=plan)
+    hits = misses = 0
+    for leaf in jax.tree_util.tree_leaves(
+            packed, is_leaf=lambda l: isinstance(l, (TiledCSC, BlockCSR))):
+        if not isinstance(leaf, (TiledCSC, BlockCSR)):
+            continue
+        if leaf.lead:
+            flat_v = leaf.vals.reshape((-1,) + leaf.vals.shape[-4:])
+            flat_r = leaf.rows.reshape((-1,) + leaf.rows.shape[-4:])
+            leaf = TiledCSC(flat_v[0], flat_r[0], leaf.shape, leaf.tile)
+        key = registry.problem_key(leaf, m=16, backend="cpu")
+        if cache.get(key) is not None:
+            hits += 1
+        else:
+            misses += 1
+    assert hits >= 1 and misses == 0
+    # idempotent: a second warmup is all cache hits
+    stats2 = planner.warmup_plan(plan, (16,), backend="cpu", cache=cache)
+    assert stats2["tuned"] == 0 and stats2["cached"] >= 1
+
+
+def test_plan_hint_seeds_cold_cache_but_never_overrides_tuned(tmp_path):
+    """dispatch_params were recorded at one M; a winner measured at the
+    actual (layout, M) must win over them."""
+    w = pruning.random_sparse(KEY, (256, 256), 0.3)
+    p = sod.pack_param(w, SoDConfig(mode="tiled_csc", density=1.0))
+    entry = PackPlan(mode="tiled_csc", shape=(256, 256), cap=p.cap,
+                     dispatch_params={"bm": 8}, dtype=str(p.dtype))
+    mp = ModelPlan({".w": entry})
+    x = jax.random.normal(KEY, (16, 256), jnp.float32)
+    cache = autotune.TuningCache(tmp_path / "cache.json")
+    autotune.set_cache(cache)
+    try:
+        # cold cache (interpret backend → pallas_fused, which takes bm):
+        # the hint seeds dispatch
+        with plan_mod.use_plan(mp), registry.record_dispatches() as log:
+            sod.apply(x, p, backend="interpret")
+        assert log[-1]["impl"] == "pallas_fused"
+        assert log[-1]["params"].get("bm") == 8
+        # measured winner at this (layout, M): the hint must not override
+        key = registry.problem_key(p, m=16, backend="interpret")
+        cache.put(key, "pallas_fused", {"bm": 128}, us=1.0)
+        with plan_mod.use_plan(mp), registry.record_dispatches() as log2:
+            sod.apply(x, p, backend="interpret")
+        assert log2[-1]["source"] == "tuned"
+        assert log2[-1]["params"].get("bm") == 128
+    finally:
+        autotune.set_cache(None)
+
+
+def test_build_plan_reads_tuned_winner_params(tmp_path):
+    """A measured tuning-cache entry's params ride into the plan's dispatch
+    hint (the tuning-cache → sodify_params feedback loop)."""
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.3, min_dim=64)
+    cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
+    params = build_model(cfg).init(KEY)
+    cache = autotune.TuningCache(tmp_path / "tuned.json")
+    cold = planner.build_plan(params, sod_cfg, cfg=cfg, cache=cache,
+                              m_values=(16,))
+    assert all(not e.dispatch_params for e in cold.entries.values())
+    planner.warmup_plan(cold, (16,), backend=registry.current_backend(),
+                        cache=cache)
+    warm = planner.build_plan(params, sod_cfg, cfg=cfg, cache=cache,
+                              m_values=(16,))
+    tuned_notes = [e.note for e in warm.entries.values()
+                   if e.mode != "dense"]
+    assert tuned_notes and all(n.startswith("tuned:") for n in tuned_notes)
+
+
+# ---------------------------------------------------------------------------
+# regression: stacked-leaf nm pruning (sodify_params used to silently run
+# block_prune for prune_method="nm")
+# ---------------------------------------------------------------------------
+def test_sodify_params_stacked_nm_prune_matches_pack_param():
+    w = jax.random.normal(KEY, (2, 128, 128), jnp.float32)
+    sod_cfg = SoDConfig(mode="tiled_csc", density=0.5, prune_method="nm",
+                        min_dim=64)
+    packed = sodify_params({"w_down": w}, sod_cfg)["w_down"]
+    assert isinstance(packed, TiledCSC) and packed.lead == (2,)
+    per_slice = [sod.pack_param(w[i], sod_cfg) for i in range(2)]
+    cap = max(p.cap for p in per_slice)
+    for i in range(2):
+        expect = sod.pack_param(w[i], sod_cfg).to_dense()
+        got = TiledCSC(packed.vals[i], packed.rows[i], packed.shape,
+                       packed.tile).to_dense()
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+    # nm result must differ from what the old silent block_prune fallthrough
+    # produced
+    block_cfg = dataclasses.replace(sod_cfg, prune_method="block")
+    old = sodify_params({"w_down": w}, block_cfg)["w_down"]
+    assert not np.array_equal(np.asarray(packed.to_dense()),
+                              np.asarray(old.to_dense()))
+    assert cap <= 64  # 4:8 structured pruning halves every column
+
+
+def test_plan_dense_fallback_layers_are_still_pruned():
+    """A mode='dense' entry chooses the storage format, not whether the
+    layer is sparse: the weight must come back pruned, matching what the
+    global-config pack applies before storing."""
+    w = jax.random.normal(KEY, (128, 128), jnp.float32)
+    entry = PackPlan(mode="dense", shape=(128, 128), density=0.4,
+                     prune_method="magnitude", dtype="float32")
+    plan = ModelPlan({".w_down": entry})
+    out = sodify_params({"w_down": w}, SoDConfig(mode="tiled_csc",
+                                                 density=0.4, min_dim=64),
+                        plan=plan)["w_down"]
+    assert isinstance(out, jax.Array)
+    nnz = int(jnp.count_nonzero(out))
+    assert nnz == pytest.approx(0.4 * w.size, rel=0.05)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(pruning.magnitude_prune(w, 0.4)))
+    # prune=False replays the raw weight
+    raw = sodify_params({"w_down": w}, SoDConfig(mode="tiled_csc",
+                                                 density=0.4, min_dim=64),
+                        prune=False, plan=plan)["w_down"]
+    np.testing.assert_array_equal(np.asarray(raw), np.asarray(w))
+
+
+def test_plan_cap_truncation_warns():
+    """Replaying a plan whose cap budget underestimates the data must warn,
+    never silently drop weights."""
+    # all non-zeros concentrated in the first 32 rows → per-column nnz 32
+    w = jnp.zeros((128, 128)).at[:32, :].set(1.0)
+    entry = PackPlan(mode="tiled_csc", shape=(128, 128), density=1.0,
+                     cap=8, dtype="float32")
+    plan = ModelPlan({".w_down": entry})
+    cfg = SoDConfig(mode="tiled_csc", density=1.0, min_dim=64)
+    with pytest.warns(UserWarning, match="truncated"):
+        packed = sodify_params({"w_down": w}, cfg, plan=plan)["w_down"]
+    assert packed.cap == 8
+    # a sufficient cap replays losslessly with no warning
+    import warnings
+
+    ok = ModelPlan({".w_down": dataclasses.replace(entry, cap=32)})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        packed = sodify_params({"w_down": w}, cfg, plan=ok)["w_down"]
+    np.testing.assert_array_equal(np.asarray(packed.to_dense()),
+                                  np.asarray(w))
+
+
+def test_block_csr_explicit_bcap_clamps_tile_nnz():
+    """With a plan-provided bcap that truncates, tile_nnz must count the
+    stored sub-blocks, not the pre-truncation ones."""
+    from repro.core.formats import pack_block_csr
+
+    w = jnp.ones((128, 128))
+    p = pack_block_csr(w, tile=(128, 128), br=8, bcap=4)
+    assert p.bcap == 4
+    assert int(jnp.max(p.tile_nnz)) == 4
+
+
+def test_block_csr_lossy_bcap_keeps_largest_norm_blocks():
+    """ESE-style load capping: truncation drops the smallest-norm
+    sub-blocks, not the highest-index ones."""
+    from repro.core.formats import pack_block_csr
+
+    # block i (rows 8i..8i+8) filled with value i+1 → norm grows with index
+    w = jnp.repeat(jnp.arange(1, 17, dtype=jnp.float32), 8)[:, None] \
+        * jnp.ones((1, 128))
+    p = pack_block_csr(w, tile=(128, 128), br=8, bcap=4)
+    kept = sorted(int(i) for i in np.asarray(p.block_ids).reshape(-1))
+    assert kept == [12, 13, 14, 15]
+    # lossless bcap keeps the canonical ascending-index layout
+    full = pack_block_csr(w, tile=(128, 128), br=8)
+    assert list(np.asarray(full.block_ids).reshape(-1)) == list(range(16))
+    np.testing.assert_array_equal(np.asarray(full.to_dense()),
+                                  np.asarray(w))
+
+
+def test_drivers_reject_plan_without_sod():
+    from repro.launch import serve, train
+
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "llama3.2-1b", "--reduced", "--plan", "auto"])
+    with pytest.raises(SystemExit):
+        train.main(["--arch", "llama3.2-1b", "--reduced", "--plan", "auto"])
+
+
+def test_prune_weight_unknown_method_raises():
+    w = jnp.ones((128, 128))
+    with pytest.raises(ValueError, match="unknown prune method"):
+        sod.prune_weight(w, 0.5, "typo")
+    bad = SoDConfig(mode="tiled_csc", density=0.5, prune_method="typo",
+                    min_dim=64)
+    with pytest.raises(ValueError, match="unknown prune method"):
+        sodify_params({"w_down": jnp.ones((2, 128, 128))}, bad)
+
+
+# ---------------------------------------------------------------------------
+# legacy (no-plan) abstract bcap now tracks the data-dependent pack
+# ---------------------------------------------------------------------------
+def test_noplan_abstract_block_bcap_matches_concrete_magnitude():
+    """Element-granular pruning keeps ~every sub-block alive; the abstract
+    bcap must say nb (it used to say ~1.5·density·nb and diverge)."""
+    sod_cfg = SoDConfig(mode="block_csr", density=0.3, min_dim=64)
+    w = pruning.random_sparse(KEY, (256, 256), 0.9)  # pre-prune dense-ish
+    concrete = sodify_params({"w_down": w}, sod_cfg)["w_down"]
+    abstract = sodify_abstract(
+        {"w_down": jax.ShapeDtypeStruct((256, 256), jnp.float32)},
+        sod_cfg)["w_down"]
+    assert abstract.bcap == concrete.bcap == 16  # nb = 128 // 8

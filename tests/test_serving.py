@@ -79,3 +79,54 @@ def test_serve_driver_end_to_end():
         "--prompt-len", "8", "--gen", "4"])
     assert summary["generated"] == 4
     assert summary["decode_tok_per_s"] > 0
+
+
+def test_sample_tokens_defensive_extraction():
+    """Regression: the old ``jnp.asarray(outs)[:8, 0]`` assumed (B, 1) token
+    steps — it crashed on empty output lists and misreported the audio
+    family's (B, 1, C) codebook stacks."""
+    from repro.launch.serve import _sample_tokens
+
+    # token model: per-step (B, 1)
+    outs = [jnp.full((4, 1), i) for i in range(10)]
+    assert _sample_tokens(outs) == list(range(8))
+    # audio: per-step (B, 1, C) — codebook 0 of batch row 0, one per step
+    outs = [(jnp.arange(3) + 10 * i).reshape(1, 1, 3) for i in range(4)]
+    assert _sample_tokens(outs) == [0, 10, 20, 30]
+    # small --gen and empty output must not crash
+    assert _sample_tokens([jnp.ones((2, 1), jnp.int32)]) == [1]
+    assert _sample_tokens([]) == []
+    assert _sample_tokens([jnp.zeros((0,), jnp.int32)]) == []
+
+
+def test_serve_audio_family_reports_sample():
+    """The audio family used to crash/misreport sample extraction."""
+    from repro.launch import serve
+
+    summary = serve.main([
+        "--arch", "musicgen-medium", "--reduced", "--batch", "2",
+        "--prompt-len", "4", "--gen", "2"])
+    assert summary["generated"] == 2
+    assert len(summary["sample"]) == 2
+    assert all(isinstance(t, int) for t in summary["sample"])
+
+
+def test_serve_plan_dump_and_replay(tmp_path):
+    """serve --plan auto dumps a plan that replays to identical packing and
+    identical generated tokens."""
+    from repro.launch import serve
+
+    plan_path = tmp_path / "plan.json"
+    s1 = serve.main([
+        "--arch", "llama3.2-1b", "--reduced", "--batch", "2",
+        "--prompt-len", "8", "--gen", "3", "--sod", "tiled_csc",
+        "--density", "0.4", "--plan", "auto",
+        "--plan-json", str(plan_path)])
+    assert plan_path.exists()
+    s2 = serve.main([
+        "--arch", "llama3.2-1b", "--reduced", "--batch", "2",
+        "--prompt-len", "8", "--gen", "3", "--sod", "tiled_csc",
+        "--density", "0.4", "--plan", str(plan_path)])
+    assert s1["plan_layers"] == s2["plan_layers"] >= 4
+    assert s1["plan_bytes"] == s2["plan_bytes"]
+    assert s1["sample"] == s2["sample"]

@@ -377,6 +377,48 @@ def test_packed_matmul_plans_follow_param_specs():
         assert plan.batch_axes == ("data",)
 
 
+@needs_mesh
+def test_planner_attaches_spmd_plans_and_dispatch_uses_them(
+        interpret_backend, tmp_path):
+    """build_plan(mesh=) records each leaf's resident-sharding SpmdPlan;
+    under use_plan a bare sod.apply runs shard_map-wrapped under exactly
+    that plan — including after a JSON round trip."""
+    from repro import configs
+    from repro.core import plan as plan_mod
+    from repro.core import sod
+    from repro.core.plan import ModelPlan
+    from repro.core.sod import SoDConfig, sodify_params
+    from repro.runtime import planner
+
+    mesh = _mesh()
+    cfg = configs.get_config("llama3.2-1b")
+    sodc = SoDConfig(mode="tiled_csc", density=0.3, min_dim=128)
+    wu = pruning.random_sparse(jax.random.fold_in(KEY, 21), (256, 512), 0.3)
+    wd = pruning.random_sparse(jax.random.fold_in(KEY, 22), (512, 256), 0.3)
+    params = {"blocks": {"mlp": {"w_up": wu, "w_down": wd}}}
+    plan = planner.build_plan(params, sodc, cfg=cfg, mesh=mesh,
+                              m_values=(48,))
+    assert plan.mesh == spmd.mesh_key(mesh)
+    assert plan.get(".blocks.mlp.w_up").spmd["col_axis"] == "model"
+    assert plan.get(".blocks.mlp.w_down").spmd["row_axis"] == "model"
+    # round trip: the loaded plan is the plan
+    loaded = ModelPlan.load(plan.save(tmp_path / "plan.json"))
+    assert loaded.entries == plan.entries and loaded.mesh == plan.mesh
+
+    packed = sodify_params(params, sodc, plan=loaded)
+    x = jax.random.normal(jax.random.fold_in(KEY, 23), (48, 256),
+                          jnp.float32)
+    with mesh, plan_mod.use_plan(loaded), \
+            registry.record_dispatches() as log:
+        y = jax.jit(lambda x, w: sod.apply(x, w))(
+            x, packed["blocks"]["mlp"]["w_up"])
+    assert log and "col=model" in log[-1]["key"].mesh
+    np.testing.assert_allclose(
+        np.asarray(y),
+        np.asarray(x @ packed["blocks"]["mlp"]["w_up"].to_dense()),
+        atol=2e-2)
+
+
 # ---------------------------------------------------------------------------
 # acceptance smoke (always runs: subprocess forces its own devices)
 # ---------------------------------------------------------------------------
