@@ -1,5 +1,7 @@
 """Batched serving example: prefill a prompt batch, decode greedily, with
-Sparse-on-Dense weights (compressed storage, dense MXU compute).
+Sparse-on-Dense weights (compressed storage, dense MXU compute) — then the
+continuous-batching engine replaying a ragged Poisson request trace
+through a paged KV cache.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py
 """
@@ -17,6 +19,17 @@ def main():
     print("== hybrid (zamba2: O(1) mamba state + shared-attn KV) ==")
     serve.main(["--arch", "zamba2-2.7b", "--reduced", "--batch", "2",
                 "--prompt-len", "16", "--gen", "8"])
+    demo_engine()
+
+
+def demo_engine():
+    """Continuous batching: staggered arrivals, mixed lengths, paged KV."""
+    print("== engine: Poisson trace, SoD weights, paged KV cache ==")
+    serve.main(["--arch", "llama3.2-1b", "--reduced", "--engine",
+                "--requests", "8", "--arrival-rate", "0.5",
+                "--prompt-len", "16", "--gen", "8", "--max-slots", "4",
+                "--page-size", "8",
+                "--sod", "tiled_csc", "--density", "0.3", "--plan", "auto"])
 
 
 if __name__ == "__main__":

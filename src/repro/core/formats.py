@@ -160,8 +160,12 @@ class TiledCSC:
         return slots * (value_bits + index_bits) // 8
 
     def nbytes_dense(self, value_bits: int = 16) -> int:
+        # nbytes_compressed counts the stacked (layer-group / expert) lead
+        # dims via vals.shape; the dense equivalent must too, or stacked
+        # leaves report a compression ratio off by prod(lead)
         kp, np_ = padded_shape(self.shape, self.tile)
-        return kp * np_ * value_bits // 8
+        return int(np.prod(self.lead, dtype=np.int64)) * kp * np_ \
+            * value_bits // 8
 
     def compression_ratio(self) -> float:
         return self.nbytes_compressed() / max(self.nbytes_dense(), 1)
@@ -343,8 +347,10 @@ class BlockCSR:
         return v + i
 
     def nbytes_dense(self, value_bits: int = 16) -> int:
+        # see TiledCSC.nbytes_dense: the lead dims count on both sides
         kp, np_ = padded_shape(self.shape, self.tile)
-        return kp * np_ * value_bits // 8
+        return int(np.prod(self.lead, dtype=np.int64)) * kp * np_ \
+            * value_bits // 8
 
     def to_dense(self) -> jax.Array:
         if self.lead:

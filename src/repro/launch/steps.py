@@ -72,3 +72,32 @@ def make_decode_step(model: LM, greedy: bool = True, mesh=None, plan=None):
         return next_tokens, logits, cache
 
     return decode_step
+
+
+def make_prefill_full(model: LM, mesh=None, plan=None):
+    """Prefill returning *all* positions' logits (not just the last).
+
+    The serving engine pads prompts to a page-aligned bucket before the
+    fused prefill, so the last *real* token's logits live at ``len - 1``
+    rather than ``-1`` — the engine slices them out on the host.
+    """
+    def prefill_full(params: Params, batch: Params):
+        with mesh_context(mesh), use_plan(plan):
+            logits, _, cache = model.apply(params, batch, want_cache=True)
+        return logits, cache
+
+    return prefill_full
+
+
+def make_paged_decode_step(model: LM, mesh=None, plan=None):
+    """Ragged decode step over the paged KV pool (continuous batching):
+    every engine slot decodes at its own ``pos`` against its own pages."""
+    def paged_decode_step(params: Params, pool: Params, block_tables,
+                          tokens, pos):
+        with mesh_context(mesh), use_plan(plan):
+            logits, pool = model.paged_decode_step(
+                params, pool, block_tables, tokens, pos)
+        next_tokens = jnp.argmax(logits, axis=-1)
+        return next_tokens, logits, pool
+
+    return paged_decode_step

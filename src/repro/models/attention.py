@@ -181,35 +181,123 @@ def init_cache(batch: int, max_len: int, spec: AttnSpec,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def decode_attention(
-    params: Params,
-    x: jax.Array,             # (B, 1, D)
-    cache: Params,
-    pos: jax.Array,           # scalar current position
-    spec: AttnSpec,
-    window: int | None = None,
-):
-    """One decode step: update cache at ``pos``, attend to the prefix."""
-    b = x.shape[0]
-    q, k_new, v_new = _project_qkv(
-        params, x, spec, jnp.full((b, 1), pos, jnp.int32)
-    )
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+def _decode_positions(pos: jax.Array, b: int) -> jax.Array:
+    """(B, 1) RoPE positions from a scalar or per-sequence ``pos``."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((b, 1), pos, jnp.int32)
+    return pos.reshape(b, 1)
+
+
+def _attend_cached(q, k_cache, v_cache, pos, spec: AttnSpec,
+                   window: int | None):
+    """One-token attention over a position-ordered KV cache.
+
+    q (B,1,H,hd); caches (B,L,KV,hd); ``pos`` scalar or (B,).  Keys at
+    positions beyond each row's ``pos`` (or outside its sliding window)
+    are masked per row.
+    """
+    b = q.shape[0]
     s_max = k_cache.shape[1]
     kvh = spec.n_kv_heads
     g = spec.n_heads // kvh
     qh = q.reshape(b, 1, kvh, g, spec.head_dim)
     scores = _block_scores(qh, k_cache, spec)   # (B,KV,G,1,Smax)
     k_pos = jnp.arange(s_max)
-    mask = k_pos <= pos
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    mask = k_pos[None, :] <= pos_b[:, None]
     if window is not None:
-        mask &= k_pos > pos - window
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+        mask &= k_pos[None, :] > pos_b[:, None] - window
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum(
         "bkgqc,bckh->bqkgh", p.astype(v_cache.dtype), v_cache,
         preferred_element_type=jnp.float32,
     )
-    out = out.reshape(b, 1, spec.n_heads * spec.head_dim).astype(x.dtype)
+    return out.reshape(b, 1, spec.n_heads * spec.head_dim)
+
+
+def decode_attention(
+    params: Params,
+    x: jax.Array,             # (B, 1, D)
+    cache: Params,
+    pos: jax.Array,           # current position: scalar, or (B,) per row
+    spec: AttnSpec,
+    window: int | None = None,
+):
+    """One decode step: update cache at ``pos``, attend to the prefix.
+
+    ``pos`` may be a scalar (every row at the same position — the static
+    serve path) or a ``(B,)`` vector (ragged continuous batching: each
+    row writes its new KV at its own position and gets its own causal /
+    window mask).
+    """
+    b = x.shape[0]
+    pos = jnp.asarray(pos)
+    q, k_new, v_new = _project_qkv(params, x, spec, _decode_positions(pos, b))
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new, (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new, (0, pos, 0, 0))
+    else:
+        upd = jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (p, 0, 0)))
+        k_cache = upd(cache["k"], k_new, pos)
+        v_cache = upd(cache["v"], v_new, pos)
+    out = _attend_cached(q, k_cache, v_cache, pos, spec, window)
+    out = out.astype(x.dtype)
     return sod.apply(out, params["wo"]), {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous-batching engine)
+# ---------------------------------------------------------------------------
+def init_paged_pool(n_pages: int, page_size: int, spec: AttnSpec,
+                    dtype=jnp.bfloat16) -> Params:
+    """A pool of fixed-size KV pages shared by all running sequences.
+
+    Page 0 is conventionally the trash page: inactive engine slots point
+    their whole block table at it, so their (ignored) writes never touch
+    a live sequence.  The allocator in :mod:`repro.serving.pool` never
+    hands it out.
+    """
+    shape = (n_pages, page_size, spec.n_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_decode_attention(
+    params: Params,
+    x: jax.Array,              # (B, 1, D)
+    pool: Params,              # {"k","v"}: (n_pages, page, KV, hd)
+    block_tables: jax.Array,   # (B, max_pages) page ids per logical block
+    pos: jax.Array,            # (B,) per-sequence positions
+    spec: AttnSpec,
+    window: int | None = None,
+):
+    """One decode step against the paged KV pool.
+
+    Row ``b``'s logical position ``p`` lives in page
+    ``block_tables[b, p // page]`` at offset ``p % page``; the new token's
+    KV is scattered there, then the row's pages are gathered back into
+    position order and attended with the same per-row mask as the dense
+    vector-``pos`` path — so paged and dense decode are exactly
+    interchangeable for equal cache contents.
+    """
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, spec, _decode_positions(pos, b))
+    page_size = pool["k"].shape[1]
+    page = jnp.take_along_axis(
+        block_tables, (pos // page_size)[:, None], axis=1)[:, 0]
+    off = pos % page_size
+    k_pool = pool["k"].at[page, off].set(k_new[:, 0])
+    v_pool = pool["v"].at[page, off].set(v_new[:, 0])
+    # gather: (B, max_pages, page, KV, hd) → position-ordered (B, L, KV, hd)
+    k_cache = k_pool[block_tables].reshape(
+        b, -1, spec.n_kv_heads, spec.head_dim)
+    v_cache = v_pool[block_tables].reshape(
+        b, -1, spec.n_kv_heads, spec.head_dim)
+    out = _attend_cached(q, k_cache, v_cache, pos, spec, window)
+    out = out.astype(x.dtype)
+    return sod.apply(out, params["wo"]), {"k": k_pool, "v": v_pool}

@@ -1,0 +1,86 @@
+"""Cache geometry: explicit per-leaf axis metadata for decode caches.
+
+Every model family's decode cache is a pytree whose leaves carry a batch
+axis (one row per running sequence) and, for attention KV leaves, a
+sequence axis.  The serving layers need both pieces of information:
+
+* the serve driver grows a prefill-sized cache out to the generation
+  horizon (pad the *sequence* axes, nothing else — the old shape-matching
+  heuristic in ``launch/serve.py`` silently mis-grew any leaf whose
+  unrelated dim happened to equal the prompt length);
+* the continuous-batching engine scatters one sequence's state into a
+  *slot* of the batched cache when a request is admitted (write along the
+  *batch* axis).
+
+Each family publishes a spec tree mirroring its cache structure whose
+leaves are :class:`CacheAxes` (``LM.cache_spec()``); the helpers here
+consume it.  ``CacheAxes`` is deliberately NOT registered as a pytree so
+``jax.tree_util.tree_map`` treats it as a leaf and the spec zips against
+the cache tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAxes:
+    """Axis roles of one cache leaf: ``batch`` is the slot axis, ``seq``
+    the KV sequence axis (None for O(1) recurrent state)."""
+
+    batch: int
+    seq: int | None = None
+
+    def shifted(self, lead: int) -> "CacheAxes":
+        """The same leaf stacked under ``lead`` extra leading dims
+        (layer-group stacking in the assemblies)."""
+        return CacheAxes(
+            self.batch + lead,
+            None if self.seq is None else self.seq + lead,
+        )
+
+
+def shift_axes(spec_tree, lead: int):
+    """Shift every :class:`CacheAxes` in a spec tree by ``lead`` leading
+    dims — how per-cell specs compose into stacked family specs."""
+    return jax.tree_util.tree_map(lambda ax: ax.shifted(lead), spec_tree)
+
+
+def grow_cache(cache, spec_tree, new_len: int):
+    """Zero-pad every sequence axis out to ``new_len`` (no-op for leaves
+    already at least that long, and for seq-less recurrent state)."""
+
+    def grow(t, ax: CacheAxes):
+        if ax.seq is None or t.shape[ax.seq] >= new_len:
+            return t
+        pad = [(0, 0)] * t.ndim
+        pad[ax.seq] = (0, new_len - t.shape[ax.seq])
+        return jnp.pad(t, pad)
+
+    return jax.tree_util.tree_map(grow, cache, spec_tree)
+
+
+def write_slot(cache, sub, spec_tree, slot):
+    """Scatter a single-sequence cache ``sub`` (batch size 1 on every
+    batch axis) into row ``slot`` of the batched ``cache``.
+
+    ``slot`` may be a traced scalar — the engine jits this once per cache
+    structure and reuses it for every admission.  A ``sub`` leaf shorter
+    than the cache on its sequence axis writes a prefix; the tail keeps
+    whatever the slot held, which is safe because decode masks key
+    positions beyond the sequence's ``pos`` and overwrites them in order.
+    """
+
+    def write(t, s, ax: CacheAxes):
+        starts = [jnp.asarray(0)] * t.ndim
+        starts[ax.batch] = jnp.asarray(slot)
+        return jax.lax.dynamic_update_slice(
+            t, s.astype(t.dtype), tuple(starts))
+
+    return jax.tree_util.tree_map(write, cache, sub, spec_tree)

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import cache as cache_mod
 from repro.models import layers, transformer
 
 Params = dict[str, Any]
@@ -66,13 +67,54 @@ class LM:
 
     def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
                     pos: jax.Array):
-        """tokens: (B, 1) (or (B, 1, C) audio).  Returns (logits, cache)."""
+        """tokens: (B, 1) (or (B, 1, C) audio).  Returns (logits, cache).
+
+        ``pos`` is a scalar (all rows at the same position) or a ``(B,)``
+        vector (ragged batches — each row decodes at its own position)."""
         cfg = self.cfg
         if cfg.family == "hybrid":
             return transformer.hybrid_decode(params, cache, tokens, pos, cfg)
         if cfg.family == "ssm":
             return transformer.xlstm_decode(params, cache, tokens, pos, cfg)
         return transformer.transformer_decode(params, cache, tokens, pos, cfg)
+
+    # -- cache geometry (serving engine / serve driver) ------------------------
+    def cache_spec(self) -> Params:
+        """Structure-matched tree of :class:`repro.models.cache.CacheAxes`
+        describing every decode-cache leaf's batch/sequence axes."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return transformer.hybrid_cache_spec(cfg)
+        if cfg.family == "ssm":
+            return transformer.xlstm_cache_spec(cfg)
+        return transformer.transformer_cache_spec(cfg)
+
+    def grow_cache(self, cache: Params, new_len: int) -> Params:
+        """Explicit cache growth: zero-pad the *sequence* axes (and only
+        those) out to ``new_len``.  Replaces the serve driver's old
+        shape-matching heuristic, which mis-grew any leaf whose unrelated
+        dim happened to equal the prompt length."""
+        return cache_mod.grow_cache(cache, self.cache_spec(), new_len)
+
+    # -- paged decode (continuous-batching engine) -----------------------------
+    def init_paged_pool(self, n_pages: int, page_size: int) -> Params:
+        if self.cfg.family in ("hybrid", "ssm"):
+            raise ValueError(
+                f"family {self.cfg.family!r} keeps O(1) recurrent state per "
+                "slot; only attention-family KV caches are paged")
+        return transformer.transformer_init_paged_pool(
+            self.cfg, n_pages, page_size)
+
+    def paged_decode_step(self, params: Params, pool: Params,
+                          block_tables: jax.Array, tokens: jax.Array,
+                          pos: jax.Array):
+        """Ragged decode step over the paged KV pool: tokens (B, 1), pos
+        (B,), block_tables (B, max_pages).  Returns (logits, pool)."""
+        if self.cfg.family in ("hybrid", "ssm"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no paged decode path")
+        return transformer.transformer_decode_paged(
+            params, pool, block_tables, tokens, pos, self.cfg)
 
     # -- info -------------------------------------------------------------------
     def param_count(self, params: Params | None = None) -> int:

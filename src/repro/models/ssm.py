@@ -197,6 +197,16 @@ def init_mamba_cache(batch: int, spec: MambaSpec, dtype=jnp.bfloat16) -> Params:
     }
 
 
+def mamba_cache_axes() -> Params:
+    """Axis roles of :func:`init_mamba_cache` leaves (structure-matched
+    spec tree for :mod:`repro.models.cache`).  All mamba state is O(1) in
+    sequence length — batch at axis 0, no sequence axis anywhere."""
+    from repro.models.cache import CacheAxes
+
+    ax = CacheAxes(batch=0)
+    return {"ssm": ax, "conv": {"x": ax, "b": ax, "c": ax}}
+
+
 def mamba_decode_step(params: Params, x: jax.Array, cache: Params,
                       spec: MambaSpec):
     """x (B, 1, D) → (B, 1, D); updates ssm/conv states."""

@@ -25,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.core import plan as plan_mod
 from repro.core import sod
 from repro.models import attention as attn
+from repro.models import cache as cache_mod
 from repro.models import layers, moe, ssm, xlstm
 
 Params = dict[str, Any]
@@ -156,11 +157,19 @@ def attn_block_full(bp: Params, x: jax.Array, cfg: ModelConfig,
 
 def attn_block_decode(bp: Params, x: jax.Array, cache: Params,
                       pos: jax.Array, cfg: ModelConfig,
-                      window: int | None):
+                      window: int | None,
+                      block_tables: jax.Array | None = None):
+    """One decode block.  ``cache`` is a dense per-slot KV cache, or —
+    when ``block_tables`` is given — this layer's slice of the paged KV
+    pool (the engine's slot→page mapping)."""
     spec = attn_spec(cfg)
     h = layers.rms_norm(x, bp["norm1"], cfg.norm_eps)
-    ao, cache = attn.decode_attention(bp["attn"], h, cache, pos, spec,
-                                      window=window)
+    if block_tables is None:
+        ao, cache = attn.decode_attention(bp["attn"], h, cache, pos, spec,
+                                          window=window)
+    else:
+        ao, cache = attn.paged_decode_attention(
+            bp["attn"], h, cache, block_tables, pos, spec, window=window)
     if cfg.use_post_norms:
         ao = layers.rms_norm(ao, bp["norm1_post"], cfg.norm_eps)
     x = x + ao
@@ -316,6 +325,63 @@ def transformer_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
+def transformer_cache_spec(cfg: ModelConfig) -> Params:
+    """Axis roles of :func:`transformer_init_cache` / prefill KV leaves:
+    (G, P, B, S, KV, hd) — batch 2, sequence 3."""
+    ax = cache_mod.CacheAxes(batch=2, seq=3)
+    return {"k": ax, "v": ax}
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous-batching engine)
+# ---------------------------------------------------------------------------
+def transformer_init_paged_pool(cfg: ModelConfig, n_pages: int,
+                                page_size: int) -> Params:
+    """Per-layer KV page pools, stacked (G, P, n_pages, page, KV, hd).
+
+    Every layer indexes its own pool with the *same* block tables — a
+    sequence's logical block j lives at one page id across all layers, so
+    the engine keeps a single (slots, max_pages) table.
+    """
+    p_period = cfg.pattern_period
+    n_groups = cfg.n_layers // p_period
+    dt = _dtype(cfg)
+    shape = (n_groups, p_period, n_pages, page_size,
+             cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def transformer_decode_paged(params: Params, pool: Params,
+                             block_tables: jax.Array, tokens: jax.Array,
+                             pos: jax.Array, cfg: ModelConfig):
+    """One ragged decode step over the paged KV pool.
+
+    ``pos`` is a (B,) vector — one position per engine slot.  Mirrors
+    :func:`transformer_decode` with each layer's dense cache slice
+    replaced by its page pool + the shared block tables.
+    """
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    p_period = cfg.pattern_period
+
+    def group_body(x, inp):
+        gp, kp, vp = inp
+        ks, vs = [], []
+        for j in range(p_period):
+            bp = jax.tree_util.tree_map(lambda t: t[j], gp)
+            layer_pool = {"k": kp[j], "v": vp[j]}
+            x, layer_pool = attn_block_decode(
+                bp, x, layer_pool, pos, cfg, cfg.window_for(j),
+                block_tables=block_tables)
+            ks.append(layer_pool["k"])
+            vs.append(layer_pool["v"])
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (knew, vnew) = _scan(
+        group_body, x, (params["blocks"], pool["k"], pool["v"]), cfg)
+    logits = project_logits(params, x, cfg)
+    return logits, {"k": knew, "v": vnew}
+
+
 # ---------------------------------------------------------------------------
 # HybridLM (zamba2): mamba stack + shared attention block
 # ---------------------------------------------------------------------------
@@ -416,6 +482,17 @@ def hybrid_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     }
 
 
+def hybrid_cache_spec(cfg: ModelConfig) -> Params:
+    """Axis roles of :func:`hybrid_init_cache`: mamba state stacked under
+    (G, P) leading dims, shared-attn KV under (G,) — and crucially the
+    mamba leaves have NO sequence axis, which is exactly what the old
+    shape-matching growth heuristic got wrong when an unrelated dim
+    happened to equal the prompt length."""
+    m_axes = cache_mod.shift_axes(ssm.mamba_cache_axes(), 2)
+    kv = cache_mod.CacheAxes(batch=1, seq=2)
+    return {"ssm": m_axes["ssm"], "conv": m_axes["conv"], "k": kv, "v": kv}
+
+
 # ---------------------------------------------------------------------------
 # XLSTMLM: (slstm_every-1) mLSTM + 1 sLSTM per group
 # ---------------------------------------------------------------------------
@@ -513,6 +590,15 @@ def xlstm_decode(params: Params, cache: Params, tokens: jax.Array,
     if has_s:
         new_cache["slstm"] = ys[1]
     return logits, new_cache
+
+
+def xlstm_cache_spec(cfg: ModelConfig) -> Params:
+    """Axis roles of :func:`xlstm_init_cache`: mLSTM state stacked under
+    (G, n_m), sLSTM state under (G,); all O(1) in sequence length."""
+    spec = {"mlstm": cache_mod.shift_axes(xlstm.mlstm_cache_axes(), 2)}
+    if cfg.slstm_every:
+        spec["slstm"] = cache_mod.shift_axes(xlstm.slstm_cache_axes(), 1)
+    return spec
 
 
 def xlstm_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:

@@ -176,6 +176,15 @@ def init_mlstm_cache(batch: int, spec: XLSTMSpec, dtype=jnp.bfloat16) -> Params:
     }
 
 
+def mlstm_cache_axes() -> Params:
+    """Axis roles of :func:`init_mlstm_cache` leaves — O(1) matrix-memory
+    state, batch at axis 0, no sequence axis."""
+    from repro.models.cache import CacheAxes
+
+    ax = CacheAxes(batch=0)
+    return {"c": ax, "n": ax, "m": ax, "conv": ax}
+
+
 def _conv(u, w, b, state=None):
     from repro.models.ssm import _causal_conv
     return _causal_conv(u, w, b, state)
@@ -243,3 +252,10 @@ def init_slstm_cache(batch: int, spec: XLSTMSpec) -> tuple:
     hd = spec.d_model // nh
     zeros = jnp.zeros((batch, nh, hd), jnp.float32)
     return (zeros, zeros, zeros + 1e-6, zeros - 1e30)
+
+
+def slstm_cache_axes() -> tuple:
+    """Axis roles of :func:`init_slstm_cache` leaves (h, c, n, m)."""
+    from repro.models.cache import CacheAxes
+
+    return (CacheAxes(batch=0),) * 4

@@ -1,0 +1,11 @@
+"""Continuous-batching serving engine (paged KV cache + request
+scheduler) over Sparse-on-Dense packed weights."""
+from repro.serving.engine import Engine, bucket_len, static_generate
+from repro.serving.pool import PagePool, PoolExhausted
+from repro.serving.scheduler import Request, Scheduler, SeqState
+from repro.serving.trace import poisson_trace
+
+__all__ = [
+    "Engine", "PagePool", "PoolExhausted", "Request", "Scheduler",
+    "SeqState", "bucket_len", "poisson_trace", "static_generate",
+]

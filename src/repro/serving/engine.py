@@ -1,0 +1,428 @@
+"""Continuous-batching inference engine over Sparse-on-Dense weights.
+
+One :class:`Engine` owns a fixed number of *slots* (rows of the batched
+decode step) and admits/evicts requests every step, so sequences of
+different lengths join and leave the running batch continuously — the
+regime where the paper's compressed weight storage pays off most, since
+decode is weight-bytes-bound and every slot shares the one packed copy.
+
+Two cache regimes, chosen by model family:
+
+* **paged** (attention families): per-layer KV page pools
+  (:func:`repro.models.transformer.transformer_init_paged_pool`) with a
+  host-side free-list allocator (:class:`repro.serving.pool.PagePool`) and
+  one block table per slot.  Admission runs the fused prefill on a
+  page-aligned prompt bucket (exact for causal attention — padded
+  positions are masked at decode and overwritten in order) and scatters
+  the KV into freshly allocated pages; decode runs
+  :func:`repro.launch.steps.make_paged_decode_step` with per-slot ``pos``
+  vectors; completion returns the pages to the pool.
+* **slot state** (hybrid / ssm): O(1) recurrent state lives in a
+  max_slots-batched cache; admission replays the prompt through the
+  batch-1 decode step (exactly the static serve path) and scatters the
+  final state into the slot via the explicit cache-axes API
+  (:func:`repro.models.cache.write_slot`).
+
+Greedy tokens are bit-identical to per-request static-batch serve
+(:func:`static_generate`) because every per-row computation is
+batch-row-independent and padding/masked positions contribute exact
+zeros.  One documented exception: MoE capacity-factor routing is
+batch-global, so under expert-capacity pressure an engine batch can drop
+different tokens than a batch-1 run.
+
+All jit-compiled shapes are fixed by (max_slots, pool size, block-table
+width, prompt buckets), so steady-state serving never recompiles;
+:meth:`Engine.warmup` pre-compiles everything for the queued trace and is
+timed separately from steady-state throughput.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import steps as steps_mod
+from repro.models import cache as cache_mod
+from repro.models.model import LM
+from repro.serving.pool import PagePool, PoolExhausted
+from repro.serving.scheduler import Request, Scheduler, SeqState
+
+Params = dict[str, Any]
+
+
+def bucket_len(plen: int, page_size: int, chunk: int | None = None) -> int:
+    """Page-aligned prefill bucket for a prompt of ``plen`` tokens.
+
+    Rounds up to the page size so prompt KV fills whole pages; prompts
+    longer than the attention chunk additionally round to a multiple of
+    the chunk (``chunked_attention`` requires divisibility there).
+    """
+    b = -(-plen // page_size) * page_size
+    if chunk and b > chunk:
+        lcm = math.lcm(page_size, chunk)
+        b = -(-plen // lcm) * lcm
+    return b
+
+
+def _pool_write_pages(pool: Params, cache: Params, page_ids):
+    """Scatter a whole prefill's KV into pages ``page_ids`` of every
+    layer's pool in one shot — page j of the bucketed prompt (positions
+    [j·page, (j+1)·page)) lands in pool page ``page_ids[j]``.  One pool
+    copy per admission instead of one per page."""
+    page_size = pool["k"].shape[3]
+
+    def write(pl, cl):
+        # cl (G, P, 1, S, KV, hd), S = len(page_ids)·page
+        g, p = cl.shape[0], cl.shape[1]
+        pages = cl[:, :, 0].reshape(
+            g, p, -1, page_size, cl.shape[-2], cl.shape[-1])
+        return pl.at[:, :, page_ids].set(pages)
+
+    return {"k": write(pool["k"], cache["k"]),
+            "v": write(pool["v"], cache["v"])}
+
+
+class Engine:
+    """Continuous-batching engine: paged KV pool + request scheduler +
+    ragged batched decode over one shared (optionally SoD-packed) model."""
+
+    def __init__(self, model: LM, params: Params, *, max_slots: int = 4,
+                 page_size: int = 16, max_len: int = 256,
+                 n_pages: int | None = None, plan=None, mesh=None):
+        cfg = model.cfg
+        if cfg.family in ("vlm", "audio"):
+            raise NotImplementedError(
+                f"engine serves token-in/token-out families; {cfg.family!r} "
+                "needs frontend plumbing (prefix embeds / codebook stacks)")
+        self.model = model
+        self.params = params
+        self.plan = plan
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self.paged = cfg.family not in ("hybrid", "ssm")
+        self.sched = Scheduler(max_slots)
+        self._step_idx = 0
+        self._submitted: list[Request] = []
+        self._first_seen: dict[int, float] = {}
+        self._finished: dict[int, SeqState] = {}
+        self.stats: dict[str, float] = {"warmup_s": 0.0}
+        self._pos = np.zeros(self.max_slots, np.int32)
+        self._tok = np.zeros((self.max_slots, 1), np.int32)
+
+        if self.paged:
+            self.page_size = int(page_size)
+            self._chunk = cfg.attn_chunk
+            self.max_pages = -(-self.max_len // self.page_size)
+            if n_pages is None:
+                n_pages = 1 + self.max_slots * self.max_pages
+            self.page_pool = PagePool(n_pages, self.page_size)
+            self.pool = model.init_paged_pool(n_pages, self.page_size)
+            self.block_tables = np.full(
+                (self.max_slots, self.max_pages), PagePool.TRASH_PAGE,
+                np.int32)
+            self._decode = jax.jit(
+                steps_mod.make_paged_decode_step(model, mesh=mesh, plan=plan))
+            self._prefill = jax.jit(
+                steps_mod.make_prefill_full(model, mesh=mesh, plan=plan))
+            self._page_write = jax.jit(_pool_write_pages)
+        else:
+            self.cache = model.init_cache(self.max_slots, self.max_len)
+            spec = model.cache_spec()
+            self._decode = jax.jit(
+                steps_mod.make_decode_step(model, mesh=mesh, plan=plan))
+            self._write_slot = jax.jit(
+                lambda c, sub, slot: cache_mod.write_slot(c, sub, spec, slot))
+
+    # -- admission ------------------------------------------------------------
+    def _bucket(self, plen: int) -> int:
+        return bucket_len(plen, self.page_size, self._chunk)
+
+    def submit(self, req: Request) -> None:
+        plen = len(req.tokens)
+        end = plen + req.max_new - 1          # last cache position + 1
+        if self.paged:
+            need = max(self._bucket(plen), end)
+            pages = self.page_pool.pages_for(need)
+            if need > self.max_len or pages > self.page_pool.n_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} positions / {pages} "
+                    f"pages; engine max_len={self.max_len}, pool="
+                    f"{self.page_pool.n_pages}")
+        elif end > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: needs {end} positions; engine "
+                f"max_len={self.max_len}")
+        self._submitted.append(req)
+        self.sched.submit(req)
+
+    def _lifetime_pages(self, req: Request) -> int:
+        """Worst-case pages the request will ever hold: its prefill
+        bucket plus decode growth out to its last write position."""
+        plen = len(req.tokens)
+        need = max(self._bucket(plen), plen + req.max_new - 1)
+        return self.page_pool.pages_for(need)
+
+    def _reserved_pages(self) -> int:
+        """Pages the *running* sequences may still claim via growth.
+        Admission holds these back, so mid-decode growth can never find
+        the pool empty (no preemption exists to recover from that)."""
+        r = 0
+        for seq in self.sched.active.values():
+            end = seq.pos + seq.remaining        # last write position + 1
+            r += max(0, self.page_pool.pages_for(end) - len(seq.pages))
+        return r
+
+    def _admit_paged(self, req: Request) -> list[tuple[int, int]]:
+        plen = len(req.tokens)
+        bucket = self._bucket(plen)
+        padded = np.zeros(bucket, np.int32)
+        padded[:plen] = req.tokens
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(padded)[None]})
+        first = int(jnp.argmax(logits[0, plen - 1]))
+        pages = self.page_pool.alloc(self.page_pool.pages_for(bucket))
+        self.pool = self._page_write(
+            self.pool, cache, jnp.asarray(np.asarray(pages, np.int32)))
+        seq = self.sched.place(req, pos=plen, first_token=first, pages=pages,
+                               ready_wall=self._first_seen[req.rid])
+        self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
+        self.block_tables[seq.slot, :len(pages)] = pages
+        return self._post_admit(seq)
+
+    def _admit_state(self, req: Request) -> list[tuple[int, int]]:
+        prompt = jnp.asarray(req.tokens, jnp.int32)[None]
+        sub = self.model.init_cache(1, self.max_len)
+        nxt = None
+        for t in range(prompt.shape[1]):
+            nxt, _, sub = self._decode(
+                self.params, sub, prompt[:, t:t + 1],
+                jnp.asarray(t, jnp.int32))
+        first = int(np.asarray(nxt).reshape(-1)[0])
+        seq = self.sched.place(req, pos=prompt.shape[1], first_token=first,
+                               pages=[],
+                               ready_wall=self._first_seen[req.rid])
+        self.cache = self._write_slot(self.cache, sub,
+                                      jnp.asarray(seq.slot))
+        return self._post_admit(seq)
+
+    def _post_admit(self, seq: SeqState) -> list[tuple[int, int]]:
+        self._pos[seq.slot] = seq.pos
+        self._tok[seq.slot, 0] = seq.generated[-1]
+        events = [(seq.req.rid, seq.generated[-1])]
+        if seq.remaining == 0:               # max_new == 1: done at prefill
+            self._complete(seq.slot)
+        return events
+
+    def _complete(self, slot: int) -> None:
+        seq = self.sched.release(slot)
+        seq.done_wall = time.perf_counter()
+        if self.paged:
+            self.page_pool.free(seq.pages)
+            self.block_tables[slot, :] = PagePool.TRASH_PAGE
+        self._pos[slot] = 0
+        self._tok[slot, 0] = 0
+        self._finished[seq.req.rid] = seq
+
+    # -- stepping -------------------------------------------------------------
+    def step(self) -> list[tuple[int, int]]:
+        """Advance virtual time one step: admit what fits, grow pages,
+        run one ragged batched decode.  Returns (rid, token) emissions."""
+        now = self._step_idx
+        now_wall = time.perf_counter()
+        # latency clock starts when a request becomes admissible, not when
+        # it reaches the queue head — queue wait is part of tail latency
+        for r in self.sched.pending:
+            if r.arrival > now:
+                break                        # pending is arrival-sorted
+            self._first_seen.setdefault(r.rid, now_wall)
+        events: list[tuple[int, int]] = []
+        while self.sched.has_free_slot():
+            req = self.sched.peek_ready(now)
+            if req is None:
+                break
+            if self.paged:
+                # head-of-line: admit only if the pool can cover this
+                # request's lifetime AND every running sequence's
+                # worst-case growth — mid-decode growth must never fail
+                budget = (self.page_pool.free_count
+                          - self._reserved_pages())
+                if self._lifetime_pages(req) > budget:
+                    break
+                events += self._admit_paged(req)
+            else:
+                events += self._admit_state(req)
+
+        if self.paged:
+            for seq in self.sched.active.values():
+                # next write position may cross into an unallocated page
+                need_idx = seq.pos // self.page_size
+                if need_idx >= len(seq.pages):
+                    if not self.page_pool.can_alloc(1):
+                        raise PoolExhausted(
+                            "invariant violation: admission reserved too "
+                            f"few pages for seq {seq.req.rid}'s growth")
+                    (pg,) = self.page_pool.alloc(1)
+                    seq.pages.append(pg)
+                    self.block_tables[seq.slot, need_idx] = pg
+
+        if self.sched.active:
+            tok = jnp.asarray(self._tok)
+            pos = jnp.asarray(self._pos)
+            if self.paged:
+                nxt, _, self.pool = self._decode(
+                    self.params, self.pool, jnp.asarray(self.block_tables),
+                    tok, pos)
+            else:
+                nxt, _, self.cache = self._decode(
+                    self.params, self.cache, tok, pos)
+            nxt = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
+            for slot, seq in list(self.sched.active.items()):
+                t = int(nxt[slot])
+                seq.generated.append(t)
+                seq.pos += 1
+                self._pos[slot] = seq.pos
+                self._tok[slot, 0] = t
+                events.append((seq.req.rid, t))
+                if seq.remaining == 0:
+                    self._complete(slot)
+
+        self._step_idx += 1
+        return events
+
+    # -- warmup / run ---------------------------------------------------------
+    def warmup(self) -> float:
+        """Pre-compile every jitted shape the queued trace will hit, so
+        steady-state throughput excludes compile time.  Results are
+        discarded — no engine state changes."""
+        t0 = time.perf_counter()
+        if self.paged:
+            buckets = sorted({self._bucket(len(r.tokens))
+                              for r in self.sched.pending})
+            for b in buckets:
+                logits, cache = self._prefill(
+                    self.params, {"tokens": jnp.zeros((1, b), jnp.int32)})
+                trash = np.full(b // self.page_size, PagePool.TRASH_PAGE,
+                                np.int32)
+                jax.block_until_ready(self._page_write(
+                    self.pool, cache, jnp.asarray(trash))["k"])
+                jax.block_until_ready(logits)
+            out = self._decode(
+                self.params, self.pool, jnp.asarray(self.block_tables),
+                jnp.asarray(self._tok), jnp.asarray(self._pos))
+            jax.block_until_ready(out[0])
+        else:
+            sub = self.model.init_cache(1, self.max_len)
+            out = self._decode(self.params, sub,
+                               jnp.zeros((1, 1), jnp.int32),
+                               jnp.asarray(0, jnp.int32))
+            jax.block_until_ready(out[0])
+            jax.block_until_ready(jax.tree_util.tree_leaves(
+                self._write_slot(self.cache, sub, jnp.asarray(0)))[0])
+            out = self._decode(self.params, self.cache,
+                               jnp.asarray(self._tok),
+                               jnp.asarray(self._pos))
+            jax.block_until_ready(out[0])
+        dt = time.perf_counter() - t0
+        self.stats["warmup_s"] += dt
+        return dt
+
+    def run(self, requests: list[Request] | None = None, *,
+            warmup: bool = True, max_steps: int | None = None) -> dict:
+        """Drive the engine until every submitted request completes.
+
+        Returns ``{"tokens": {rid: [...]}, "stats": {...}}`` with
+        compile/warmup time reported separately from steady-state
+        throughput (tokens/sec over the post-warmup serving loop).
+        """
+        for r in requests or []:
+            self.submit(r)
+        if warmup:
+            self.warmup()
+        if max_steps is None:
+            max_steps = (max((r.arrival for r in self._submitted), default=0)
+                         + sum(r.max_new for r in self._submitted)
+                         + self.max_slots + 16)
+        t0 = time.perf_counter()
+        n_tok = 0
+        start = self._step_idx
+        while not self.sched.done:
+            if self._step_idx - start > max_steps:
+                raise RuntimeError(
+                    f"engine stalled: {len(self.sched.pending)} pending / "
+                    f"{len(self.sched.active)} active after {max_steps} steps")
+            n_tok += len(self.step())
+        steady_s = time.perf_counter() - t0
+        lat = sorted(s.done_wall - s.ready_wall
+                     for s in self._finished.values())
+        self.stats.update({
+            "steps": self._step_idx - start,
+            "completed": len(self._finished),
+            "generated_tokens": n_tok,
+            "steady_s": round(steady_s, 4),
+            "steady_tok_per_s": round(n_tok / max(steady_s, 1e-9), 2),
+            "p50_latency_s": round(float(np.percentile(lat, 50)), 4)
+            if lat else 0.0,
+            "p99_latency_s": round(float(np.percentile(lat, 99)), 4)
+            if lat else 0.0,
+        })
+        return {"tokens": {rid: list(s.generated)
+                           for rid, s in sorted(self._finished.items())},
+                "stats": dict(self.stats)}
+
+
+# ---------------------------------------------------------------------------
+# static-batch reference
+# ---------------------------------------------------------------------------
+# jit caches key on function identity, so building fresh closures per
+# request would recompile identical shapes every call (the reference runs
+# once per request per bench variant).  Keyed by object ids, which is safe
+# here because the cached closures keep model/plan alive — their ids can't
+# be recycled while an entry exists.
+_STATIC_FNS: dict[tuple[int, int], tuple] = {}
+
+
+def _static_fns(model: LM, plan):
+    key = (id(model), id(plan))
+    if key not in _STATIC_FNS:
+        _STATIC_FNS[key] = (
+            jax.jit(steps_mod.make_decode_step(model, plan=plan)),
+            jax.jit(steps_mod.make_prefill_step(model, plan=plan)),
+        )
+    return _STATIC_FNS[key]
+
+
+def static_generate(model: LM, params: Params, req: Request,
+                    max_len: int | None = None, plan=None) -> list[int]:
+    """Per-request static-batch greedy generation — the reference the
+    engine must match token-for-token.  Mirrors the classic serve path:
+    fused prefill for attention families, prompt replay through the
+    batch-1 decode step for recurrent families."""
+    cfg = model.cfg
+    prompt = jnp.asarray(req.tokens, jnp.int32)[None]
+    plen = prompt.shape[1]
+    if max_len is None:
+        max_len = plen + req.max_new
+    decode, prefill = _static_fns(model, plan)
+    if cfg.family in ("hybrid", "ssm"):
+        cache = model.init_cache(1, max_len)
+        nxt = None
+        for t in range(plen):
+            nxt, _, cache = decode(params, cache, prompt[:, t:t + 1],
+                                   jnp.asarray(t, jnp.int32))
+        first = int(np.asarray(nxt).reshape(-1)[0])
+    else:
+        nxt, cache = prefill(params, {"tokens": prompt})
+        cache = model.grow_cache(cache, max_len)
+        first = int(np.asarray(nxt).reshape(-1)[0])
+    out = [first]
+    tok = jnp.full((1, 1), first, jnp.int32)
+    for t in range(req.max_new - 1):
+        nxt, _, cache = decode(params, cache, tok,
+                               jnp.asarray(plen + t, jnp.int32))
+        out.append(int(np.asarray(nxt).reshape(-1)[0]))
+        tok = jnp.asarray(nxt, jnp.int32).reshape(1, 1)
+    return out

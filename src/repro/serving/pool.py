@@ -1,0 +1,71 @@
+"""Host-side page accounting for the paged KV cache.
+
+The device half of the paged cache is a plain pytree of page arrays
+(:func:`repro.models.attention.init_paged_pool` stacked per layer); this
+module owns the *allocation* half: a free list of page ids plus the
+invariants the engine's tests gate on — a page is never handed to two
+sequences at once, and every freed page returns to the pool.
+
+Page 0 is reserved as the trash page: inactive engine slots point their
+whole block table at it so their (ignored) per-step writes can never touch
+a live sequence.  The allocator never hands it out.
+"""
+from __future__ import annotations
+
+import collections
+
+
+class PoolExhausted(RuntimeError):
+    """No free pages left — the trace needs a bigger pool (or admission
+    should back off, which the engine's scheduler does)."""
+
+
+class PagePool:
+    """Free-list allocator over ``n_pages`` fixed-size KV pages."""
+
+    TRASH_PAGE = 0
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self._free: collections.deque[int] = collections.deque(
+            range(1, n_pages))
+        self._allocated: set[int] = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated(self) -> frozenset[int]:
+        return frozenset(self._allocated)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache positions."""
+        return -(-int(n_tokens) // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` pages off the free list.  All-or-nothing."""
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"asked for {n} pages, {len(self._free)} free "
+                f"(pool of {self.n_pages})")
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            assert p not in self._allocated, f"page {p} double-allocated"
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        """Return pages to the pool.  Freeing a page that is not currently
+        allocated (double free, or the reserved trash page) raises."""
+        for p in pages:
+            if p not in self._allocated:
+                raise ValueError(f"freeing unallocated page {p}")
+            self._allocated.discard(p)
+            self._free.append(p)

@@ -1,0 +1,108 @@
+"""Request scheduler: admission queue + slot assignment + completion.
+
+The scheduler owns the *who runs where* state of the engine: a FIFO
+admission queue ordered by arrival step, the map of engine slots to
+running sequences, and the free-slot list.  It is deliberately free of
+any device state — the engine asks it what to admit, tells it what
+completed, and keeps the page pool / cache arrays itself.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request: a prompt and a generation budget.
+
+    ``arrival`` is in engine *steps* (virtual time) — the trace generator
+    produces Poisson arrivals on this clock and the engine admits a
+    request once its arrival step is reached and a slot + pages are free.
+    """
+
+    rid: int
+    tokens: np.ndarray            # (S,) int prompt token ids
+    max_new: int                  # generation budget (incl. prefill token)
+    arrival: int = 0
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size == 0:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new < 1:
+            raise ValueError(f"request {self.rid}: max_new must be >= 1")
+
+
+@dataclasses.dataclass
+class SeqState:
+    """Book-keeping for one running sequence in an engine slot."""
+
+    req: Request
+    slot: int
+    pos: int                      # next cache position to write
+    generated: list[int]
+    pages: list[int]              # paged families: allocated page ids
+    ready_wall: float = 0.0       # wall clock when first admissible
+    done_wall: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new - len(self.generated)
+
+
+class Scheduler:
+    """FIFO admission + slot assignment over ``max_slots`` engine slots.
+
+    Head-of-line order is strict: if the oldest admissible request does
+    not fit (no slot, or the engine reports no pages), nothing younger
+    jumps it — keeps engine-vs-static token equality trivially auditable.
+    """
+
+    def __init__(self, max_slots: int):
+        self.max_slots = int(max_slots)
+        self._pending: list[Request] = []      # sorted by (arrival, rid)
+        self.active: dict[int, SeqState] = {}  # slot -> running sequence
+        self._free_slots: list[int] = list(range(max_slots))[::-1]
+
+    # -- admission queue ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        bisect.insort(self._pending, req,
+                      key=lambda r: (r.arrival, r.rid))
+
+    @property
+    def pending(self) -> tuple[Request, ...]:
+        return tuple(self._pending)
+
+    def peek_ready(self, now_step: int) -> Request | None:
+        """Oldest request whose arrival step has been reached."""
+        if self._pending and self._pending[0].arrival <= now_step:
+            return self._pending[0]
+        return None
+
+    def has_free_slot(self) -> bool:
+        return bool(self._free_slots)
+
+    def place(self, req: Request, *, pos: int, first_token: int,
+              pages: list[int], ready_wall: float) -> SeqState:
+        """Admit the queue head into a free slot."""
+        assert self._pending and self._pending[0].rid == req.rid
+        self._pending.pop(0)
+        slot = self._free_slots.pop()
+        seq = SeqState(req=req, slot=slot, pos=pos,
+                       generated=[first_token], pages=pages,
+                       ready_wall=ready_wall)
+        self.active[slot] = seq
+        return seq
+
+    def release(self, slot: int) -> SeqState:
+        """Eviction on completion: free the slot, hand back the state."""
+        seq = self.active.pop(slot)
+        self._free_slots.append(slot)
+        return seq
+
+    @property
+    def done(self) -> bool:
+        return not self._pending and not self.active
