@@ -1,0 +1,38 @@
+"""Minimal junit-XML writer for the benchmark gate scripts.
+
+The CI test-matrix and spmd jobs get junit artifacts from pytest; the
+bench-smoke / serving-smoke jobs run plain gate scripts, so they emit the
+same format themselves — one ``<testcase>`` per gated invariant, with a
+``<failure>`` element carrying the human-readable reason when it trips.
+"""
+from __future__ import annotations
+
+import pathlib
+from xml.sax.saxutils import escape, quoteattr
+
+
+def write_junit(path: str | pathlib.Path, suite: str,
+                cases: list[tuple[str, str | None]]) -> pathlib.Path:
+    """Write ``cases`` — (name, failure message or None) pairs — as a
+    single-suite junit XML file."""
+    n_fail = sum(1 for _, msg in cases if msg)
+    lines = [
+        '<?xml version="1.0" encoding="utf-8"?>',
+        f'<testsuite name={quoteattr(suite)} tests="{len(cases)}" '
+        f'failures="{n_fail}" errors="0" skipped="0">',
+    ]
+    for name, msg in cases:
+        if msg:
+            lines.append(
+                f"  <testcase classname={quoteattr(suite)} "
+                f"name={quoteattr(name)}>"
+                f"<failure message={quoteattr(msg)}>{escape(msg)}"
+                f"</failure></testcase>")
+        else:
+            lines.append(
+                f"  <testcase classname={quoteattr(suite)} "
+                f"name={quoteattr(name)} />")
+    lines.append("</testsuite>")
+    path = pathlib.Path(path)
+    path.write_text("\n".join(lines) + "\n")
+    return path

@@ -347,6 +347,9 @@ def main(argv=None) -> int:
                     help="baseline BENCH_kernels.json; fail on >20%% "
                          "regression or any kernel-vs-ref mismatch")
     ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--junit", default=None,
+                    help="also write the per-case ref checks and "
+                         "regression gates as a junit XML file")
     ap.add_argument("--tuning-cache", default=None,
                     help="tuning-cache path; default is a throwaway temp "
                          "cache — benchmarking must not overwrite the "
@@ -387,6 +390,20 @@ def main(argv=None) -> int:
                     for r in result["records"] if not r["ref_ok"]]
     for p in problems:
         print(f"REGRESSION: {p}", file=sys.stderr)
+    if args.junit:
+        from _junit import write_junit
+
+        gates = [(f"ref:{r['name']}",
+                  None if r["ref_ok"]
+                  else f"max_abs_err={r.get('max_abs_err')}")
+                 for r in result["records"]]
+        # ref mismatches already failed above — don't double-count them
+        ref_failed = {r["name"] for r in result["records"]
+                      if not r["ref_ok"]}
+        gates += [(f"regression:{p.split(':', 1)[0]}", p)
+                  for p in problems
+                  if p.split(":", 1)[0] not in ref_failed]
+        print(f"# wrote {write_junit(args.junit, 'kernel_bench', gates)}")
     return 1 if problems else 0
 
 

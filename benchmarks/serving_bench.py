@@ -1,18 +1,32 @@
 """Serving-engine benchmark: continuous batching, dense vs Sparse-on-Dense.
 
-For one architecture this replays the same seeded Poisson request trace
-through the continuous-batching engine three ways — dense weights, SoD
-``tiled_csc`` and SoD ``block_csr`` at matched density, the packed
-variants under planner-built :class:`~repro.core.plan.PackPlan`s — and
-emits ``BENCH_serving.json``.
+Two modes, both emitting ``BENCH_serving.json`` (and optionally a junit
+XML of every gate for the CI artifact trail):
 
-Two correctness gates run on every case (CI fails on either):
+* **sweep** (default / ``--smoke``): replays the same seeded Poisson
+  request trace through the continuous-batching engine three ways — dense
+  weights, SoD ``tiled_csc`` and SoD ``block_csr`` at matched density,
+  the packed variants under planner-built
+  :class:`~repro.core.plan.PackPlan`s.
+* **stress** (``--stress``): a high-pressure shared-prefix trace (small
+  page pool + long prompts + one common few-shot prefix) through the
+  full scheduler — chunked prefill, preemption with page-level swapping,
+  and copy-on-write prefix sharing all enabled — and gates that each
+  actually fired: at least one preemption/swap-in cycle, prefix pages
+  reused (pages allocated for prompts strictly below the sum of prompt
+  pages), and multi-chunk prefill, with tokens still bit-identical to
+  the static reference.
+
+Correctness gates (CI fails on any):
 
 * **engine-vs-ref** — every request's greedy tokens from the engine must
   be identical to per-request static-batch generation
   (:func:`repro.serving.engine.static_generate`) with the same weights;
 * **compressed-bytes invariant** — the SoD variants' stored weight bytes
-  must be strictly below the dense variant's.
+  must be strictly below the dense variant's;
+* **stress counters** (stress mode) — preemptions >= 1, swapped-in pages
+  >= 1, shared prompt pages > 0, prompt pages allocated < sum of prompt
+  pages, prefill chunks > completed requests.
 
 Wall-clock throughput on CPU/interpret is NOT accelerator performance;
 the engine reports steady-state tokens/sec with compile/warmup excluded
@@ -22,6 +36,8 @@ bytes column, not absolute tok/s.
 Usage:
   PYTHONPATH=src python benchmarks/serving_bench.py --smoke \\
       --output BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --stress \\
+      --output BENCH_serving.json --junit pytest-junit-serving.xml
 """
 from __future__ import annotations
 
@@ -32,19 +48,32 @@ import sys
 
 import jax
 
+from _junit import write_junit
 from repro import configs
 from repro.core.sod import SoDConfig, sodify_params, tree_weight_bytes
 from repro.kernels import autotune
 from repro.models.model import build_model
 from repro.runtime import planner
-from repro.serving import Engine, bucket_len, poisson_trace, static_generate
+from repro.serving import (
+    Engine,
+    bucket_len,
+    poisson_trace,
+    shared_prefix_trace,
+    static_generate,
+)
 
 VARIANTS = ("dense", "tiled_csc", "block_csr")
 
+STRESS_COUNTERS = (
+    "prefill_chunks", "preemptions", "swapped_out_pages",
+    "swapped_in_pages", "cow_forks", "shared_prompt_pages",
+    "prompt_pages_total", "prompt_pages_fresh",
+)
 
-def bench_variant(arch: str, mode: str, *, density: float, requests: int,
-                  max_prompt: int, max_new: int, max_slots: int,
-                  page_size: int, seed: int, cache=None) -> dict:
+
+def _build_packed(arch: str, mode: str, *, density: float, seed: int,
+                  m_values, cache):
+    """(cfg, model, params, plan) with SoD packing for non-dense modes."""
     cfg = configs.reduced(configs.get_config(arch))
     if mode != "dense":
         # block_csr needs block-structured pruning: magnitude-scattered
@@ -57,15 +86,25 @@ def bench_variant(arch: str, mode: str, *, density: float, requests: int,
     params = model.init(jax.random.PRNGKey(seed))
     plan = None
     if cfg.sod.enabled:
-        if cfg.family in ("hybrid", "ssm"):
-            m_values = (1, max_slots)
-        else:
-            m_values = (bucket_len(max_prompt, page_size, cfg.attn_chunk),
-                        max_slots)
         plan = planner.load_or_build(
             "auto", params, cfg.sod, cfg=cfg, cache=cache,
             m_values=m_values)
         params = sodify_params(params, cfg.sod, plan=plan)
+    return cfg, model, params, plan
+
+
+def bench_variant(arch: str, mode: str, *, density: float, requests: int,
+                  max_prompt: int, max_new: int, max_slots: int,
+                  page_size: int, seed: int, cache=None) -> dict:
+    cfg0 = configs.reduced(configs.get_config(arch))
+    if cfg0.family in ("hybrid", "ssm"):
+        m_values = (1, max_slots)
+    else:
+        m_values = (bucket_len(max_prompt, page_size, cfg0.attn_chunk),
+                    max_slots)
+    cfg, model, params, plan = _build_packed(
+        arch, mode, density=density, seed=seed, m_values=m_values,
+        cache=cache)
     wb = tree_weight_bytes(params)
 
     if cfg.family in ("hybrid", "ssm"):
@@ -102,6 +141,96 @@ def bench_variant(arch: str, mode: str, *, density: float, requests: int,
     return rec
 
 
+def stress_variant(arch: str, mode: str, *, density: float, requests: int,
+                   prefix_len: int, max_prompt: int, max_new: int,
+                   max_slots: int, page_size: int, prefill_chunk: int,
+                   n_pages: int, arrival_gap: int, seed: int,
+                   cache=None) -> dict:
+    """High-pressure replay: chunked prefill + preemption + prefix
+    sharing on, pool sized to force at least one swap cycle."""
+    cfg, model, params, plan = _build_packed(
+        arch, mode, density=density, seed=seed,
+        m_values=(prefill_chunk, max_slots), cache=cache)
+    if cfg.family in ("hybrid", "ssm"):
+        raise ValueError("stress mode exercises the paged-KV scheduler; "
+                         f"{cfg.family!r} keeps O(1) slot state")
+    wb = tree_weight_bytes(params)
+    max_len = max_prompt + max_new
+    trace = shared_prefix_trace(
+        requests, prefix_len=prefix_len, max_prompt=max_prompt,
+        max_new=max_new, vocab=cfg.vocab, seed=seed,
+        arrival_gap=arrival_gap)
+    eng = Engine(model, params, max_slots=max_slots, page_size=page_size,
+                 max_len=max_len, n_pages=n_pages, plan=plan,
+                 prefill_chunk=prefill_chunk, preemption=True,
+                 prefix_sharing=True)
+    res = eng.run(trace)
+
+    mismatches = []
+    for req in trace:
+        ref = static_generate(model, params, req, plan=plan)
+        if res["tokens"][req.rid] != ref:
+            mismatches.append({"rid": req.rid, "ref": ref,
+                               "engine": res["tokens"][req.rid]})
+    s = res["stats"]
+    rec = {
+        "arch": cfg.name, "mode": mode, "stress": True,
+        "density": density if mode != "dense" else 1.0,
+        "requests": requests, "max_slots": max_slots,
+        "page_size": page_size, "n_pages": n_pages,
+        "prefill_chunk": prefill_chunk, "prefix_len": prefix_len,
+        "plan_layers": len(plan) if plan is not None else 0,
+        "weight_bytes": wb["compressed"],
+        "weight_bytes_dense": wb["dense"],
+        "compression_ratio": round(wb["ratio"], 4),
+        "match_static": not mismatches,
+        "mismatches": mismatches,
+        "preempt_order": list(eng.preempt_log),
+        **{k: s[k] for k in STRESS_COUNTERS},
+        **{k: s[k] for k in
+           ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
+            "generated_tokens", "p50_latency_s", "p99_latency_s")},
+    }
+    # post-run allocator hygiene: every page back, nothing leaked
+    rec["pool_clean"] = (not eng.page_pool.allocated
+                         and eng.page_pool.free_count
+                         == eng.page_pool.n_pages - 1
+                         and (eng.trie is None or len(eng.trie) == 0))
+    return rec
+
+
+def _stress_gates(rec: dict) -> list[tuple[str, str | None]]:
+    """(gate name, failure message or None) for one stress record."""
+    m = rec["mode"]
+
+    def gate(name, ok, msg):
+        return (f"{m}:{name}", None if ok else msg)
+
+    return [
+        gate("match_static", rec["match_static"],
+             f"engine tokens diverge from static reference "
+             f"({len(rec['mismatches'])} reqs)"),
+        gate("completed", rec["completed"] == rec["requests"],
+             f"only {rec['completed']}/{rec['requests']} completed"),
+        gate("chunked_prefill", rec["prefill_chunks"] > rec["requests"],
+             f"prefill_chunks={rec['prefill_chunks']} — chunking never "
+             f"split a prompt (requests={rec['requests']})"),
+        gate("preemption_cycle",
+             rec["preemptions"] >= 1 and rec["swapped_in_pages"] >= 1,
+             f"no full preemption/swap-in cycle (preemptions="
+             f"{rec['preemptions']}, swapped_in={rec['swapped_in_pages']})"),
+        gate("prefix_reuse", rec["shared_prompt_pages"] > 0,
+             "no prompt pages were shared"),
+        gate("page_saving",
+             rec["prompt_pages_fresh"] < rec["prompt_pages_total"],
+             f"pages allocated for prompts ({rec['prompt_pages_fresh']}) "
+             f"not below sum of prompt pages "
+             f"({rec['prompt_pages_total']})"),
+        gate("pool_clean", rec["pool_clean"],
+             "pages or trie entries leaked after drain"),
+    ]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
@@ -109,6 +238,10 @@ def main(argv=None) -> int:
     ap.add_argument("--density", type=float, default=0.3)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (CI gate sizing)")
+    ap.add_argument("--stress", action="store_true",
+                    help="high-pressure trace: chunked prefill + "
+                         "preemption/swap + prefix sharing, gated on each "
+                         "mechanism firing")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
@@ -116,48 +249,96 @@ def main(argv=None) -> int:
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--output", default="BENCH_serving.json")
+    ap.add_argument("--junit", default=None,
+                    help="also write every gate as a junit XML testcase")
     ap.add_argument("--tuning-cache", default=None)
     args = ap.parse_args(argv)
 
+    if args.stress:
+        if args.smoke:
+            ap.error("--stress and --smoke are mutually exclusive")
+        # the stress trace is calibrated (pool of 8 usable pages vs three
+        # 6-page lifetimes) so its preemption/sharing gates fire
+        # deterministically — free sizing would silently defeat them
+        for flag, default in (("requests", 16), ("prompt_len", 24),
+                              ("gen", 12), ("max_slots", 4),
+                              ("page_size", 8)):
+            if getattr(args, flag) != default:
+                ap.error(f"--stress replays a fixed calibrated trace; "
+                         f"--{flag.replace('_', '-')} is not configurable "
+                         "with it")
     if args.smoke:
         args.requests, args.prompt_len, args.gen = 6, 10, 5
         args.max_slots, args.page_size = 3, 4
     cache = autotune.install_cache(args.tuning_cache)
 
     cases = []
-    for mode in VARIANTS:
-        rec = bench_variant(
-            args.arch, mode, density=args.density, requests=args.requests,
-            max_prompt=args.prompt_len, max_new=args.gen,
-            max_slots=args.max_slots, page_size=args.page_size,
-            seed=args.seed, cache=cache)
-        cases.append(rec)
-        print(f"{rec['mode']:>10}  match={rec['match_static']!s:5}  "
-              f"bytes={rec['weight_bytes']:>9}  "
-              f"ratio={rec['compression_ratio']:.3f}  "
-              f"steady={rec['steady_tok_per_s']:.1f} tok/s  "
-              f"p99={rec['p99_latency_s']:.3f}s")
+    gates: list[tuple[str, str | None]] = []
+    if args.stress:
+        # long prompts vs a pool that cannot hold every admitted
+        # sequence's decode growth: 3 slots × up-to-6 lifetime pages
+        # against 8 usable pages forces eviction once growth starts,
+        # and the shared 8-token prefix (2 pages) packs once
+        for mode in ("dense", "tiled_csc"):
+            rec = stress_variant(
+                args.arch, mode, density=args.density, requests=6,
+                prefix_len=8, max_prompt=16, max_new=8, max_slots=3,
+                page_size=4, prefill_chunk=4, n_pages=9, arrival_gap=2,
+                seed=args.seed, cache=cache)
+            cases.append(rec)
+            gates += _stress_gates(rec)
+            print(f"{rec['mode']:>10}  match={rec['match_static']!s:5}  "
+                  f"chunks={rec['prefill_chunks']:>3}  "
+                  f"preempt={rec['preemptions']}  "
+                  f"swap_in={rec['swapped_in_pages']:>2}  "
+                  f"shared={rec['shared_prompt_pages']}  "
+                  f"forks={rec['cow_forks']}  "
+                  f"pages={rec['prompt_pages_fresh']}/"
+                  f"{rec['prompt_pages_total']}")
+        failures = [f"{name}: {msg}" for name, msg in gates if msg]
+    else:
+        for mode in VARIANTS:
+            rec = bench_variant(
+                args.arch, mode, density=args.density,
+                requests=args.requests, max_prompt=args.prompt_len,
+                max_new=args.gen, max_slots=args.max_slots,
+                page_size=args.page_size, seed=args.seed, cache=cache)
+            cases.append(rec)
+            print(f"{rec['mode']:>10}  match={rec['match_static']!s:5}  "
+                  f"bytes={rec['weight_bytes']:>9}  "
+                  f"ratio={rec['compression_ratio']:.3f}  "
+                  f"steady={rec['steady_tok_per_s']:.1f} tok/s  "
+                  f"p99={rec['p99_latency_s']:.3f}s")
 
-    dense_bytes = next(c["weight_bytes"] for c in cases
-                       if c["mode"] == "dense")
-    failures = []
-    for c in cases:
-        if not c["match_static"]:
-            failures.append(f"{c['mode']}: engine tokens diverge from "
-                            f"static reference ({len(c['mismatches'])} reqs)")
-        if c["mode"] != "dense" and c["weight_bytes"] >= dense_bytes:
-            failures.append(
-                f"{c['mode']}: compressed bytes {c['weight_bytes']} not "
-                f"below dense {dense_bytes}")
+        dense_bytes = next(c["weight_bytes"] for c in cases
+                           if c["mode"] == "dense")
+        failures = []
+        for c in cases:
+            match_msg = None
+            if not c["match_static"]:
+                match_msg = (f"engine tokens diverge from static reference "
+                             f"({len(c['mismatches'])} reqs)")
+            gates.append((f"{c['mode']}:match_static", match_msg))
+            if c["mode"] != "dense":
+                bytes_msg = None
+                if c["weight_bytes"] >= dense_bytes:
+                    bytes_msg = (f"compressed bytes {c['weight_bytes']} "
+                                 f"not below dense {dense_bytes}")
+                gates.append((f"{c['mode']}:compressed_bytes", bytes_msg))
+        failures = [f"{name}: {msg}" for name, msg in gates if msg]
 
     out = {
-        "kind": "serving_bench",
+        "kind": "serving_bench_stress" if args.stress else "serving_bench",
         "arch": args.arch, "density": args.density, "smoke": args.smoke,
+        "stress": args.stress,
         "cases": cases, "failures": failures, "ok": not failures,
     }
     path = pathlib.Path(args.output)
     path.write_text(json.dumps(out, indent=2))
     print(f"wrote {path}")
+    if args.junit:
+        suite = "serving_bench_stress" if args.stress else "serving_bench"
+        print(f"wrote {write_junit(args.junit, suite, gates)}")
     if failures:
         print("FAIL:\n  " + "\n  ".join(failures))
         return 1

@@ -79,7 +79,10 @@ def engine_main(args, model, params, plan):
     else:
         max_len = bucket_len(args.prompt_len, page, cfg.attn_chunk) + args.gen
     eng = Engine(model, params, max_slots=args.max_slots, page_size=page,
-                 max_len=max_len, plan=plan)
+                 max_len=max_len, plan=plan,
+                 prefill_chunk=args.prefill_chunk,
+                 preemption=args.preemption,
+                 prefix_sharing=args.prefix_sharing)
     trace = poisson_trace(args.requests, args.arrival_rate,
                           max_prompt=args.prompt_len, max_new=args.gen,
                           vocab=cfg.vocab, seed=args.seed)
@@ -88,6 +91,9 @@ def engine_main(args, model, params, plan):
         "engine": True, "arch": cfg.name, "requests": args.requests,
         "max_slots": args.max_slots,
         "page_size": page if eng.paged else None,
+        "prefill_chunk": args.prefill_chunk,
+        "preemption": args.preemption,
+        "prefix_sharing": args.prefix_sharing,
         "sample": res["tokens"][trace[0].rid][:8],
         **res["stats"],
     }
@@ -118,6 +124,19 @@ def main(argv=None):
                     help="engine mode: running-batch capacity")
     ap.add_argument("--page-size", type=int, default=16,
                     help="engine mode: KV page size (attention families)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="engine mode: split prompt prefill into chunks of "
+                         "this many tokens, interleaved with running decode "
+                         "steps (attention families; default: fused "
+                         "whole-prompt prefill)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="engine mode: under pool pressure, swap the "
+                         "youngest running sequence's KV pages to host "
+                         "memory instead of blocking admission")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="engine mode: map identical prompt prefixes onto "
+                         "refcounted KV pages (copy-on-write); requires "
+                         "--prefill-chunk")
     ap.add_argument("--autotune", action="store_true",
                     help="warm the kernel tuning cache for this model's "
                          "packed weight shapes before serving")
@@ -133,6 +152,9 @@ def main(argv=None):
                     help="write the effective pack plan to this path")
     args = ap.parse_args(argv)
 
+    if args.prefix_sharing and not args.prefill_chunk:
+        ap.error("--prefix-sharing requires --prefill-chunk (prefill must "
+                 "be able to start mid-prompt to skip shared positions)")
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg)
@@ -154,6 +176,8 @@ def main(argv=None):
     if args.engine:
         if cfg.family in ("hybrid", "ssm"):
             m_values = (1, args.max_slots)
+        elif args.prefill_chunk:
+            m_values = (args.prefill_chunk, args.max_slots)
         else:
             from repro.serving import bucket_len
 

@@ -89,6 +89,23 @@ def make_prefill_full(model: LM, mesh=None, plan=None):
     return prefill_full
 
 
+def make_chunked_prefill_step(model: LM, mesh=None, plan=None):
+    """One chunk of prompt prefill into the paged KV pool (continuous
+    batching): admission splits a prompt into fixed-token chunks that
+    interleave with running decode steps, so a long prompt never freezes
+    the batch.  ``tokens`` (B, C) covers positions [start, start+C);
+    logits for every chunk position come back so the engine can slice the
+    last real prompt token's row out on the host."""
+    def chunked_prefill_step(params: Params, pool: Params, block_tables,
+                             tokens, start, valid_len):
+        with mesh_context(mesh), use_plan(plan):
+            logits, pool = model.prefill_chunk(
+                params, pool, block_tables, tokens, start, valid_len)
+        return logits, pool
+
+    return chunked_prefill_step
+
+
 def make_paged_decode_step(model: LM, mesh=None, plan=None):
     """Ragged decode step over the paged KV pool (continuous batching):
     every engine slot decodes at its own ``pos`` against its own pages."""

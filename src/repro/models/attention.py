@@ -266,6 +266,76 @@ def init_paged_pool(n_pages: int, page_size: int, spec: AttnSpec,
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def paged_prefill_attention(
+    params: Params,
+    x: jax.Array,              # (B, C, D) — one chunk of prompt tokens
+    pool: Params,              # {"k","v"}: (n_pages, page, KV, hd)
+    block_tables: jax.Array,   # (B, max_pages) page ids per logical block
+    start: jax.Array,          # scalar: first position in this chunk
+    valid_len: jax.Array,      # scalar: prompt length (pad cutoff)
+    spec: AttnSpec,
+    window: int | None = None,
+):
+    """Chunked-prefill attention: C prompt positions against the pool.
+
+    The chunk covers positions ``[start, start + C)``; its KV is scattered
+    into the pages named by each position's block-table entry (positions
+    at or beyond ``valid_len`` — final-chunk padding — are redirected to
+    the trash page so they can never dirty a live page), then the whole
+    table is gathered back position-ordered and each query row attends
+    under its own causal / sliding-window mask.
+
+    Numerics mirror :func:`chunked_attention` exactly for prompts the
+    reference computes in a single online-softmax block (``plen <=
+    attn_chunk`` — the same regime the engine's page-bucketed full prefill
+    already relies on): one :func:`_online_block` update over the gathered
+    keys, where positions outside a row's mask contribute exact zeros.
+    Rows are position-independent, so the chunk split itself never changes
+    a token.
+    """
+    b, c, _ = x.shape
+    start = jnp.asarray(start, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    idx = start + jnp.arange(c, dtype=jnp.int32)            # (C,)
+    positions = jnp.broadcast_to(idx, (b, c))
+    q, k_new, v_new = _project_qkv(params, x, spec, positions)
+    page_size = pool["k"].shape[1]
+    kvh = spec.n_kv_heads
+    g = spec.n_heads // kvh
+    hd = spec.head_dim
+
+    page = jnp.take_along_axis(
+        block_tables, jnp.broadcast_to(idx // page_size, (b, c)), axis=1)
+    page = jnp.where((idx < valid_len)[None, :], page, 0)   # pad → trash
+    off = jnp.broadcast_to(idx % page_size, (b, c))
+    k_pool = pool["k"].at[page.reshape(-1), off.reshape(-1)].set(
+        k_new.reshape(b * c, kvh, hd))
+    v_pool = pool["v"].at[page.reshape(-1), off.reshape(-1)].set(
+        v_new.reshape(b * c, kvh, hd))
+
+    k_cache = k_pool[block_tables].reshape(b, -1, kvh, hd)
+    v_cache = v_pool[block_tables].reshape(b, -1, kvh, hd)
+    s_max = k_cache.shape[1]
+
+    qh = q.reshape(b, c, kvh, g, hd)
+    scores = _block_scores(qh, k_cache, spec)   # (B,KV,G,C,Smax)
+    k_pos = jnp.arange(s_max)
+    mask = k_pos[None, :] <= idx[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > idx[:, None] - window
+    mask = mask[None, None, None]               # (1,1,1,C,Smax)
+    init = (
+        jnp.full((b, kvh, g, c), NEG_INF, jnp.float32),
+        jnp.zeros((b, kvh, g, c), jnp.float32),
+        jnp.zeros((b, kvh, g, c, hd), jnp.float32),
+    )
+    _, l, acc = _online_block(init, scores, v_cache, mask)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,KV,G,C,hd)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, c, spec.n_heads * hd)
+    out = out.astype(x.dtype)
+    return out, {"k": k_pool, "v": v_pool}
+
+
 def paged_decode_attention(
     params: Params,
     x: jax.Array,              # (B, 1, D)

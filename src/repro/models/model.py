@@ -116,6 +116,19 @@ class LM:
         return transformer.transformer_decode_paged(
             params, pool, block_tables, tokens, pos, self.cfg)
 
+    def prefill_chunk(self, params: Params, pool: Params,
+                      block_tables: jax.Array, tokens: jax.Array,
+                      start: jax.Array, valid_len: jax.Array):
+        """Chunked prefill against the paged pool: tokens (B, C) covering
+        prompt positions [start, start+C), zero-padded past ``valid_len``.
+        Returns (logits for all C positions, pool)."""
+        if self.cfg.family in ("hybrid", "ssm"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no paged prefill path — "
+                "recurrent prompts replay through the decode step")
+        return transformer.transformer_prefill_chunk(
+            params, pool, block_tables, tokens, start, valid_len, self.cfg)
+
     # -- info -------------------------------------------------------------------
     def param_count(self, params: Params | None = None) -> int:
         if params is None:

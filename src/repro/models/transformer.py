@@ -180,6 +180,34 @@ def attn_block_decode(bp: Params, x: jax.Array, cache: Params,
     return x + mo, cache
 
 
+def attn_block_prefill_chunk(bp: Params, x: jax.Array, layer_pool: Params,
+                             block_tables: jax.Array, start: jax.Array,
+                             valid_len: jax.Array, cfg: ModelConfig,
+                             window: int | None):
+    """One block over a prefill chunk against the paged KV pool.
+
+    Mirrors :func:`attn_block_full` (same ``wo`` plan entry, same norm /
+    residual order) with the full-sequence attention replaced by
+    :func:`repro.models.attention.paged_prefill_attention`, so a prompt
+    prefilled in chunks produces the same tokens as one fused prefill.
+    """
+    spec = attn_spec(cfg)
+    h = layers.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    ao, layer_pool = attn.paged_prefill_attention(
+        bp["attn"], h, layer_pool, block_tables, start, valid_len, spec,
+        window=window)
+    ao = sod.apply(ao, bp["attn"]["wo"],
+                   plan=plan_mod.active_entry("attn.wo"))
+    if cfg.use_post_norms:
+        ao = layers.rms_norm(ao, bp["norm1_post"], cfg.norm_eps)
+    x = x + ao
+    h2 = layers.rms_norm(x, bp["norm2"], cfg.norm_eps)
+    mo, _ = _apply_mlp(bp, h2, cfg)
+    if cfg.use_post_norms:
+        mo = layers.rms_norm(mo, bp["norm2_post"], cfg.norm_eps)
+    return x + mo, layer_pool
+
+
 # ---------------------------------------------------------------------------
 # embedding / head / frontends
 # ---------------------------------------------------------------------------
@@ -372,6 +400,41 @@ def transformer_decode_paged(params: Params, pool: Params,
             x, layer_pool = attn_block_decode(
                 bp, x, layer_pool, pos, cfg, cfg.window_for(j),
                 block_tables=block_tables)
+            ks.append(layer_pool["k"])
+            vs.append(layer_pool["v"])
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (knew, vnew) = _scan(
+        group_body, x, (params["blocks"], pool["k"], pool["v"]), cfg)
+    logits = project_logits(params, x, cfg)
+    return logits, {"k": knew, "v": vnew}
+
+
+def transformer_prefill_chunk(params: Params, pool: Params,
+                              block_tables: jax.Array, tokens: jax.Array,
+                              start: jax.Array, valid_len: jax.Array,
+                              cfg: ModelConfig):
+    """Prefill one fixed-size chunk of a prompt into the paged KV pool.
+
+    ``tokens`` is (B, C) — the engine admits one sequence at a time, B=1 —
+    covering prompt positions ``[start, start + C)``; the final chunk is
+    zero-padded past ``valid_len`` (pad KV goes to the trash page).
+    Returns (logits for all C positions, updated pool): the engine slices
+    the last real prompt position's logits out on the host to get the
+    sequence's first generated token.
+    """
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    p_period = cfg.pattern_period
+
+    def group_body(x, inp):
+        gp, kp, vp = inp
+        ks, vs = [], []
+        for j in range(p_period):
+            bp = jax.tree_util.tree_map(lambda t: t[j], gp)
+            layer_pool = {"k": kp[j], "v": vp[j]}
+            x, layer_pool = attn_block_prefill_chunk(
+                bp, x, layer_pool, block_tables, start, valid_len, cfg,
+                cfg.window_for(j))
             ks.append(layer_pool["k"])
             vs.append(layer_pool["v"])
         return x, (jnp.stack(ks), jnp.stack(vs))

@@ -1,11 +1,13 @@
 """Continuous-batching serving engine (paged KV cache + request
-scheduler) over Sparse-on-Dense packed weights."""
+scheduler, with chunked prefill, preemption/page swapping, and
+copy-on-write prefix sharing) over Sparse-on-Dense packed weights."""
 from repro.serving.engine import Engine, bucket_len, static_generate
-from repro.serving.pool import PagePool, PoolExhausted
+from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
 from repro.serving.scheduler import Request, Scheduler, SeqState
-from repro.serving.trace import poisson_trace
+from repro.serving.trace import poisson_trace, shared_prefix_trace
 
 __all__ = [
-    "Engine", "PagePool", "PoolExhausted", "Request", "Scheduler",
-    "SeqState", "bucket_len", "poisson_trace", "static_generate",
+    "Engine", "PagePool", "PoolExhausted", "PrefixTrie", "Request",
+    "Scheduler", "SeqState", "bucket_len", "poisson_trace",
+    "shared_prefix_trace", "static_generate",
 ]

@@ -10,30 +10,52 @@ Two cache regimes, chosen by model family:
 
 * **paged** (attention families): per-layer KV page pools
   (:func:`repro.models.transformer.transformer_init_paged_pool`) with a
-  host-side free-list allocator (:class:`repro.serving.pool.PagePool`) and
-  one block table per slot.  Admission runs the fused prefill on a
-  page-aligned prompt bucket (exact for causal attention — padded
-  positions are masked at decode and overwritten in order) and scatters
-  the KV into freshly allocated pages; decode runs
-  :func:`repro.launch.steps.make_paged_decode_step` with per-slot ``pos``
-  vectors; completion returns the pages to the pool.
+  host-side refcounted free-list allocator
+  (:class:`repro.serving.pool.PagePool`) and one block table per slot.
 * **slot state** (hybrid / ssm): O(1) recurrent state lives in a
   max_slots-batched cache; admission replays the prompt through the
   batch-1 decode step (exactly the static serve path) and scatters the
   final state into the slot via the explicit cache-axes API
   (:func:`repro.models.cache.write_slot`).
 
+Three scheduler upgrades (paged families, all off by default) keep the
+batch busy under real load:
+
+* **chunked prefill** (``prefill_chunk=C``): admission splits a prompt
+  into fixed C-token chunks run one per engine step, interleaved with the
+  running batch's decode steps — a long prompt no longer freezes decode.
+  The admitted sequence holds a slot in the *prefilling* state (its
+  block-table row is masked to the trash page for decode) until its final
+  chunk delivers the first token.
+* **preemption with page-level swapping** (``preemption=True``): on pool
+  pressure the engine swaps the lowest-priority (youngest-arrival)
+  decoding sequence's pages to host memory instead of blocking — the
+  worst-case-reservation admission rule is replaced by a
+  preemption-backed one (admit when the *prompt* pages fit; growth
+  recovers pages by preempting).  Swapped sequences resume ahead of any
+  pending newcomer once pages free up; the KV bytes round-trip exactly,
+  so tokens are unchanged.
+* **prefix sharing** (``prefix_sharing=True``, requires chunked prefill):
+  a prefix trie over page-sized prompt token chunks
+  (:class:`repro.serving.pool.PrefixTrie`) maps shared prefixes to
+  refcounted pages — identical few-shot prefixes pack once, admission
+  maps them straight into the block table and prefill skips their
+  positions.  Writes into a shared page (a fully shared prompt recomputes
+  its last token for logits) copy-on-write fork it first.
+
 Greedy tokens are bit-identical to per-request static-batch serve
-(:func:`static_generate`) because every per-row computation is
-batch-row-independent and padding/masked positions contribute exact
-zeros.  One documented exception: MoE capacity-factor routing is
+(:func:`static_generate`) under any schedule because every per-row
+computation is batch-row-independent and padding/masked positions
+contribute exact zeros; shared pages hold KV bytes identical to what the
+sharer's own prefill would have written, and swapped pages are restored
+byte-for-byte.  One documented exception: MoE capacity-factor routing is
 batch-global, so under expert-capacity pressure an engine batch can drop
 different tokens than a batch-1 run.
 
 All jit-compiled shapes are fixed by (max_slots, pool size, block-table
-width, prompt buckets), so steady-state serving never recompiles;
-:meth:`Engine.warmup` pre-compiles everything for the queued trace and is
-timed separately from steady-state throughput.
+width, prompt buckets / the chunk size), so steady-state serving never
+recompiles; :meth:`Engine.warmup` pre-compiles everything for the queued
+trace and is timed separately from steady-state throughput.
 """
 from __future__ import annotations
 
@@ -48,7 +70,7 @@ import numpy as np
 from repro.launch import steps as steps_mod
 from repro.models import cache as cache_mod
 from repro.models.model import LM
-from repro.serving.pool import PagePool, PoolExhausted
+from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
 from repro.serving.scheduler import Request, Scheduler, SeqState
 
 Params = dict[str, Any]
@@ -86,13 +108,36 @@ def _pool_write_pages(pool: Params, cache: Params, page_ids):
             "v": write(pool["v"], cache["v"])}
 
 
+def _pool_copy_page(pool: Params, src, dst):
+    """Copy-on-write fork: duplicate page ``src`` into ``dst`` across
+    every layer's pool."""
+    return {"k": pool["k"].at[:, :, dst].set(pool["k"][:, :, src]),
+            "v": pool["v"].at[:, :, dst].set(pool["v"][:, :, src])}
+
+
+def _pool_gather_pages(pool: Params, page_ids):
+    """Swap-out: pull pages ``page_ids`` (padded with the trash page to a
+    fixed width, so one compile serves every page count) out of every
+    layer's pool — (G, P, n_ids, page, KV, hd)."""
+    return {"k": pool["k"][:, :, page_ids], "v": pool["v"][:, :, page_ids]}
+
+
+def _pool_scatter_pages(pool: Params, kv: Params, page_ids):
+    """Swap-in: write a gathered snapshot back at fresh page ids.  Padding
+    entries target the trash page, which is garbage by design."""
+    return {"k": pool["k"].at[:, :, page_ids].set(kv["k"]),
+            "v": pool["v"].at[:, :, page_ids].set(kv["v"])}
+
+
 class Engine:
     """Continuous-batching engine: paged KV pool + request scheduler +
     ragged batched decode over one shared (optionally SoD-packed) model."""
 
     def __init__(self, model: LM, params: Params, *, max_slots: int = 4,
                  page_size: int = 16, max_len: int = 256,
-                 n_pages: int | None = None, plan=None, mesh=None):
+                 n_pages: int | None = None, plan=None, mesh=None,
+                 prefill_chunk: int | None = None, preemption: bool = False,
+                 prefix_sharing: bool = False):
         cfg = model.cfg
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
@@ -104,12 +149,31 @@ class Engine:
         self.max_slots = int(max_slots)
         self.max_len = int(max_len)
         self.paged = cfg.family not in ("hybrid", "ssm")
+        if not self.paged and (prefill_chunk or preemption or prefix_sharing):
+            raise ValueError(
+                f"family {cfg.family!r} keeps O(1) recurrent state per slot; "
+                "chunked prefill / preemption / prefix sharing are paged-KV "
+                "scheduler features")
+        if prefix_sharing and not prefill_chunk:
+            raise ValueError(
+                "prefix sharing needs chunked prefill (prefill_chunk=...): "
+                "admission skips shared positions, so prefill must be able "
+                "to start mid-prompt")
+        self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
+        self.preemption = bool(preemption)
+        self.prefix_sharing = bool(prefix_sharing)
         self.sched = Scheduler(max_slots)
         self._step_idx = 0
         self._submitted: list[Request] = []
         self._first_seen: dict[int, float] = {}
         self._finished: dict[int, SeqState] = {}
-        self.stats: dict[str, float] = {"warmup_s": 0.0}
+        self.preempt_log: list[int] = []      # rids in eviction order
+        self.stats: dict[str, float] = {
+            "warmup_s": 0.0, "prefill_chunks": 0, "preemptions": 0,
+            "swapped_out_pages": 0, "swapped_in_pages": 0, "cow_forks": 0,
+            "shared_prompt_pages": 0, "prompt_pages_total": 0,
+            "prompt_pages_fresh": 0,
+        }
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
 
@@ -120,6 +184,7 @@ class Engine:
             if n_pages is None:
                 n_pages = 1 + self.max_slots * self.max_pages
             self.page_pool = PagePool(n_pages, self.page_size)
+            self.trie = PrefixTrie(self.page_size) if prefix_sharing else None
             self.pool = model.init_paged_pool(n_pages, self.page_size)
             self.block_tables = np.full(
                 (self.max_slots, self.max_pages), PagePool.TRASH_PAGE,
@@ -129,6 +194,13 @@ class Engine:
             self._prefill = jax.jit(
                 steps_mod.make_prefill_full(model, mesh=mesh, plan=plan))
             self._page_write = jax.jit(_pool_write_pages)
+            self._copy_page = jax.jit(_pool_copy_page)
+            self._gather_pages = jax.jit(_pool_gather_pages)
+            self._scatter_pages = jax.jit(_pool_scatter_pages)
+            if self.prefill_chunk:
+                self._chunk_prefill = jax.jit(
+                    steps_mod.make_chunked_prefill_step(model, mesh=mesh,
+                                                        plan=plan))
         else:
             self.cache = model.init_cache(self.max_slots, self.max_len)
             spec = model.cache_spec()
@@ -145,7 +217,14 @@ class Engine:
         plen = len(req.tokens)
         end = plen + req.max_new - 1          # last cache position + 1
         if self.paged:
-            need = max(self._bucket(plen), end)
+            if self.prefill_chunk and self._chunk and plen > self._chunk:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {plen} tokens exceeds "
+                    f"attn_chunk={self._chunk}; chunked prefill's "
+                    "single-block attention is only bit-identical to the "
+                    "fused reference for prompts within one attention "
+                    "chunk")
+            need = end if self.prefill_chunk else max(self._bucket(plen), end)
             pages = self.page_pool.pages_for(need)
             if need > self.max_len or pages > self.page_pool.n_pages - 1:
                 raise ValueError(
@@ -159,22 +238,81 @@ class Engine:
         self._submitted.append(req)
         self.sched.submit(req)
 
+    @staticmethod
+    def _seq_end(seq: SeqState) -> int:
+        """Last cache position the sequence will ever write, + 1.  Holds
+        for prefilling and decoding states alike (for a decoding sequence
+        it equals ``pos + remaining``)."""
+        return len(seq.req.tokens) + seq.req.max_new - 1
+
     def _lifetime_pages(self, req: Request) -> int:
         """Worst-case pages the request will ever hold: its prefill
-        bucket plus decode growth out to its last write position."""
+        bucket (or bare prompt, chunked) plus decode growth out to its
+        last write position."""
         plen = len(req.tokens)
-        need = max(self._bucket(plen), plen + req.max_new - 1)
+        end = plen + req.max_new - 1
+        need = end if self.prefill_chunk else max(self._bucket(plen), end)
         return self.page_pool.pages_for(need)
 
     def _reserved_pages(self) -> int:
         """Pages the *running* sequences may still claim via growth.
-        Admission holds these back, so mid-decode growth can never find
-        the pool empty (no preemption exists to recover from that)."""
-        r = 0
+        Without preemption, admission holds these back so mid-decode
+        growth can never find the pool empty."""
+        r = self._pending_forks()
         for seq in self.sched.active.values():
-            end = seq.pos + seq.remaining        # last write position + 1
-            r += max(0, self.page_pool.pages_for(end) - len(seq.pages))
+            r += max(0, self.page_pool.pages_for(self._seq_end(seq))
+                     - len(seq.pages))
         return r
+
+    def _pending_forks(self) -> int:
+        """Copy-on-write forks admitted-but-not-yet-taken: a prefilling
+        sequence whose next write lands in a page it still shares will
+        claim one fresh page at its next tick."""
+        n = 0
+        for seq in self.sched.active.values():
+            if seq.is_prefilling and seq.pages:
+                j = seq.prefilled // self.page_size
+                if (j < len(seq.pages)
+                        and self.page_pool.ref_count(seq.pages[j]) > 1):
+                    n += 1
+        return n
+
+    def _share_plan(self, req: Request) -> tuple[list[int], int, int]:
+        """Prefix-trie lookup for a prompt: (shared page ids, prefill
+        start position, fresh pages needed now).  A fully shared
+        page-aligned prompt still recomputes its last token (the engine
+        needs its logits), whose write copy-on-write-forks the final
+        shared page — budget one extra page for that."""
+        plen = len(req.tokens)
+        shared = self.trie.match(req.tokens) if self.trie is not None else []
+        start = len(shared) * self.page_size
+        fresh = self.page_pool.pages_for(plen) - len(shared)
+        if start >= plen:                 # fully shared, aligned prompt
+            start = plen - 1
+            fresh += 1                    # COW fork of the last page
+        return shared, start, fresh
+
+    def _can_admit(self, req: Request,
+                   share: tuple[list[int], int, int] | None = None) -> bool:
+        plen = len(req.tokens)
+        end = plen + req.max_new - 1
+        if self.prefill_chunk:
+            _, _, fresh = share if share is not None else self._share_plan(req)
+            growth = (self.page_pool.pages_for(end)
+                      - self.page_pool.pages_for(plen))
+        else:
+            fresh = self.page_pool.pages_for(self._bucket(plen))
+            growth = self._lifetime_pages(req) - fresh
+        if self.preemption:
+            # preemption-backed rule: admit when the prompt fits NOW
+            # (counting forks already-admitted prefills will still take);
+            # decode growth later recovers pages by evicting the youngest
+            return self.page_pool.can_alloc(fresh + self._pending_forks())
+        # reservation rule: the pool must also cover this request's own
+        # growth (incl. any COW fork) and every running sequence's
+        # worst-case growth
+        budget = self.page_pool.free_count - self._reserved_pages()
+        return fresh + growth <= budget
 
     def _admit_paged(self, req: Request) -> list[tuple[int, int]]:
         plen = len(req.tokens)
@@ -184,14 +322,41 @@ class Engine:
         logits, cache = self._prefill(
             self.params, {"tokens": jnp.asarray(padded)[None]})
         first = int(jnp.argmax(logits[0, plen - 1]))
-        pages = self.page_pool.alloc(self.page_pool.pages_for(bucket))
+        n = self.page_pool.pages_for(bucket)
+        pages = self.page_pool.alloc(n)
         self.pool = self._page_write(
             self.pool, cache, jnp.asarray(np.asarray(pages, np.int32)))
         seq = self.sched.place(req, pos=plen, first_token=first, pages=pages,
                                ready_wall=self._first_seen[req.rid])
         self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
         self.block_tables[seq.slot, :len(pages)] = pages
+        self.stats["prompt_pages_total"] += n
+        self.stats["prompt_pages_fresh"] += n
         return self._post_admit(seq)
+
+    def _admit_chunked(self, req: Request,
+                       share: tuple[list[int], int, int] | None = None,
+                       ) -> list[tuple[int, int]]:
+        """Admit into the prefilling state: map shared prefix pages,
+        allocate the rest, and let :meth:`_prefill_tick` advance one chunk
+        per step.  No tokens are emitted until the final chunk."""
+        plen = len(req.tokens)
+        shared, start, _ = share if share is not None else \
+            self._share_plan(req)
+        total = self.page_pool.pages_for(plen)
+        fresh = self.page_pool.alloc(total - len(shared))
+        if shared:
+            self.page_pool.retain(shared)
+        pages = list(shared) + fresh
+        seq = self.sched.place(req, pos=plen, pages=pages,
+                               ready_wall=self._first_seen[req.rid],
+                               prefilled=start)
+        self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
+        self.block_tables[seq.slot, :len(pages)] = pages
+        self.stats["shared_prompt_pages"] += len(shared)
+        self.stats["prompt_pages_total"] += total
+        self.stats["prompt_pages_fresh"] += total - len(shared)
+        return []
 
     def _admit_state(self, req: Request) -> list[tuple[int, int]]:
         prompt = jnp.asarray(req.tokens, jnp.int32)[None]
@@ -221,16 +386,167 @@ class Engine:
         seq = self.sched.release(slot)
         seq.done_wall = time.perf_counter()
         if self.paged:
-            self.page_pool.free(seq.pages)
+            freed = self.page_pool.free(seq.pages)
+            if self.trie is not None:
+                for p in freed:
+                    self.trie.drop(p)
             self.block_tables[slot, :] = PagePool.TRASH_PAGE
         self._pos[slot] = 0
         self._tok[slot, 0] = 0
         self._finished[seq.req.rid] = seq
 
+    # -- chunked prefill ------------------------------------------------------
+    def _try_capacity(self, n: int) -> bool:
+        """Try to make ``n`` pages allocatable, preempting youngest-first
+        when allowed.  Returns False when every victim is exhausted (a
+        victim holding only shared pages frees nothing) — the caller
+        decides whether that means waiting or an invariant violation.
+        Without preemption this raises: the reservation-based admission
+        rule is supposed to make pressure here impossible."""
+        while not self.page_pool.can_alloc(n):
+            if not self.preemption:
+                raise PoolExhausted(
+                    "invariant violation: admission reserved too few pages "
+                    "(decode growth or copy-on-write fork)")
+            victim = self.sched.preemption_victim()
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _ensure_exclusive(self, seq: SeqState, lo: int, hi: int) -> bool:
+        """Copy-on-write: before writing cache positions [lo, hi), fork
+        any page in that range the sequence shares with another.  Returns
+        False when a needed fork cannot get a page even after preemption
+        — the caller should wait a step, not die."""
+        for j in range(lo // self.page_size,
+                       (hi - 1) // self.page_size + 1):
+            pid = seq.pages[j]
+            if self.page_pool.ref_count(pid) > 1:
+                if not self._try_capacity(1):
+                    return False
+                if self.page_pool.ref_count(pid) == 1:
+                    # making room preempted the only other sharer — the
+                    # page is private now, write in place
+                    continue
+                new = self.page_pool.fork(pid)
+                self.pool = self._copy_page(
+                    self.pool, jnp.asarray(pid, jnp.int32),
+                    jnp.asarray(new, jnp.int32))
+                seq.pages[j] = new
+                self.block_tables[seq.slot, j] = new
+                self.stats["cow_forks"] += 1
+        return True
+
+    def _prefill_tick(self, seq: SeqState) -> list[tuple[int, int]]:
+        """Advance one C-token chunk of a prefilling sequence; the final
+        chunk (zero-padded past the prompt) yields the first token."""
+        c = self.prefill_chunk
+        req = seq.req
+        plen = len(req.tokens)
+        start = seq.prefilled
+        end = min(start + c, plen)
+        if not self._ensure_exclusive(seq, start, end):
+            return []                  # no page for the fork yet: wait
+        chunk = np.zeros(c, np.int32)
+        chunk[:end - start] = req.tokens[start:end]
+        logits, self.pool = self._chunk_prefill(
+            self.params, self.pool,
+            jnp.asarray(self.block_tables[seq.slot][None]),
+            jnp.asarray(chunk)[None],
+            jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32))
+        seq.prefilled = end
+        self.stats["prefill_chunks"] += 1
+        if self.trie is not None:
+            self.trie.register(req.tokens, seq.pages,
+                               end // self.page_size)
+        if end < plen:
+            return []
+        first = int(jnp.argmax(logits[0, plen - 1 - start]))
+        seq.generated.append(first)
+        seq.pos = plen
+        return self._post_admit(seq)
+
+    # -- preemption / swapping ------------------------------------------------
+    def _padded_ids(self, pages: list[int]) -> jax.Array:
+        ids = np.full(self.max_pages, PagePool.TRASH_PAGE, np.int32)
+        ids[:len(pages)] = pages
+        return jnp.asarray(ids)
+
+    def _preempt(self, seq: SeqState) -> None:
+        """Swap the sequence's pages to host memory and free them; the
+        scheduler queues it for resume ahead of pending newcomers."""
+        n = len(seq.pages)
+        host = jax.device_get(
+            self._gather_pages(self.pool, self._padded_ids(seq.pages)))
+        seq.host_kv = (host, n)
+        freed = self.page_pool.swap_out(seq.pages)
+        if self.trie is not None:
+            for p in freed:
+                self.trie.drop(p)
+        slot = seq.slot
+        seq.pages = []
+        self.block_tables[slot, :] = PagePool.TRASH_PAGE
+        self._pos[slot] = 0
+        self._tok[slot, 0] = 0
+        self.sched.preempt(slot)
+        self.preempt_log.append(seq.req.rid)
+        self.stats["preemptions"] += 1
+        # count pages that actually left the device — shared prefix pages
+        # another sequence still references stay resident
+        self.stats["swapped_out_pages"] += len(freed)
+
+    def _swap_in(self, seq: SeqState) -> None:
+        """Restore a preempted sequence: fresh pages, exact KV bytes."""
+        host, n = seq.host_kv
+        pages = self.page_pool.swap_in(n)
+        self.pool = self._scatter_pages(
+            self.pool, jax.tree_util.tree_map(jnp.asarray, host),
+            self._padded_ids(pages))
+        seq.host_kv = None
+        seq.pages = pages
+        self.sched.place_swapped(seq)
+        self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
+        self.block_tables[seq.slot, :n] = pages
+        self._pos[seq.slot] = seq.pos
+        self._tok[seq.slot, 0] = seq.generated[-1]
+        self.stats["swapped_in_pages"] += n
+
+    def _grow_pages(self) -> None:
+        """Allocate the next page for every decoding sequence whose write
+        position crosses a page boundary; under pressure, preemption
+        evicts the youngest decoding sequence (possibly the needy one
+        itself) instead of dying mid-decode."""
+        for slot in sorted(self.sched.active):
+            seq = self.sched.active.get(slot)
+            if seq is None or seq.is_prefilling:
+                continue
+            need_idx = seq.pos // self.page_size
+            if need_idx < len(seq.pages):
+                # in-place write: must be exclusive — only *complete*
+                # prompt pages are ever shared, and decode writes land
+                # strictly past them (the fully-shared boundary page is
+                # forked during the recompute prefill tick)
+                assert self.page_pool.ref_count(seq.pages[need_idx]) == 1, (
+                    f"decode write into shared page {seq.pages[need_idx]}")
+                continue
+            ok = self._try_capacity(1)
+            if self.sched.active.get(slot) is not seq:
+                continue                     # the hunt preempted seq itself
+            if not ok:
+                raise PoolExhausted(
+                    "pool exhausted with no preemptible sequence — "
+                    "the pool cannot hold even one request")
+            (pg,) = self.page_pool.alloc(1)
+            seq.pages.append(pg)
+            self.block_tables[slot, need_idx] = pg
+
     # -- stepping -------------------------------------------------------------
     def step(self) -> list[tuple[int, int]]:
-        """Advance virtual time one step: admit what fits, grow pages,
-        run one ragged batched decode.  Returns (rid, token) emissions."""
+        """Advance virtual time one step: resume swapped sequences, admit
+        what fits, advance prefill chunks, grow pages (preempting under
+        pressure), run one ragged batched decode.  Returns (rid, token)
+        emissions."""
         now = self._step_idx
         now_wall = time.perf_counter()
         # latency clock starts when a request becomes admissible, not when
@@ -240,47 +556,61 @@ class Engine:
                 break                        # pending is arrival-sorted
             self._first_seen.setdefault(r.rid, now_wall)
         events: list[tuple[int, int]] = []
+
+        if self.paged:
+            # swapped sequences were admitted first: resume before anyone
+            while self.sched.swapped and self.sched.has_free_slot():
+                seq = self.sched.peek_swapped()
+                if not self.page_pool.can_alloc(seq.host_kv[1]):
+                    break
+                self._swap_in(seq)
         while self.sched.has_free_slot():
+            if self.paged and self.sched.swapped:
+                break                        # no admission past a swapped seq
             req = self.sched.peek_ready(now)
             if req is None:
                 break
             if self.paged:
-                # head-of-line: admit only if the pool can cover this
-                # request's lifetime AND every running sequence's
-                # worst-case growth — mid-decode growth must never fail
-                budget = (self.page_pool.free_count
-                          - self._reserved_pages())
-                if self._lifetime_pages(req) > budget:
+                # one trie walk per admission attempt, shared between the
+                # capacity check and the admission itself
+                share = (self._share_plan(req) if self.prefill_chunk
+                         else None)
+                if not self._can_admit(req, share):
                     break
-                events += self._admit_paged(req)
+                if self.prefill_chunk:
+                    events += self._admit_chunked(req, share)
+                else:
+                    events += self._admit_paged(req)
             else:
                 events += self._admit_state(req)
 
         if self.paged:
-            for seq in self.sched.active.values():
-                # next write position may cross into an unallocated page
-                need_idx = seq.pos // self.page_size
-                if need_idx >= len(seq.pages):
-                    if not self.page_pool.can_alloc(1):
-                        raise PoolExhausted(
-                            "invariant violation: admission reserved too "
-                            f"few pages for seq {seq.req.rid}'s growth")
-                    (pg,) = self.page_pool.alloc(1)
-                    seq.pages.append(pg)
-                    self.block_tables[seq.slot, need_idx] = pg
+            if self.prefill_chunk:
+                for seq in list(self.sched.active.values()):
+                    if seq.is_prefilling:
+                        events += self._prefill_tick(seq)
+            self._grow_pages()
 
-        if self.sched.active:
+        decoding = {slot: seq for slot, seq in self.sched.active.items()
+                    if not seq.is_prefilling}
+        if decoding:
             tok = jnp.asarray(self._tok)
             pos = jnp.asarray(self._pos)
             if self.paged:
+                bt = self.block_tables
+                if len(decoding) != len(self.sched.active):
+                    # prefilling slots must not write into their pages
+                    bt = bt.copy()
+                    for slot, seq in self.sched.active.items():
+                        if seq.is_prefilling:
+                            bt[slot, :] = PagePool.TRASH_PAGE
                 nxt, _, self.pool = self._decode(
-                    self.params, self.pool, jnp.asarray(self.block_tables),
-                    tok, pos)
+                    self.params, self.pool, jnp.asarray(bt), tok, pos)
             else:
                 nxt, _, self.cache = self._decode(
                     self.params, self.cache, tok, pos)
             nxt = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
-            for slot, seq in list(self.sched.active.items()):
+            for slot, seq in list(decoding.items()):
                 t = int(nxt[slot])
                 seq.generated.append(t)
                 seq.pos += 1
@@ -300,16 +630,36 @@ class Engine:
         discarded — no engine state changes."""
         t0 = time.perf_counter()
         if self.paged:
-            buckets = sorted({self._bucket(len(r.tokens))
-                              for r in self.sched.pending})
-            for b in buckets:
-                logits, cache = self._prefill(
-                    self.params, {"tokens": jnp.zeros((1, b), jnp.int32)})
-                trash = np.full(b // self.page_size, PagePool.TRASH_PAGE,
-                                np.int32)
-                jax.block_until_ready(self._page_write(
-                    self.pool, cache, jnp.asarray(trash))["k"])
+            if self.prefill_chunk:
+                trash_row = jnp.full((1, self.max_pages),
+                                     PagePool.TRASH_PAGE, jnp.int32)
+                logits, _ = self._chunk_prefill(
+                    self.params, self.pool, trash_row,
+                    jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                    jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
                 jax.block_until_ready(logits)
+            else:
+                buckets = sorted({self._bucket(len(r.tokens))
+                                  for r in self.sched.pending})
+                for b in buckets:
+                    logits, cache = self._prefill(
+                        self.params,
+                        {"tokens": jnp.zeros((1, b), jnp.int32)})
+                    trash = np.full(b // self.page_size,
+                                    PagePool.TRASH_PAGE, np.int32)
+                    jax.block_until_ready(self._page_write(
+                        self.pool, cache, jnp.asarray(trash))["k"])
+                    jax.block_until_ready(logits)
+            if self.prefix_sharing:
+                jax.block_until_ready(self._copy_page(
+                    self.pool, jnp.asarray(0, jnp.int32),
+                    jnp.asarray(0, jnp.int32))["k"])
+            if self.preemption:
+                ids = jnp.zeros(self.max_pages, jnp.int32)
+                snap = self._gather_pages(self.pool, ids)
+                jax.block_until_ready(snap["k"])
+                jax.block_until_ready(
+                    self._scatter_pages(self.pool, snap, ids)["k"])
             out = self._decode(
                 self.params, self.pool, jnp.asarray(self.block_tables),
                 jnp.asarray(self._tok), jnp.asarray(self._pos))
@@ -346,6 +696,12 @@ class Engine:
             max_steps = (max((r.arrival for r in self._submitted), default=0)
                          + sum(r.max_new for r in self._submitted)
                          + self.max_slots + 16)
+            if self.paged and self.prefill_chunk:
+                max_steps += sum(
+                    -(-len(r.tokens) // self.prefill_chunk) + 1
+                    for r in self._submitted)
+            if self.paged and self.preemption:
+                max_steps *= 2               # slack for swap cycles
         t0 = time.perf_counter()
         n_tok = 0
         start = self._step_idx
@@ -353,7 +709,9 @@ class Engine:
             if self._step_idx - start > max_steps:
                 raise RuntimeError(
                     f"engine stalled: {len(self.sched.pending)} pending / "
-                    f"{len(self.sched.active)} active after {max_steps} steps")
+                    f"{len(self.sched.active)} active / "
+                    f"{len(self.sched.swapped)} swapped after "
+                    f"{max_steps} steps")
             n_tok += len(self.step())
         steady_s = time.perf_counter() - t0
         lat = sorted(s.done_wall - s.ready_wall

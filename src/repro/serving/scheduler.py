@@ -1,15 +1,18 @@
-"""Request scheduler: admission queue + slot assignment + completion.
+"""Request scheduler: admission queue + slot assignment + preemption.
 
 The scheduler owns the *who runs where* state of the engine: a FIFO
 admission queue ordered by arrival step, the map of engine slots to
-running sequences, and the free-slot list.  It is deliberately free of
-any device state — the engine asks it what to admit, tells it what
-completed, and keeps the page pool / cache arrays itself.
+running sequences, the free-slot list, and the queue of sequences
+preempted to host memory (swapped out) awaiting resume.  It is
+deliberately free of any device state — the engine asks it what to admit,
+tells it what completed or got evicted, and keeps the page pool / cache
+arrays itself.
 """
 from __future__ import annotations
 
 import bisect
 import dataclasses
+from typing import Any
 
 import numpy as np
 
@@ -35,6 +38,14 @@ class Request:
         if self.max_new < 1:
             raise ValueError(f"request {self.rid}: max_new must be >= 1")
 
+    @property
+    def priority(self) -> tuple[int, int]:
+        """FIFO priority: earlier arrival (then lower rid) ranks higher.
+        Preemption evicts the *lowest*-priority running sequence, i.e. the
+        max of this key — the youngest arrival backs off first, so the
+        oldest requests always make progress."""
+        return (self.arrival, self.rid)
+
 
 @dataclasses.dataclass
 class SeqState:
@@ -42,15 +53,23 @@ class SeqState:
 
     req: Request
     slot: int
-    pos: int                      # next cache position to write
+    pos: int                      # next decode cache position to write
     generated: list[int]
     pages: list[int]              # paged families: allocated page ids
+    prefilled: int = 0            # prompt tokens whose KV is resident
+    host_kv: Any = None           # swapped-out KV snapshot (host arrays)
     ready_wall: float = 0.0       # wall clock when first admissible
     done_wall: float = 0.0
 
     @property
     def remaining(self) -> int:
         return self.req.max_new - len(self.generated)
+
+    @property
+    def is_prefilling(self) -> bool:
+        """Chunked prefill in flight: no first token yet, so the slot must
+        not decode (its block-table row is masked to trash)."""
+        return not self.generated
 
 
 class Scheduler:
@@ -59,22 +78,28 @@ class Scheduler:
     Head-of-line order is strict: if the oldest admissible request does
     not fit (no slot, or the engine reports no pages), nothing younger
     jumps it — keeps engine-vs-static token equality trivially auditable.
+    Sequences preempted under pool pressure queue in ``swapped`` and
+    resume ahead of any pending newcomer (they were admitted first).
     """
 
     def __init__(self, max_slots: int):
         self.max_slots = int(max_slots)
         self._pending: list[Request] = []      # sorted by (arrival, rid)
         self.active: dict[int, SeqState] = {}  # slot -> running sequence
+        self._swapped: list[SeqState] = []     # sorted by priority
         self._free_slots: list[int] = list(range(max_slots))[::-1]
 
     # -- admission queue ------------------------------------------------------
     def submit(self, req: Request) -> None:
-        bisect.insort(self._pending, req,
-                      key=lambda r: (r.arrival, r.rid))
+        bisect.insort(self._pending, req, key=lambda r: r.priority)
 
     @property
     def pending(self) -> tuple[Request, ...]:
         return tuple(self._pending)
+
+    @property
+    def swapped(self) -> tuple[SeqState, ...]:
+        return tuple(self._swapped)
 
     def peek_ready(self, now_step: int) -> Request | None:
         """Oldest request whose arrival step has been reached."""
@@ -85,14 +110,19 @@ class Scheduler:
     def has_free_slot(self) -> bool:
         return bool(self._free_slots)
 
-    def place(self, req: Request, *, pos: int, first_token: int,
-              pages: list[int], ready_wall: float) -> SeqState:
-        """Admit the queue head into a free slot."""
+    def place(self, req: Request, *, pos: int, pages: list[int],
+              ready_wall: float, first_token: int | None = None,
+              prefilled: int = 0) -> SeqState:
+        """Admit the queue head into a free slot.  ``first_token=None``
+        places the sequence in the prefilling state (chunked prefill will
+        deliver the first token later)."""
         assert self._pending and self._pending[0].rid == req.rid
         self._pending.pop(0)
         slot = self._free_slots.pop()
         seq = SeqState(req=req, slot=slot, pos=pos,
-                       generated=[first_token], pages=pages,
+                       generated=[] if first_token is None
+                       else [first_token],
+                       pages=pages, prefilled=prefilled,
                        ready_wall=ready_wall)
         self.active[slot] = seq
         return seq
@@ -103,6 +133,36 @@ class Scheduler:
         self._free_slots.append(slot)
         return seq
 
+    # -- preemption -----------------------------------------------------------
+    def preemption_victim(self) -> SeqState | None:
+        """Lowest-priority *decoding* sequence (youngest arrival, ties by
+        rid).  Prefilling sequences are not preempted — their state is
+        cheap to hold and they are about to produce their first token."""
+        victims = [s for s in self.active.values() if not s.is_prefilling]
+        if not victims:
+            return None
+        return max(victims, key=lambda s: s.req.priority)
+
+    def preempt(self, slot: int) -> SeqState:
+        """Evict a running sequence to the swapped queue; its slot frees
+        immediately.  The engine swaps the KV pages to host around this."""
+        seq = self.active.pop(slot)
+        self._free_slots.append(slot)
+        bisect.insort(self._swapped, seq, key=lambda s: s.req.priority)
+        return seq
+
+    def peek_swapped(self) -> SeqState | None:
+        """Highest-priority preempted sequence awaiting resume."""
+        return self._swapped[0] if self._swapped else None
+
+    def place_swapped(self, seq: SeqState) -> SeqState:
+        """Resume a swapped sequence into a free slot."""
+        self._swapped.remove(seq)
+        seq.slot = self._free_slots.pop()
+        self.active[seq.slot] = seq
+        return seq
+
     @property
     def done(self) -> bool:
-        return not self._pending and not self.active
+        return (not self._pending and not self.active
+                and not self._swapped)

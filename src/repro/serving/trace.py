@@ -40,3 +40,43 @@ def poisson_trace(
             arrival=int(arrivals[i]),
         ))
     return reqs
+
+
+def shared_prefix_trace(
+    n_requests: int,
+    prefix_len: int,
+    max_prompt: int,
+    max_new: int,
+    vocab: int,
+    seed: int = 0,
+    arrival_gap: int = 1,
+) -> list[Request]:
+    """Requests sharing one common prompt prefix — the few-shot-template
+    workload prefix sharing exists for.
+
+    Every prompt is the same ``prefix_len`` tokens followed by a
+    per-request random suffix (lengths drawn from
+    ``[max(prefix_len + 1, max_prompt // 2), max_prompt]``); arrivals are
+    spaced ``arrival_gap`` engine steps apart, so earlier requests'
+    prefix pages are prefilled (and trie-registered) before later ones
+    look them up.  Deterministic for a given seed.
+    """
+    if not 0 < prefix_len < max_prompt:
+        raise ValueError(
+            f"need 0 < prefix_len < max_prompt, got {prefix_len} / "
+            f"{max_prompt}")
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(max(prefix_len + 1, max_prompt // 2),
+                                max_prompt + 1))
+        suffix = rng.integers(0, vocab, plen - prefix_len, dtype=np.int32)
+        gen = int(rng.integers(max(1, max_new // 2), max_new + 1))
+        reqs.append(Request(
+            rid=i,
+            tokens=np.concatenate([prefix, suffix]),
+            max_new=gen,
+            arrival=i * arrival_gap,
+        ))
+    return reqs

@@ -327,6 +327,241 @@ def test_engine_rejects_unservable():
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill / preemption / prefix sharing
+# ---------------------------------------------------------------------------
+def test_page_pool_refcount_fork_swap():
+    pool = PagePool(8, page_size=4)
+    a = pool.alloc(2)
+    pool.retain(a)                       # second sequence maps both pages
+    assert pool.ref_count(a[0]) == 2
+    assert pool.free(a) == []            # first drop: nothing recycled
+    assert pool.free_count == 5
+    # copy-on-write: exchange the ref on a shared page for a private one
+    pool.retain([a[1]])
+    forked = pool.fork(a[1])
+    assert forked not in a and pool.ref_count(a[1]) == 1
+    assert pool.ref_count(forked) == 1 and pool.forks == 1
+    with pytest.raises(ValueError, match="copy-on-write"):
+        pool.fork(forked)                # exclusive pages just write
+    assert sorted(pool.free(a) + pool.free([forked])) == sorted(
+        a + [forked])
+    with pytest.raises(ValueError):
+        pool.free([a[0]])                # double free still raises
+    # swap accounting round-trip
+    b = pool.alloc(3)
+    assert pool.swap_out(b) == b
+    c = pool.swap_in(3)
+    assert pool.swapped_out_pages == 3 and pool.swapped_in_pages == 3
+    pool.free(c)
+    assert pool.free_count == pool.n_pages - 1 and not pool.allocated
+
+
+def test_prefix_trie_register_match_drop():
+    from repro.serving import PrefixTrie
+
+    trie = PrefixTrie(page_size=4)
+    toks = np.arange(11, dtype=np.int32)          # 2 full pages + tail
+    trie.register(toks, [5, 6], upto_page=2)
+    assert trie.match(toks) == [5, 6]
+    assert trie.match(toks[:9]) == [5, 6]         # prefix of a chain
+    assert trie.match(toks[:7]) == [5]            # only full pages match
+    other = toks.copy()
+    other[5] += 1                                 # diverges in page 1
+    assert trie.match(other) == [5]
+    # existing nodes win: re-registering the same chunk keeps page 5
+    trie.register(toks, [9, 6], upto_page=1)
+    assert trie.match(toks[:4]) == [5]
+    trie.drop(5)                                  # freed page → chain gone
+    assert trie.match(toks) == []
+    assert len(trie) == 1                         # page 6 detached, kept
+    trie.drop(6)
+    assert len(trie) == 0
+
+
+def _llama_engine(params=None, **kw):
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    model = build_model(cfg)
+    if params is None:
+        params = model.init(KEY)
+    return cfg, model, params
+
+
+def test_engine_chunked_prefill_boundary_lengths():
+    """Prompt lengths below / at / straddling the chunk size (incl. not
+    divisible by it) all produce tokens identical to the fused-prefill
+    static reference."""
+    cfg, model, params = _llama_engine()
+    reqs = [Request(rid=i,
+                    tokens=(np.arange(1, p + 1, dtype=np.int32)
+                            * (i + 3)) % cfg.vocab,
+                    max_new=4, arrival=i)
+            for i, p in enumerate([3, 4, 7, 9])]
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=24,
+                 prefill_chunk=4)
+    res = eng.run(reqs)
+    assert res["stats"]["completed"] == len(reqs)
+    # 3→1 chunk, 4→1, 7→2, 9→3: splitting actually happened
+    assert res["stats"]["prefill_chunks"] == 7
+    for req in reqs:
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+
+
+def test_engine_preemption_victim_order_and_identity():
+    """A pool too small for three concurrent decodes forces preemption:
+    the youngest arrival is evicted first (the oldest request is never
+    preempted), every sequence completes, and tokens stay bit-identical
+    through the swap-out/swap-in cycles."""
+    cfg, model, params = _llama_engine()
+    reqs = [Request(rid=i,
+                    tokens=(np.arange(8, dtype=np.int32)
+                            * (3 * i + 7)) % cfg.vocab,
+                    max_new=8, arrival=i)
+            for i in range(3)]
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=16,
+                 n_pages=8, prefill_chunk=4, preemption=True)
+    res = eng.run(reqs)
+    assert res["stats"]["preemptions"] >= 1
+    assert res["stats"]["swapped_in_pages"] >= 1
+    assert eng.preempt_log, "pool of 7 usable pages must force eviction"
+    # victim ordering: rid 0 arrived first → highest priority → never out
+    assert 0 not in eng.preempt_log
+    for req in reqs:
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+
+
+def test_engine_swap_roundtrip_restores_exact_kv():
+    """Swap-out then swap-in lands the sequence's KV pages back on device
+    byte-for-byte (at fresh page ids)."""
+    cfg, model, params = _llama_engine()
+    req = Request(rid=0, tokens=np.arange(1, 9, dtype=np.int32),
+                  max_new=6, arrival=0)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=16,
+                 prefill_chunk=4, preemption=True)
+    eng.submit(req)
+    for _ in range(4):                    # prefill chunks + a decode step
+        eng.step()
+    (seq,) = eng.sched.active.values()
+    assert not seq.is_prefilling and len(seq.pages) >= 2
+    n = len(seq.pages)
+    before = jax.device_get(eng._gather_pages(
+        eng.pool, eng._padded_ids(seq.pages)))
+    old_pages = list(seq.pages)
+    eng._preempt(seq)
+    assert eng.sched.swapped and not eng.sched.active
+    eng._swap_in(seq)
+    assert len(seq.pages) == len(old_pages)
+    after = jax.device_get(eng._gather_pages(
+        eng.pool, eng._padded_ids(seq.pages)))
+    for k in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(before[k][:, :, :n], np.float32),
+            np.asarray(after[k][:, :, :n], np.float32))
+    res = eng.run(warmup=False)           # drive to completion
+    assert res["tokens"][0] == static_generate(model, params, req)
+
+
+def test_engine_prefix_sharing_saves_pages():
+    """Overlapping requests with one common prefix map its pages once:
+    fresh prompt-page allocations stay strictly below the sum of prompt
+    pages, tokens match the static reference, and the trie and pool are
+    empty after the trace drains."""
+    from repro.serving import shared_prefix_trace
+
+    cfg, model, params = _llama_engine()
+    trace = shared_prefix_trace(4, prefix_len=8, max_prompt=12, max_new=6,
+                                vocab=cfg.vocab, seed=2, arrival_gap=3)
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=24,
+                 prefill_chunk=4, prefix_sharing=True)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["shared_prompt_pages"] > 0
+    assert s["prompt_pages_fresh"] < s["prompt_pages_total"]
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    assert not eng.page_pool.allocated
+    assert len(eng.trie) == 0
+
+
+def test_engine_cow_fork_refcount_accounting():
+    """Identical page-aligned prompts share every prompt page; the
+    sharer's recompute of its last token copy-on-write-forks the final
+    shared page.  No page leaks or double frees survive the trace (the
+    pool raises on either), and the allocator drains clean."""
+    cfg, model, params = _llama_engine()
+    tok = (np.arange(8, dtype=np.int32) * 5 + 2) % cfg.vocab
+    reqs = [Request(rid=i, tokens=tok.copy(), max_new=6, arrival=i * 3)
+            for i in range(3)]
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=16,
+                 prefill_chunk=4, prefix_sharing=True)
+    res = eng.run(reqs)
+    s = res["stats"]
+    assert s["cow_forks"] >= 1
+    assert s["shared_prompt_pages"] >= 2
+    ref = static_generate(model, params, reqs[0])
+    for req in reqs:                      # identical prompts, one ref
+        assert res["tokens"][req.rid] == ref
+    assert eng.page_pool.forks == s["cow_forks"]
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+    assert len(eng.trie) == 0
+
+
+def test_engine_cow_fork_under_pool_pressure():
+    """Regression: a COW fork whose capacity hunt preempts the page's
+    only other holder must skip the fork (the page became private) —
+    forking a refcount-1 page raises.  Donor decoding on 3 of 4 usable
+    pages; two identical sharers admitted together: the first fork takes
+    the last free page, the second triggers preemption of the donor,
+    which drops the target page's refcount to 1."""
+    cfg, model, params = _llama_engine()
+    tok = (np.arange(8, dtype=np.int32) * 11 + 3) % cfg.vocab
+    reqs = [Request(rid=0, tokens=tok.copy(), max_new=8, arrival=0),
+            Request(rid=1, tokens=tok.copy(), max_new=6, arrival=3),
+            Request(rid=2, tokens=tok.copy(), max_new=6, arrival=3)]
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=16,
+                 n_pages=5, prefill_chunk=4, preemption=True,
+                 prefix_sharing=True)
+    res = eng.run(reqs)
+    assert res["stats"]["completed"] == 3
+    assert res["stats"]["cow_forks"] >= 1
+    assert res["stats"]["preemptions"] >= 1
+    ref = static_generate(model, params, reqs[0])[:6]
+    for req in reqs:
+        assert res["tokens"][req.rid][:6] == ref[:len(
+            res["tokens"][req.rid][:6])]
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    assert not eng.page_pool.allocated and len(eng.trie) == 0
+
+
+def test_engine_chunked_rejects_prompt_past_attn_chunk():
+    """Chunked prefill's single-block attention is only bit-identical to
+    the fused reference for prompts within one attention chunk — longer
+    prompts must be rejected up front, not silently diverge."""
+    cfg, model, params = _llama_engine()
+    eng = Engine(model, params, max_slots=2, page_size=4,
+                 max_len=cfg.attn_chunk + 32, prefill_chunk=8)
+    with pytest.raises(ValueError, match="attn_chunk"):
+        eng.submit(Request(rid=0,
+                           tokens=np.zeros(cfg.attn_chunk + 1, np.int32),
+                           max_new=2))
+
+
+def test_engine_feature_flag_validation():
+    cfg, model, params = _llama_engine()
+    with pytest.raises(ValueError, match="prefix sharing"):
+        Engine(model, params, max_len=16, prefix_sharing=True)
+    hybrid = build_model(configs.reduced(configs.get_config("zamba2-2.7b")))
+    with pytest.raises(ValueError, match="paged-KV"):
+        Engine(hybrid, {}, max_len=16, prefill_chunk=4)
+
+
+# ---------------------------------------------------------------------------
 # drivers / reporting
 # ---------------------------------------------------------------------------
 def test_serve_engine_mode_end_to_end():
