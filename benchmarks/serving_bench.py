@@ -16,6 +16,12 @@ XML of every gate for the CI artifact trail):
   reused (pages allocated for prompts strictly below the sum of prompt
   pages), and multi-chunk prefill, with tokens still bit-identical to
   the static reference.
+* **spec** (``--spec``): sparsity-tiered speculative decoding — a
+  self-draft leg (gates acceptance_rate > 0 and tokens_per_step > 1)
+  and a cost-model sparse-draft leg (gates the draft tier's bytes below
+  the target tier's), both gating bit-identical tokens vs the
+  non-speculative greedy reference and a clean page-pool drain after
+  rejected-window rollbacks.
 
 Correctness gates (CI fails on any):
 
@@ -199,6 +205,114 @@ def stress_variant(arch: str, mode: str, *, density: float, requests: int,
     return rec
 
 
+def spec_variant(arch: str, draft: str, *, density: float, spec_k: int,
+                 requests: int, max_prompt: int, max_new: int,
+                 max_slots: int, page_size: int, seed: int,
+                 cache=None) -> dict:
+    """Speculative-decoding replay with a ``self`` or ``sparse`` draft.
+
+    ``self`` drafts with the target tier itself — acceptance is near 1
+    (only ragged end-of-sequence windows count unconsumed proposals as
+    rejected), which gates the propose/verify/accept/rollback machinery.
+    ``sparse`` drafts with the planner's cost-model-chosen aggressive
+    tier; on random-init weights its argmax almost never agrees (flat
+    logits flip under any pruning), so it gates the rollback-heavy path
+    plus the draft tier's compressed-bytes saving.  Both must stay
+    bit-identical to the non-speculative static reference.
+    """
+    cfg = configs.reduced(configs.get_config(arch)).with_(
+        sod=SoDConfig(mode="tiled_csc", density=density,
+                      prune_method="magnitude", min_dim=64))
+    model = build_model(cfg)
+    raw = model.init(jax.random.PRNGKey(seed))
+    m_values = (bucket_len(max_prompt, page_size, cfg.attn_chunk),
+                max_slots)
+    plan = planner.load_or_build("auto", raw, cfg.sod, cfg=cfg, cache=cache,
+                                 m_values=m_values)
+    draft_density = None
+    if draft == "sparse":
+        # draft packs the raw weights — before the target prune below
+        draft_cfg, draft_plan = planner.build_draft_plan(
+            raw, cfg.sod, spec_k=spec_k, cfg=cfg, cache=cache,
+            m_values=m_values)
+        draft_params = sodify_params(raw, draft_cfg, plan=draft_plan)
+        draft_density = draft_plan.meta["density_choice"]["chosen"]
+    params = sodify_params(raw, cfg.sod, plan=plan)
+    if draft == "self":
+        draft_params, draft_plan, draft_density = params, plan, density
+
+    max_len = bucket_len(max_prompt, page_size, cfg.attn_chunk) + max_new
+    trace = poisson_trace(requests, 0.5, max_prompt=max_prompt,
+                          max_new=max_new, vocab=cfg.vocab, seed=seed)
+    eng = Engine(model, params, max_slots=max_slots, page_size=page_size,
+                 max_len=max_len, plan=plan, spec_k=spec_k,
+                 draft_params=draft_params, draft_plan=draft_plan)
+    res = eng.run(trace)
+
+    mismatches = []
+    for req in trace:
+        ref = static_generate(model, params, req, plan=plan)
+        if res["tokens"][req.rid] != ref:
+            mismatches.append({"rid": req.rid, "ref": ref,
+                               "engine": res["tokens"][req.rid]})
+    s = res["stats"]
+    rec = {
+        "arch": cfg.name, "mode": f"spec_{draft}", "spec": True,
+        "density": density, "draft_density": draft_density,
+        "spec_k": spec_k, "requests": requests, "max_slots": max_slots,
+        "page_size": page_size,
+        "weight_bytes": plan.compressed_bytes(),
+        "draft_weight_bytes": draft_plan.compressed_bytes(),
+        "match_static": not mismatches,
+        "mismatches": mismatches,
+        **{k: s[k] for k in
+           ("spec_windows", "draft_proposed", "draft_accepted",
+            "acceptance_rate", "tokens_per_step",
+            "warmup_s", "steady_s", "steady_tok_per_s", "completed",
+            "generated_tokens", "p50_latency_s", "p99_latency_s")},
+    }
+    rec["pool_clean"] = (not eng.page_pool.allocated
+                         and eng.page_pool.free_count
+                         == eng.page_pool.n_pages - 1)
+    return rec
+
+
+def _spec_gates(rec: dict) -> list[tuple[str, str | None]]:
+    """(gate name, failure message or None) for one spec record."""
+    m = rec["mode"]
+
+    def gate(name, ok, msg):
+        return (f"{m}:{name}", None if ok else msg)
+
+    gates = [
+        gate("match_static", rec["match_static"],
+             f"speculative tokens diverge from non-speculative greedy "
+             f"reference ({len(rec['mismatches'])} reqs)"),
+        gate("completed", rec["completed"] == rec["requests"],
+             f"only {rec['completed']}/{rec['requests']} completed"),
+        gate("windows_ran", rec["spec_windows"] > 0,
+             "no speculative windows executed"),
+        gate("pool_clean", rec["pool_clean"],
+             "pages leaked after rejected-window rollbacks"),
+    ]
+    if rec["mode"] == "spec_self":
+        gates += [
+            gate("acceptance", rec["acceptance_rate"] > 0,
+                 f"acceptance_rate={rec['acceptance_rate']} — the "
+                 f"self-draft must agree with its own verify pass"),
+            gate("speedup", rec["tokens_per_step"] > 1,
+                 f"tokens_per_step={rec['tokens_per_step']} — accepted "
+                 f"windows must beat one-token-per-step decode"),
+        ]
+    else:
+        gates.append(
+            gate("draft_bytes",
+                 rec["draft_weight_bytes"] < rec["weight_bytes"],
+                 f"draft tier bytes {rec['draft_weight_bytes']} not below "
+                 f"target tier bytes {rec['weight_bytes']}"))
+    return gates
+
+
 def _stress_gates(rec: dict) -> list[tuple[str, str | None]]:
     """(gate name, failure message or None) for one stress record."""
     m = rec["mode"]
@@ -242,6 +356,11 @@ def main(argv=None) -> int:
                     help="high-pressure trace: chunked prefill + "
                          "preemption/swap + prefix sharing, gated on each "
                          "mechanism firing")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding legs (self + sparse draft "
+                         "tiers), gated on bit-identical tokens vs the "
+                         "non-speculative greedy reference and a nonzero "
+                         "self-draft acceptance rate")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
@@ -267,9 +386,17 @@ def main(argv=None) -> int:
                 ap.error(f"--stress replays a fixed calibrated trace; "
                          f"--{flag.replace('_', '-')} is not configurable "
                          "with it")
+    if args.spec and (args.smoke or args.stress):
+        ap.error("--spec is its own leg; combine with neither --smoke "
+                 "nor --stress")
     if args.smoke:
         args.requests, args.prompt_len, args.gen = 6, 10, 5
         args.max_slots, args.page_size = 3, 4
+    if args.spec:
+        # calibrated like --smoke: tiny trace, but window-heavy (gen big
+        # enough for several k-token windows per sequence)
+        args.requests, args.prompt_len, args.gen = 4, 10, 6
+        args.max_slots, args.page_size = 2, 4
     cache = autotune.install_cache(args.tuning_cache)
 
     cases = []
@@ -295,6 +422,21 @@ def main(argv=None) -> int:
                   f"forks={rec['cow_forks']}  "
                   f"pages={rec['prompt_pages_fresh']}/"
                   f"{rec['prompt_pages_total']}")
+        failures = [f"{name}: {msg}" for name, msg in gates if msg]
+    elif args.spec:
+        for draft in ("self", "sparse"):
+            rec = spec_variant(
+                args.arch, draft, density=args.density, spec_k=2,
+                requests=args.requests, max_prompt=args.prompt_len,
+                max_new=args.gen, max_slots=args.max_slots,
+                page_size=args.page_size, seed=args.seed, cache=cache)
+            cases.append(rec)
+            gates += _spec_gates(rec)
+            print(f"{rec['mode']:>11}  match={rec['match_static']!s:5}  "
+                  f"accept={rec['acceptance_rate']:.3f}  "
+                  f"tok/step={rec['tokens_per_step']:.2f}  "
+                  f"windows={rec['spec_windows']:>3}  "
+                  f"draft_bytes={rec['draft_weight_bytes']:>9}")
         failures = [f"{name}: {msg}" for name, msg in gates if msg]
     else:
         for mode in VARIANTS:
@@ -327,17 +469,22 @@ def main(argv=None) -> int:
                 gates.append((f"{c['mode']}:compressed_bytes", bytes_msg))
         failures = [f"{name}: {msg}" for name, msg in gates if msg]
 
+    kind = "serving_bench"
+    if args.stress:
+        kind = "serving_bench_stress"
+    elif args.spec:
+        kind = "serving_bench_spec"
     out = {
-        "kind": "serving_bench_stress" if args.stress else "serving_bench",
+        "kind": kind,
         "arch": args.arch, "density": args.density, "smoke": args.smoke,
-        "stress": args.stress,
+        "stress": args.stress, "spec": args.spec,
         "cases": cases, "failures": failures, "ok": not failures,
     }
     path = pathlib.Path(args.output)
     path.write_text(json.dumps(out, indent=2))
     print(f"wrote {path}")
     if args.junit:
-        suite = "serving_bench_stress" if args.stress else "serving_bench"
+        suite = kind
         print(f"wrote {write_junit(args.junit, suite, gates)}")
     if failures:
         print("FAIL:\n  " + "\n  ".join(failures))

@@ -1,0 +1,124 @@
+#!/usr/bin/env python
+"""Markdown link checker for README and docs/ — stdlib only.
+
+Validates every ``[text](target)`` in the given markdown files (or every
+``*.md`` under given directories):
+
+* relative file links must resolve on disk (relative to the linking file);
+* ``#anchor`` fragments — bare or on a relative link — must match a
+  heading in the target file, using GitHub's slug rules (lowercase,
+  spaces to dashes, punctuation dropped);
+* external ``http(s)://`` and ``mailto:`` links are skipped (CI must not
+  depend on network reachability).
+
+Exit status 1 with a per-link report if anything is broken.
+
+Usage:
+  python scripts/check_links.py README.md docs
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# paths should resolve too.  Nested parens in URLs are out of scope.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    spaces to dashes."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)          # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links
+    # strip * emphasis markers; literal mid-word underscores survive into
+    # GitHub's anchors (e.g. `BENCH_serving.json` → bench_servingjson), so
+    # only strip _ when it wraps a word as emphasis
+    text = re.sub(r"\*", "", text)
+    text = re.sub(r"\b_([^_]+)_\b", r"\1", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def headings_of(path: pathlib.Path) -> set[str]:
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    in_fence = False
+    for line in path.read_text().splitlines():
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def iter_links(path: pathlib.Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    for lineno, target in iter_links(path):
+        if target.startswith(EXTERNAL):
+            continue
+        base, _, frag = target.partition("#")
+        if base:
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append(f"{path}:{lineno}: broken link {target!r} "
+                              f"({dest} does not exist)")
+                continue
+        else:
+            dest = path
+        if frag and dest.suffix == ".md":
+            if frag not in headings_of(dest):
+                errors.append(f"{path}:{lineno}: broken anchor "
+                              f"{target!r} (no heading slugs to "
+                              f"{frag!r} in {dest.name})")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files: list[pathlib.Path] = []
+    for arg in argv or ["README.md", "docs"]:
+        p = pathlib.Path(arg)
+        if p.is_dir():
+            files += sorted(p.rglob("*.md"))
+        elif p.exists():
+            files.append(p)
+        else:
+            print(f"check_links: no such path {arg!r}", file=sys.stderr)
+            return 1
+    errors: list[str] = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_links: {len(files)} files, "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -133,6 +133,7 @@ class PackPlan:
     # -- derived layout facts ------------------------------------------------
     @property
     def grid(self) -> tuple[int, int]:
+        """Tile-grid shape ``(k_tiles, n_tiles)`` over the (K, N) weight."""
         bk, bn = self.tile
         k, n = self.shape
         return _ceil_div(k, bk), _ceil_div(n, bn)
@@ -170,10 +171,14 @@ class PackPlan:
         return self._lead_n() * (vals + ids)
 
     def dense_bytes(self) -> int:
+        """Footprint the same leaf would take stored dense — the baseline
+        ``compressed_bytes`` is measured against."""
         k, n = self.shape
         return self._lead_n() * k * n * VALUE_BITS // 8
 
     def describe(self) -> str:
+        """One-line human-readable summary (mode, tile, caps, impl/spmd
+        hints) for plan dumps and ``ModelPlan.summary``."""
         if self.mode == "dense":
             s = "dense"
         elif self.mode == "tiled_csc":
@@ -201,12 +206,16 @@ class PackPlan:
 
     # -- (de)serialization ---------------------------------------------------
     def to_json(self) -> dict:
+        """JSON-safe dict, dropping empty fields (keeps plan files small
+        and diffable); inverse of :meth:`from_json`."""
         d = dataclasses.asdict(self)
         return {k: v for k, v in d.items() if v not in (None, {}, "", ())
                 or k in ("mode", "shape", "cap", "bcap")}
 
     @classmethod
     def from_json(cls, d: dict) -> "PackPlan":
+        """Rebuild a plan from :meth:`to_json` output, normalizing JSON
+        lists back to tuples and ignoring unknown fields."""
         kw = dict(d)
         kw["shape"] = tuple(int(s) for s in kw["shape"])
         kw["lead"] = tuple(int(s) for s in kw.get("lead", ()))
@@ -238,6 +247,7 @@ class ModelPlan:
 
     # -- lookups -------------------------------------------------------------
     def get(self, path: str) -> PackPlan | None:
+        """Entry for an exact parameter path, or None."""
         return self.entries.get(path)
 
     def for_suffix(self, suffix: str) -> PackPlan | None:
@@ -284,9 +294,11 @@ class ModelPlan:
 
     # -- accounting / reporting ---------------------------------------------
     def compressed_bytes(self) -> int:
+        """Total packed weight bytes across every planned leaf."""
         return sum(e.compressed_bytes() for e in self.entries.values())
 
     def summary(self) -> dict[str, str]:
+        """Parameter path → :meth:`PackPlan.describe` line, sorted."""
         return {p: e.describe() for p, e in sorted(self.entries.items())}
 
     def __len__(self) -> int:
@@ -294,6 +306,8 @@ class ModelPlan:
 
     # -- (de)serialization ---------------------------------------------------
     def to_json(self) -> dict:
+        """Versioned JSON document (``PLAN_VERSION``-stamped) holding every
+        entry; inverse of :meth:`from_json`."""
         return {
             "version": PLAN_VERSION,
             "mesh": self.mesh,
@@ -303,6 +317,8 @@ class ModelPlan:
 
     @classmethod
     def from_json(cls, d: dict) -> "ModelPlan":
+        """Rebuild from :meth:`to_json` output; rejects other plan-format
+        versions rather than guessing at field meanings."""
         if d.get("version") != PLAN_VERSION:
             raise ValueError(
                 f"unsupported plan version {d.get('version')!r} "
@@ -312,6 +328,8 @@ class ModelPlan:
         return cls(entries, mesh=d.get("mesh", ""), meta=d.get("meta"))
 
     def save(self, path) -> pathlib.Path:
+        """Write the plan as indented JSON (parents created); returns the
+        path for chaining into log lines."""
         path = pathlib.Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(self.to_json(), indent=1, sort_keys=True))
@@ -319,6 +337,7 @@ class ModelPlan:
 
     @classmethod
     def load(cls, path) -> "ModelPlan":
+        """Read a plan saved by :meth:`save`."""
         return cls.from_json(json.loads(pathlib.Path(path).read_text()))
 
 
@@ -330,6 +349,8 @@ _ACTIVE: contextvars.ContextVar[ModelPlan | None] = contextvars.ContextVar(
 
 
 def active_plan() -> ModelPlan | None:
+    """The :class:`ModelPlan` installed by the innermost
+    :func:`use_plan` context, or None outside any."""
     return _ACTIVE.get()
 
 

@@ -71,6 +71,7 @@ _INTERPRET_OVERHEAD_US_PER_STEP = 300.0
 
 
 def default_cache_path() -> pathlib.Path:
+    """Cache file location: $REPRO_TUNING_CACHE, else the user cache dir."""
     env = os.environ.get("REPRO_TUNING_CACHE")
     if env:
         return pathlib.Path(env).expanduser()
@@ -78,6 +79,7 @@ def default_cache_path() -> pathlib.Path:
 
 
 def key_str(key: ProblemKey) -> str:
+    """Stable string form of a :class:`ProblemKey` — the cache-entry key."""
     # tile/cap are part of the key: two packs of the same logical (K, N)
     # with different tile geometry have different param spaces and winners,
     # and must not collide on one cache entry.  The mesh signature is
@@ -116,6 +118,8 @@ class TuningCache:
             self.entries = entries
 
     def save(self) -> None:
+        """Atomically persist entries (tmp-file + rename), stamped with the
+        kernel-source hash so stale measurements self-invalidate."""
         self.path.parent.mkdir(parents=True, exist_ok=True)
         payload = {
             "version": CACHE_VERSION,
@@ -127,10 +131,13 @@ class TuningCache:
         tmp.replace(self.path)
 
     def get(self, key: ProblemKey) -> dict | None:
+        """Cached winner for the problem, or None on a cold key."""
         return self.entries.get(key_str(key))
 
     def put(self, key: ProblemKey, impl: str, params: dict, us: float,
             source: str = "measured") -> None:
+        """Record a winner (impl + params + measured microseconds) for the
+        problem; ``source`` distinguishes measured from prior-seeded."""
         self.entries[key_str(key)] = {
             "impl": impl, "params": params, "us": us, "source": source,
         }
@@ -158,6 +165,8 @@ def get_cache() -> TuningCache:
 
 
 def set_cache(cache: TuningCache | None) -> None:
+    """Install (and pin) the process-wide cache; None unpins and reverts
+    to the env-default path on next :func:`get_cache`."""
     global _CACHE, _CACHE_PINNED
     _CACHE = cache
     _CACHE_PINNED = cache is not None

@@ -125,9 +125,13 @@ class KernelImpl:
         return self.spmd_partitionable and bool(self.mesh_axes)
 
     def supports(self, key: ProblemKey) -> bool:
+        """Whether this impl can run the problem (format and backend)."""
         return key.fmt in self.formats and key.backend in self.backends
 
     def canonical_params(self, key: ProblemKey, params: dict, m: int) -> dict:
+        """Params as the runner will actually execute them for concrete
+        ``m`` (clamping/sanitizing via ``canonicalize`` when defined) —
+        the autotuner dedups trials on this."""
         if self.canonicalize is None:
             return dict(params)
         return self.canonicalize(key, params, m)
@@ -139,6 +143,8 @@ class KernelImpl:
         return {k: v[0] for k, v in self.param_space(key).items()}
 
     def param_grid(self, key: ProblemKey) -> list[dict]:
+        """Cartesian product of the impl's param space — the autotuner's
+        candidate list for this problem."""
         space = self.param_space(key)
         grid: list[dict] = [{}]
         for name, values in space.items():
@@ -151,11 +157,13 @@ _BACKEND_OVERRIDE: str | None = None
 
 
 def register(impl: KernelImpl) -> KernelImpl:
+    """Add an impl to the global registry (returns it, decorator-style)."""
     _REGISTRY[impl.name] = impl
     return impl
 
 
 def get_impl(name: str) -> KernelImpl:
+    """Look up a registered impl by name; KeyError lists what exists."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -165,6 +173,7 @@ def get_impl(name: str) -> KernelImpl:
 
 
 def all_impls() -> dict[str, KernelImpl]:
+    """Snapshot of the registry (name → impl)."""
     return dict(_REGISTRY)
 
 
@@ -193,6 +202,7 @@ def set_backend_override(backend: str | None) -> None:
 
 
 def format_of(w) -> str:
+    """Operand's packed format name: tiled_csc, block_csr, or dense."""
     if isinstance(w, TiledCSC):
         return "tiled_csc"
     if isinstance(w, BlockCSR):
@@ -227,6 +237,9 @@ def _m_bucket(m: int) -> int:
 
 def problem_key(w, m: int, backend: str | None = None,
                 mesh: str = "") -> ProblemKey:
+    """The dispatch/tuning identity of one packed matmul: operand layout
+    (format, K/N, static density, dtype) × bucketed M × backend × mesh
+    signature.  Everything the cache keys on, nothing value-dependent."""
     fmt = format_of(w)
     backend = backend or current_backend()
     if fmt == "dense":
@@ -316,6 +329,8 @@ def record_dispatches(log: list | None = None):
 
 def note_dispatch(key: ProblemKey, impl: KernelImpl, params: dict,
                   source: str) -> None:
+    """Record one dispatch decision into every active
+    :func:`log_dispatches` capture (no-op outside any)."""
     for log in _DISPATCH_LOGS:
         log.append({"key": key, "impl": impl.name, "params": dict(params),
                     "source": source})

@@ -68,7 +68,8 @@ def _sample_tokens(outs, limit: int = 8) -> list[int]:
     return toks
 
 
-def engine_main(args, model, params, plan):
+def engine_main(args, model, params, plan, draft_params=None,
+                draft_plan=None):
     """``--engine``: continuous batching over a synthetic Poisson trace."""
     from repro.serving import Engine, bucket_len, poisson_trace
 
@@ -82,7 +83,9 @@ def engine_main(args, model, params, plan):
                  max_len=max_len, plan=plan,
                  prefill_chunk=args.prefill_chunk,
                  preemption=args.preemption,
-                 prefix_sharing=args.prefix_sharing)
+                 prefix_sharing=args.prefix_sharing,
+                 spec_k=args.spec_decode,
+                 draft_params=draft_params, draft_plan=draft_plan)
     trace = poisson_trace(args.requests, args.arrival_rate,
                           max_prompt=args.prompt_len, max_new=args.gen,
                           vocab=cfg.vocab, seed=args.seed)
@@ -94,13 +97,21 @@ def engine_main(args, model, params, plan):
         "prefill_chunk": args.prefill_chunk,
         "preemption": args.preemption,
         "prefix_sharing": args.prefix_sharing,
+        "spec_decode": args.spec_decode,
         "sample": res["tokens"][trace[0].rid][:8],
         **res["stats"],
     }
+    if draft_plan is not None:
+        summary["draft_density"] = draft_plan.meta.get("density_choice",
+                                                       {}).get("chosen")
+        summary["draft_bytes"] = draft_plan.compressed_bytes()
     return summary
 
 
 def main(argv=None):
+    """CLI entry point: static batched serving or the continuous-batching
+    engine (``--engine``), with optional Sparse-on-Dense packing and
+    speculative decoding.  Prints and returns a JSON summary."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
                     choices=configs.ARCH_NAMES)
@@ -137,6 +148,16 @@ def main(argv=None):
                     help="engine mode: map identical prompt prefixes onto "
                          "refcounted KV pages (copy-on-write); requires "
                          "--prefill-chunk")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="engine mode: speculative decoding — a second, "
+                         "aggressively sparse pack of the same weights "
+                         "drafts K tokens ahead per slot, verified in one "
+                         "batched pass (greedy output stays bit-identical; "
+                         "default: off)")
+    ap.add_argument("--draft-sparsity", type=float, default=None,
+                    help="fraction of draft-tier weights pruned away "
+                         "(density = 1 - sparsity); default: let the "
+                         "planner's cost model pick from its ladder")
     ap.add_argument("--autotune", action="store_true",
                     help="warm the kernel tuning cache for this model's "
                          "packed weight shapes before serving")
@@ -155,6 +176,11 @@ def main(argv=None):
     if args.prefix_sharing and not args.prefill_chunk:
         ap.error("--prefix-sharing requires --prefill-chunk (prefill must "
                  "be able to start mid-prompt to skip shared positions)")
+    if args.spec_decode and not args.engine:
+        ap.error("--spec-decode requires --engine (draft/verify windows "
+                 "run against the paged KV cache)")
+    if args.draft_sparsity is not None and not args.spec_decode:
+        ap.error("--draft-sparsity requires --spec-decode")
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg)
@@ -185,15 +211,29 @@ def main(argv=None):
                                    cfg.attn_chunk), args.max_slots)
     else:
         m_values = (args.batch * args.prompt_len, args.batch)
-    if cfg.sod.enabled:
+    draft_params = draft_plan = None
+    if cfg.sod.enabled or args.spec_decode:
         from repro.kernels import autotune
         from repro.runtime import planner
 
         # install the cache BEFORE planning: the planner's dispatch hints
         # must come from the same cache file dispatch will read
         cache = autotune.install_cache(args.tuning_cache)
-        plan = planner.load_or_build(args.plan, params, cfg.sod, cfg=cfg,
-                                     cache=cache, m_values=m_values)
+        if cfg.sod.enabled:
+            plan = planner.load_or_build(args.plan, params, cfg.sod,
+                                         cfg=cfg, cache=cache,
+                                         m_values=m_values)
+        if args.spec_decode:
+            # draft packs the RAW weights — must happen before the target
+            # tier's sodify_params prunes them in place below
+            draft_density = (None if args.draft_sparsity is None
+                             else 1.0 - args.draft_sparsity)
+            draft_cfg, draft_plan = planner.build_draft_plan(
+                params, cfg.sod, draft_density=draft_density,
+                spec_k=args.spec_decode, cfg=cfg, cache=cache,
+                m_values=m_values)
+            draft_params = sodify_params(params, draft_cfg, plan=draft_plan)
+    if cfg.sod.enabled:
         params = sodify_params(params, cfg.sod, plan=plan)
         if args.autotune:
             if plan is not None:
@@ -206,7 +246,9 @@ def main(argv=None):
         print(f"pack plan -> {plan.save(args.plan_json)}")
 
     if args.engine:
-        summary = engine_main(args, model, params, plan)
+        summary = engine_main(args, model, params, plan,
+                              draft_params=draft_params,
+                              draft_plan=draft_plan)
         if tune_stats is not None:
             summary["autotune"] = tune_stats
         if plan is not None:

@@ -106,6 +106,25 @@ def make_chunked_prefill_step(model: LM, mesh=None, plan=None):
     return chunked_prefill_step
 
 
+def make_verify_step(model: LM, mesh=None, plan=None):
+    """Speculative-window verification step (continuous batching): every
+    engine slot scores its committed token + k draft proposals in one
+    batched pass.  ``tokens`` is (B, C=k+1) covering cache positions
+    [start[b], start[b]+C) per row; returns per-position greedy tokens,
+    the raw logits, and the updated pool.  Row ``(b, i)`` of the greedy
+    tokens is bitwise what the sequential paged decode step would emit at
+    that position — the engine's accept rule depends on it."""
+    def verify_step(params: Params, pool: Params, block_tables,
+                    tokens, start, valid_len):
+        with mesh_context(mesh), use_plan(plan):
+            logits, pool = model.verify_chunk(
+                params, pool, block_tables, tokens, start, valid_len)
+        next_tokens = jnp.argmax(logits, axis=-1)
+        return next_tokens, logits, pool
+
+    return verify_step
+
+
 def make_paged_decode_step(model: LM, mesh=None, plan=None):
     """Ragged decode step over the paged KV pool (continuous batching):
     every engine slot decodes at its own ``pos`` against its own pages."""

@@ -336,6 +336,70 @@ def paged_prefill_attention(
     return out, {"k": k_pool, "v": v_pool}
 
 
+def paged_verify_attention(
+    params: Params,
+    x: jax.Array,              # (B, C, D) — per-row speculative window
+    pool: Params,              # {"k","v"}: (n_pages, page, KV, hd)
+    block_tables: jax.Array,   # (B, max_pages) page ids per logical block
+    start: jax.Array,          # (B,) first window position per row
+    valid_len: jax.Array,      # (B,) per-row write cutoff (seq end)
+    spec: AttnSpec,
+    window: int | None = None,
+):
+    """Speculative-decoding verification: C positions per row, decode
+    numerics.
+
+    Row ``b`` scores window positions ``[start[b], start[b] + C)`` against
+    its paged cache — the scatter/gather plumbing of
+    :func:`paged_prefill_attention` (positions at or beyond ``valid_len[b]``
+    redirect to the trash page so an over-long window can never dirty a
+    live page) combined with the attention core of :func:`_attend_cached`
+    generalized to C query rows.  That core choice is the whole point: the
+    decode path normalizes scores with a float32 softmax *before* the
+    bf16 value einsum, while the prefill path casts unnormalized
+    online-softmax probabilities — so only this shape is bitwise identical
+    to running :func:`paged_decode_attention` sequentially over the same
+    tokens, which is what makes accepted speculative tokens exactly the
+    greedy sequence.
+    """
+    b, c, _ = x.shape
+    start = jnp.asarray(start, jnp.int32).reshape(b)
+    valid_len = jnp.asarray(valid_len, jnp.int32).reshape(b)
+    idx = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (B,C)
+    q, k_new, v_new = _project_qkv(params, x, spec, idx)
+    page_size = pool["k"].shape[1]
+    kvh = spec.n_kv_heads
+    g = spec.n_heads // kvh
+    hd = spec.head_dim
+
+    page = jnp.take_along_axis(block_tables, idx // page_size, axis=1)
+    page = jnp.where(idx < valid_len[:, None], page, 0)     # overflow → trash
+    off = idx % page_size
+    k_pool = pool["k"].at[page.reshape(-1), off.reshape(-1)].set(
+        k_new.reshape(b * c, kvh, hd))
+    v_pool = pool["v"].at[page.reshape(-1), off.reshape(-1)].set(
+        v_new.reshape(b * c, kvh, hd))
+
+    k_cache = k_pool[block_tables].reshape(b, -1, kvh, hd)
+    v_cache = v_pool[block_tables].reshape(b, -1, kvh, hd)
+    s_max = k_cache.shape[1]
+
+    qh = q.reshape(b, c, kvh, g, hd)
+    scores = _block_scores(qh, k_cache, spec)   # (B,KV,G,C,Smax)
+    k_pos = jnp.arange(s_max)
+    mask = k_pos[None, None, :] <= idx[:, :, None]          # (B,C,Smax)
+    if window is not None:
+        mask &= k_pos[None, None, :] > idx[:, :, None] - window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqc,bckh->bqkgh", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, c, spec.n_heads * hd).astype(x.dtype)
+    return sod.apply(out, params["wo"]), {"k": k_pool, "v": v_pool}
+
+
 def paged_decode_attention(
     params: Params,
     x: jax.Array,              # (B, 1, D)

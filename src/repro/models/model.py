@@ -129,6 +129,20 @@ class LM:
         return transformer.transformer_prefill_chunk(
             params, pool, block_tables, tokens, start, valid_len, self.cfg)
 
+    def verify_chunk(self, params: Params, pool: Params,
+                     block_tables: jax.Array, tokens: jax.Array,
+                     start: jax.Array, valid_len: jax.Array):
+        """Speculative-window verification: tokens (B, C) covering cache
+        positions [start[b], start[b]+C) per row, writes clamped at
+        valid_len[b].  Returns (logits for all C positions, pool); logits
+        are bitwise what C sequential paged decode steps would produce."""
+        if self.cfg.family in ("hybrid", "ssm"):
+            raise ValueError(
+                f"family {self.cfg.family!r} has no paged verify path — "
+                "speculative decoding needs the paged-KV cache")
+        return transformer.transformer_verify_chunk(
+            params, pool, block_tables, tokens, start, valid_len, self.cfg)
+
     # -- info -------------------------------------------------------------------
     def param_count(self, params: Params | None = None) -> int:
         if params is None:

@@ -180,6 +180,36 @@ def attn_block_decode(bp: Params, x: jax.Array, cache: Params,
     return x + mo, cache
 
 
+def attn_block_verify(bp: Params, x: jax.Array, layer_pool: Params,
+                      block_tables: jax.Array, start: jax.Array,
+                      valid_len: jax.Array, cfg: ModelConfig,
+                      window: int | None):
+    """One block over a speculative verification window.
+
+    Mirrors :func:`attn_block_decode`'s paged branch exactly (same norm /
+    residual order, ``wo`` applied inside the attention call with the same
+    dispatch) with the single-token attention replaced by
+    :func:`repro.models.attention.paged_verify_attention` — row ``b``
+    scores C window positions starting at ``start[b]`` instead of one.
+    Every other op is position-row-independent, so verify logits for a
+    window position are bitwise what the sequential decode step would
+    produce there.
+    """
+    spec = attn_spec(cfg)
+    h = layers.rms_norm(x, bp["norm1"], cfg.norm_eps)
+    ao, layer_pool = attn.paged_verify_attention(
+        bp["attn"], h, layer_pool, block_tables, start, valid_len, spec,
+        window=window)
+    if cfg.use_post_norms:
+        ao = layers.rms_norm(ao, bp["norm1_post"], cfg.norm_eps)
+    x = x + ao
+    h2 = layers.rms_norm(x, bp["norm2"], cfg.norm_eps)
+    mo, _ = _apply_mlp(bp, h2, cfg)
+    if cfg.use_post_norms:
+        mo = layers.rms_norm(mo, bp["norm2_post"], cfg.norm_eps)
+    return x + mo, layer_pool
+
+
 def attn_block_prefill_chunk(bp: Params, x: jax.Array, layer_pool: Params,
                              block_tables: jax.Array, start: jax.Array,
                              valid_len: jax.Array, cfg: ModelConfig,
@@ -400,6 +430,43 @@ def transformer_decode_paged(params: Params, pool: Params,
             x, layer_pool = attn_block_decode(
                 bp, x, layer_pool, pos, cfg, cfg.window_for(j),
                 block_tables=block_tables)
+            ks.append(layer_pool["k"])
+            vs.append(layer_pool["v"])
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    x, (knew, vnew) = _scan(
+        group_body, x, (params["blocks"], pool["k"], pool["v"]), cfg)
+    logits = project_logits(params, x, cfg)
+    return logits, {"k": knew, "v": vnew}
+
+
+def transformer_verify_chunk(params: Params, pool: Params,
+                             block_tables: jax.Array, tokens: jax.Array,
+                             start: jax.Array, valid_len: jax.Array,
+                             cfg: ModelConfig):
+    """Verify a speculative k-token window for every engine slot at once.
+
+    ``tokens`` is (B, C) — row ``b`` holds its committed last token plus
+    C-1 draft proposals, covering cache positions ``[start[b],
+    start[b] + C)``; writes at or beyond ``valid_len[b]`` land in the
+    trash page.  Mirrors :func:`transformer_decode_paged` with each
+    single-token block swapped for :func:`attn_block_verify`, so logits
+    row ``(b, i)`` is bitwise the sequential decode output at position
+    ``start[b] + i`` given the fed window prefix — the property the
+    engine's accept rule relies on.
+    """
+    x = embed_inputs(params, {"tokens": tokens}, cfg)
+    p_period = cfg.pattern_period
+
+    def group_body(x, inp):
+        gp, kp, vp = inp
+        ks, vs = [], []
+        for j in range(p_period):
+            bp = jax.tree_util.tree_map(lambda t: t[j], gp)
+            layer_pool = {"k": kp[j], "v": vp[j]}
+            x, layer_pool = attn_block_verify(
+                bp, x, layer_pool, block_tables, start, valid_len, cfg,
+                cfg.window_for(j))
             ks.append(layer_pool["k"])
             vs.append(layer_pool["v"])
         return x, (jnp.stack(ks), jnp.stack(vs))

@@ -44,7 +44,8 @@ from repro.core.plan import ModelPlan, PackPlan
 from repro.core.sod import SoDConfig
 from repro.kernels import registry
 
-__all__ = ["build_plan", "warmup_plan", "load_or_build"]
+__all__ = ["build_plan", "build_draft_plan", "choose_draft_density",
+           "warmup_plan", "load_or_build", "DRAFT_DENSITY_LADDER"]
 
 
 def _is_abstract(leaf) -> bool:
@@ -209,6 +210,131 @@ def build_plan(
         "arch": getattr(cfg, "name", ""),
     }
     return ModelPlan(entries, mesh=mesh_sig, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# draft tier (speculative decoding)
+# ---------------------------------------------------------------------------
+DRAFT_DENSITY_LADDER = (0.05, 0.08, 0.12, 0.2, 0.3, 0.5)
+
+
+def _draft_sod_cfg(sod_cfg: SoDConfig, density: float) -> SoDConfig:
+    """Draft-tier :class:`~repro.core.sod.SoDConfig`: the target's packing
+    geometry (format, tile, prune method) re-pruned to ``density``.  A
+    dense target still gets a packed draft — magnitude-pruned
+    ``tiled_csc`` — which is the paper's point: the same dense matmul
+    path serves the compressed tier too."""
+    if sod_cfg.enabled:
+        return dataclasses.replace(sod_cfg, density=float(density))
+    return SoDConfig(mode="tiled_csc", density=float(density),
+                     prune_method="magnitude", min_dim=64)
+
+
+def _expected_window_tokens(alpha: float, k: int) -> float:
+    """Expected committed tokens per k-draft window under i.i.d. per-token
+    acceptance probability ``alpha``: the longest accepted prefix plus the
+    bonus target token, E = sum_{i=0..k} alpha^i."""
+    return float(sum(alpha ** i for i in range(k + 1)))
+
+
+def _draft_alpha(density: float) -> float:
+    """Heuristic acceptance probability for a draft tier keeping
+    ``density`` of the target's weights.  Monotone in density with
+    alpha(1) ≈ 1 (an unpruned self-draft always agrees): the sqrt shape
+    keeps moderate tiers attractive while harshly discounting extreme
+    pruning.  A measured acceptance curve can replace this without
+    touching the selection rule."""
+    return 0.95 * float(density) ** 0.5
+
+
+def choose_draft_density(
+    params,
+    sod_cfg: SoDConfig,
+    *,
+    spec_k: int = 4,
+    candidates: tuple[float, ...] = DRAFT_DENSITY_LADDER,
+    cfg=None,
+    cache=None,
+    m_values: tuple[int, ...] = (128, 8),
+) -> tuple[float, dict]:
+    """Cost-model choice of the draft tier's sparsity.
+
+    For each candidate density the draft tier is planned abstractly
+    (ShapeDtypeStructs — no pruning pass) and costed by the paper's
+    decode model: decode is weight-bytes-bound, so a window of k draft
+    steps plus one target verify costs ``k·r + 1`` target-step
+    equivalents, where ``r`` is the draft/target ratio of planned
+    compressed bytes over the packable weight set.  Expected yield is the
+    standard speculative-decoding window formula under the documented
+    acceptance heuristic :func:`_draft_alpha`; the density maximizing
+    yield/cost wins.  Returns ``(density, diagnostics)``.
+    """
+    shapes = jax.tree_util.tree_map(
+        lambda leaf: jax.ShapeDtypeStruct(tuple(leaf.shape),
+                                          jnp.dtype(leaf.dtype)), params)
+
+    def _ratio(plan: ModelPlan) -> float:
+        dense = sum(e.dense_bytes() for e in plan.entries.values())
+        return plan.compressed_bytes() / dense if dense else 1.0
+
+    if sod_cfg.enabled:
+        t_ratio = _ratio(build_plan(shapes, sod_cfg, cfg=cfg, cache=cache,
+                                    m_values=m_values))
+    else:
+        t_ratio = 1.0
+    diag: dict = {"spec_k": int(spec_k), "target_ratio": round(t_ratio, 4),
+                  "candidates": {}}
+    best_d, best_score = None, -1.0
+    for d in candidates:
+        dplan = build_plan(shapes, _draft_sod_cfg(sod_cfg, d), cfg=cfg,
+                           cache=cache, m_values=m_values)
+        r = _ratio(dplan) / max(t_ratio, 1e-9)
+        alpha = _draft_alpha(d)
+        score = _expected_window_tokens(alpha, spec_k) / (spec_k * r + 1.0)
+        diag["candidates"][f"{d:g}"] = {
+            "cost_ratio": round(r, 4), "alpha": round(alpha, 4),
+            "tokens_per_cost": round(score, 4)}
+        if score > best_score:
+            best_d, best_score = float(d), score
+    diag["chosen"] = best_d
+    return best_d, diag
+
+
+def build_draft_plan(
+    params,
+    sod_cfg: SoDConfig,
+    *,
+    draft_density: float | None = None,
+    spec_k: int = 4,
+    cfg=None,
+    mesh=None,
+    cache=None,
+    backend: str | None = None,
+    m_values: tuple[int, ...] = (128, 8),
+) -> tuple[SoDConfig, ModelPlan]:
+    """Second, aggressive :class:`~repro.core.plan.ModelPlan` over the
+    *same* weights — the speculative-decoding draft tier.
+
+    ``params`` must be the raw (unpacked) parameters; pack the draft copy
+    with ``sodify_params(params, draft_cfg, plan=draft_plan)`` *before*
+    packing the target tier.  ``draft_density=None`` delegates to
+    :func:`choose_draft_density`.  Returns ``(draft_cfg, draft_plan)``;
+    the plan's meta records the tier and the diagnostics of the density
+    choice.
+    """
+    diag = None
+    if draft_density is None:
+        draft_density, diag = choose_draft_density(
+            params, sod_cfg, spec_k=spec_k, cfg=cfg, cache=cache,
+            m_values=m_values)
+    draft_cfg = _draft_sod_cfg(sod_cfg, draft_density)
+    plan = build_plan(params, draft_cfg, cfg=cfg, mesh=mesh, cache=cache,
+                      backend=backend, m_values=m_values)
+    plan.meta["tier"] = "draft"
+    plan.meta["spec_k"] = int(spec_k)
+    if diag is not None:
+        plan.meta["density_choice"] = diag
+    return draft_cfg, plan
 
 
 def _concrete_operand(e: PackPlan, key):

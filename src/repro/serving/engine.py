@@ -43,6 +43,21 @@ batch busy under real load:
   positions.  Writes into a shared page (a fully shared prompt recomputes
   its last token for logits) copy-on-write fork it first.
 
+One decode upgrade rides the same machinery: **sparsity-tiered
+speculative decoding** (``spec_k=k`` with ``draft_params`` — a second,
+aggressively compressed pack of the *same* weights, typically from
+:func:`repro.runtime.planner.build_draft_plan`).  Each step, every
+decoding slot drafts k tokens ahead with the cheap tier (its KV lives in
+a parallel page pool addressed by the same block tables), then one
+batched verify pass scores the whole k+1-token window with the target
+weights; the longest draft prefix matching the target's greedy tokens is
+accepted plus one bonus target token, and pages allocated past the new
+position roll back to the pool.  Emitted tokens are always the *target's*
+argmax, so output is bit-identical to non-speculative greedy decoding —
+the draft tier only changes how many positions each step commits.
+``spec_k=0`` (the default) leaves every code path byte-identical to the
+non-speculative engine.
+
 Greedy tokens are bit-identical to per-request static-batch serve
 (:func:`static_generate`) under any schedule because every per-row
 computation is batch-row-independent and padding/masked positions
@@ -137,7 +152,8 @@ class Engine:
                  page_size: int = 16, max_len: int = 256,
                  n_pages: int | None = None, plan=None, mesh=None,
                  prefill_chunk: int | None = None, preemption: bool = False,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False, spec_k: int = 0,
+                 draft_params: Params | None = None, draft_plan=None):
         cfg = model.cfg
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
@@ -159,6 +175,25 @@ class Engine:
                 "prefix sharing needs chunked prefill (prefill_chunk=...): "
                 "admission skips shared positions, so prefill must be able "
                 "to start mid-prompt")
+        self.spec_k = int(spec_k or 0)
+        if self.spec_k:
+            if not self.paged:
+                raise ValueError(
+                    f"family {cfg.family!r} keeps O(1) recurrent state per "
+                    "slot; speculative decoding verifies windows against "
+                    "the paged KV cache")
+            if draft_params is None:
+                raise ValueError(
+                    "spec_k > 0 needs draft_params — a second (aggressively "
+                    "compressed) pack of the same weights, e.g. from "
+                    "repro.runtime.planner.build_draft_plan")
+            if prefill_chunk or preemption or prefix_sharing:
+                raise ValueError(
+                    "speculative decoding composes with the fused-prefill "
+                    "engine only; chunked prefill / preemption / prefix "
+                    "sharing with a draft tier are not supported")
+        self.draft_params = draft_params
+        self.draft_plan = draft_plan
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
         self.preemption = bool(preemption)
         self.prefix_sharing = bool(prefix_sharing)
@@ -172,7 +207,8 @@ class Engine:
             "warmup_s": 0.0, "prefill_chunks": 0, "preemptions": 0,
             "swapped_out_pages": 0, "swapped_in_pages": 0, "cow_forks": 0,
             "shared_prompt_pages": 0, "prompt_pages_total": 0,
-            "prompt_pages_fresh": 0,
+            "prompt_pages_fresh": 0, "spec_windows": 0,
+            "draft_proposed": 0, "draft_accepted": 0,
         }
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
@@ -180,7 +216,12 @@ class Engine:
         if self.paged:
             self.page_size = int(page_size)
             self._chunk = cfg.attn_chunk
-            self.max_pages = -(-self.max_len // self.page_size)
+            # speculative windows probe up to spec_k positions past a
+            # sequence's own lifetime; widening the block tables keeps
+            # those (trash-redirected) lookups in bounds so a clamped
+            # gather can never alias a live page
+            self.max_pages = -(-(self.max_len + self.spec_k)
+                               // self.page_size)
             if n_pages is None:
                 n_pages = 1 + self.max_slots * self.max_pages
             self.page_pool = PagePool(n_pages, self.page_size)
@@ -201,6 +242,19 @@ class Engine:
                 self._chunk_prefill = jax.jit(
                     steps_mod.make_chunked_prefill_step(model, mesh=mesh,
                                                         plan=plan))
+            if self.spec_k:
+                # the draft tier's KV lives in a parallel page pool
+                # addressed by the same block tables / page ids
+                self.draft_pool = model.init_paged_pool(n_pages,
+                                                        self.page_size)
+                self._draft_decode = jax.jit(
+                    steps_mod.make_paged_decode_step(model, mesh=mesh,
+                                                     plan=draft_plan))
+                self._draft_prefill = jax.jit(
+                    steps_mod.make_prefill_full(model, mesh=mesh,
+                                                plan=draft_plan))
+                self._verify = jax.jit(
+                    steps_mod.make_verify_step(model, mesh=mesh, plan=plan))
         else:
             self.cache = model.init_cache(self.max_slots, self.max_len)
             spec = model.cache_spec()
@@ -214,6 +268,9 @@ class Engine:
         return bucket_len(plen, self.page_size, self._chunk)
 
     def submit(self, req: Request) -> None:
+        """Queue a request, validating it can ever fit this engine
+        (prompt + generation budget within ``max_len`` and the page
+        pool); admission happens later, when a slot and pages free up."""
         plen = len(req.tokens)
         end = plen + req.max_new - 1          # last cache position + 1
         if self.paged:
@@ -326,6 +383,15 @@ class Engine:
         pages = self.page_pool.alloc(n)
         self.pool = self._page_write(
             self.pool, cache, jnp.asarray(np.asarray(pages, np.int32)))
+        if self.spec_k:
+            # the draft tier needs its own prompt KV: same pages, its own
+            # pool, its own (cheaper) weights.  Draft logits are unused —
+            # the first token must be the target's.
+            _, dcache = self._draft_prefill(
+                self.draft_params, {"tokens": jnp.asarray(padded)[None]})
+            self.draft_pool = self._page_write(
+                self.draft_pool, dcache,
+                jnp.asarray(np.asarray(pages, np.int32)))
         seq = self.sched.place(req, pos=plen, first_token=first, pages=pages,
                                ready_wall=self._first_seen[req.rid])
         self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
@@ -541,6 +607,102 @@ class Engine:
             seq.pages.append(pg)
             self.block_tables[slot, need_idx] = pg
 
+    # -- speculative decoding -------------------------------------------------
+    def _spec_grow(self, decoding: dict[int, SeqState]) -> None:
+        """Pre-allocate pages covering every live position a speculative
+        window can write — ``[pos, min(pos + spec_k, seq_end - 1)]``.
+        Positions past ``seq_end`` redirect to the trash page instead, so
+        the worst-case-reservation admission rule (``pages_for(seq_end)``)
+        still bounds growth and the pool can never exhaust here."""
+        for slot in sorted(decoding):
+            seq = decoding[slot]
+            need = self.page_pool.pages_for(
+                min(seq.pos + self.spec_k + 1, self._seq_end(seq)))
+            while len(seq.pages) < need:
+                (pg,) = self.page_pool.alloc(1)
+                seq.pages.append(pg)
+                self.block_tables[slot, len(seq.pages) - 1] = pg
+
+    def _trim_spec_pages(self, seq: SeqState) -> None:
+        """Roll back pages allocated for rejected window positions: keep
+        only what covers the committed prefix ``[0, pos)`` (never below
+        the prompt bucket — ``pos > plen`` always) and return the rest to
+        the pool.  Stale KV beyond ``pos`` needs no scrubbing: the next
+        window re-writes each position before any row can attend to it."""
+        keep = self.page_pool.pages_for(seq.pos)
+        if len(seq.pages) > keep:
+            self.page_pool.free(seq.pages[keep:])
+            del seq.pages[keep:]
+            self.block_tables[seq.slot, keep:] = PagePool.TRASH_PAGE
+
+    def _spec_window(self, decoding: dict[int, SeqState],
+                     ) -> list[tuple[int, int]]:
+        """One propose/verify/accept window for every decoding slot.
+
+        The draft tier runs ``spec_k`` batched decode steps ahead (its KV
+        goes to the parallel draft pool), then one batched verify pass
+        scores the whole window ``[committed token, d_1, ..., d_k]`` with
+        the target weights.  Per slot, the longest draft prefix matching
+        the target's greedy tokens is accepted plus one bonus target
+        token — every emission is the *target's* argmax, so the output
+        equals sequential greedy decode token-for-token; rejected
+        positions' pages roll back via :meth:`_trim_spec_pages`.
+        """
+        k = self.spec_k
+        self._spec_grow(decoding)
+        btj = jnp.asarray(self.block_tables)
+        d_tok = self._tok.copy()
+        d_pos = self._pos.copy()
+        drafts = np.zeros((self.max_slots, k), np.int32)
+        # k + 1 steps: step j < k proposes d_{j+1}; the extra step only
+        # backfills draft KV for position pos + k, which full acceptance
+        # commits without another draft read of it this window — skipping
+        # it leaves stale pad KV behind the next window's proposals
+        for j in range(k + 1):
+            nxt, _, self.draft_pool = self._draft_decode(
+                self.draft_params, self.draft_pool, btj,
+                jnp.asarray(d_tok), jnp.asarray(d_pos))
+            if j == k:
+                break
+            col = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
+            drafts[:, j] = col
+            d_tok[:, 0] = col
+            d_pos += 1
+
+        v_tok = np.zeros((self.max_slots, k + 1), np.int32)
+        v_tok[:, 0] = self._tok[:, 0]
+        v_tok[:, 1:] = drafts
+        v_valid = np.zeros(self.max_slots, np.int32)
+        for slot, seq in decoding.items():
+            v_valid[slot] = self._seq_end(seq)
+        nxt, _, self.pool = self._verify(
+            self.params, self.pool, btj, jnp.asarray(v_tok),
+            jnp.asarray(self._pos), jnp.asarray(v_valid))
+        target = np.asarray(nxt).reshape(self.max_slots, k + 1)
+
+        events: list[tuple[int, int]] = []
+        for slot, seq in list(decoding.items()):
+            m = 0
+            while m < k and drafts[slot, m] == target[slot, m]:
+                m += 1
+            e = min(m + 1, seq.remaining)
+            emitted = [int(target[slot, i]) for i in range(e)]
+            seq.generated.extend(emitted)
+            seq.pos += e
+            seq.spec_proposed += k
+            seq.spec_accepted += min(m, e)
+            self.stats["spec_windows"] += 1
+            self.stats["draft_proposed"] += k
+            self.stats["draft_accepted"] += min(m, e)
+            self._pos[slot] = seq.pos
+            self._tok[slot, 0] = emitted[-1]
+            events += [(seq.req.rid, t) for t in emitted]
+            if seq.remaining == 0:
+                self._complete(slot)
+            else:
+                self._trim_spec_pages(seq)
+        return events
+
     # -- stepping -------------------------------------------------------------
     def step(self) -> list[tuple[int, int]]:
         """Advance virtual time one step: resume swapped sequences, admit
@@ -589,11 +751,14 @@ class Engine:
                 for seq in list(self.sched.active.values()):
                     if seq.is_prefilling:
                         events += self._prefill_tick(seq)
-            self._grow_pages()
+            if not self.spec_k:
+                self._grow_pages()   # spec windows grow in _spec_grow
 
         decoding = {slot: seq for slot, seq in self.sched.active.items()
                     if not seq.is_prefilling}
-        if decoding:
+        if decoding and self.spec_k:
+            events += self._spec_window(decoding)
+        elif decoding:
             tok = jnp.asarray(self._tok)
             pos = jnp.asarray(self._pos)
             if self.paged:
@@ -664,6 +829,27 @@ class Engine:
                 self.params, self.pool, jnp.asarray(self.block_tables),
                 jnp.asarray(self._tok), jnp.asarray(self._pos))
             jax.block_until_ready(out[0])
+            if self.spec_k:
+                for b in sorted({self._bucket(len(r.tokens))
+                                 for r in self.sched.pending}):
+                    _, dcache = self._draft_prefill(
+                        self.draft_params,
+                        {"tokens": jnp.zeros((1, b), jnp.int32)})
+                    trash = np.full(b // self.page_size,
+                                    PagePool.TRASH_PAGE, np.int32)
+                    jax.block_until_ready(self._page_write(
+                        self.draft_pool, dcache, jnp.asarray(trash))["k"])
+                out = self._draft_decode(
+                    self.draft_params, self.draft_pool,
+                    jnp.asarray(self.block_tables), jnp.asarray(self._tok),
+                    jnp.asarray(self._pos))
+                jax.block_until_ready(out[0])
+                out = self._verify(
+                    self.params, self.pool, jnp.asarray(self.block_tables),
+                    jnp.zeros((self.max_slots, self.spec_k + 1), jnp.int32),
+                    jnp.asarray(self._pos),
+                    jnp.zeros(self.max_slots, jnp.int32))
+                jax.block_until_ready(out[0])
         else:
             sub = self.model.init_cache(1, self.max_len)
             out = self._decode(self.params, sub,
@@ -720,6 +906,11 @@ class Engine:
             "steps": self._step_idx - start,
             "completed": len(self._finished),
             "generated_tokens": n_tok,
+            "tokens_per_step": round(
+                n_tok / max(self._step_idx - start, 1), 4),
+            "acceptance_rate": round(
+                self.stats["draft_accepted"]
+                / max(self.stats["draft_proposed"], 1), 4),
             "steady_s": round(steady_s, 4),
             "steady_tok_per_s": round(n_tok / max(steady_s, 1e-9), 2),
             "p50_latency_s": round(float(np.percentile(lat, 50)), 4)

@@ -56,13 +56,16 @@ class PagePool:
 
     @property
     def free_count(self) -> int:
+        """Pages currently available to :meth:`alloc`."""
         return len(self._free)
 
     @property
     def allocated(self) -> frozenset[int]:
+        """Ids of every page currently held (refcount >= 1)."""
         return frozenset(self._refs)
 
     def ref_count(self, page: int) -> int:
+        """Holders of ``page`` (0 = free); >1 means prefix-shared."""
         return self._refs.get(page, 0)
 
     def pages_for(self, n_tokens: int) -> int:
@@ -70,6 +73,7 @@ class PagePool:
         return -(-int(n_tokens) // self.page_size)
 
     def can_alloc(self, n: int) -> bool:
+        """Whether :meth:`alloc` of ``n`` pages would succeed right now."""
         return n <= len(self._free)
 
     def alloc(self, n: int) -> list[int]:

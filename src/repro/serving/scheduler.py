@@ -60,9 +60,12 @@ class SeqState:
     host_kv: Any = None           # swapped-out KV snapshot (host arrays)
     ready_wall: float = 0.0       # wall clock when first admissible
     done_wall: float = 0.0
+    spec_proposed: int = 0        # draft tokens proposed for this sequence
+    spec_accepted: int = 0        # draft tokens that became emitted tokens
 
     @property
     def remaining(self) -> int:
+        """Generation budget left (``max_new`` minus tokens emitted)."""
         return self.req.max_new - len(self.generated)
 
     @property

@@ -1,0 +1,276 @@
+"""Sparsity-tiered speculative decoding: draft-tier planning, k-token
+propose/verify/accept windows, rejected-page rollback accounting, and
+bit-identity of accepted tokens with the non-speculative greedy
+reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.sod import SoDConfig, sodify_params
+from repro.models import attention as attn
+from repro.models.model import build_model
+from repro.models.transformer import attn_spec
+from repro.serving import Engine, Request, poisson_trace, static_generate
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _llama(sod=False):
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    if sod:
+        cfg = cfg.with_(sod=SoDConfig(mode="tiled_csc", density=0.4,
+                                      min_dim=64))
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+# ---------------------------------------------------------------------------
+# verify attention: bitwise the sequential decode path, batched over C
+# ---------------------------------------------------------------------------
+def test_paged_verify_matches_sequential_decode():
+    """Row i of a C-position verify pass must be bit-equal to the i-th
+    sequential paged decode step — the engine's accept rule (and hence
+    output identity with non-speculative greedy) rests on exactly this."""
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    spec = attn_spec(cfg)
+    params = attn.init_attention(KEY, cfg.d_model, spec)
+    b, page, n_logical, c = 2, 4, 4, 3
+    n_pages = 1 + b * n_logical
+    pool_a = attn.init_paged_pool(n_pages, page, spec)
+    kshape = pool_a["k"].shape
+    pool_a = {
+        "k": jax.random.normal(jax.random.PRNGKey(1), kshape, jnp.bfloat16),
+        "v": jax.random.normal(jax.random.PRNGKey(2), kshape, jnp.bfloat16),
+    }
+    pool_b = dict(pool_a)
+    tables = jnp.asarray([[3, 5, 1, 7], [6, 2, 4, 8]], jnp.int32)
+    start = jnp.asarray([5, 9], jnp.int32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (b, c, cfg.d_model),
+                          jnp.bfloat16)
+
+    seq_outs = []
+    for i in range(c):
+        o, pool_a = attn.paged_decode_attention(
+            params, x[:, i:i + 1], pool_a, tables, start + i, spec)
+        seq_outs.append(np.asarray(o[:, 0]))
+
+    o_v, pool_b = attn.paged_verify_attention(
+        params, x, pool_b, tables, start, jnp.full((b,), 64, jnp.int32),
+        spec)
+    for i in range(c):
+        np.testing.assert_array_equal(np.asarray(o_v[:, i]), seq_outs[i])
+    np.testing.assert_array_equal(np.asarray(pool_a["k"]),
+                                  np.asarray(pool_b["k"]))
+    np.testing.assert_array_equal(np.asarray(pool_a["v"]),
+                                  np.asarray(pool_b["v"]))
+
+
+def test_paged_verify_valid_len_redirects_overflow():
+    """Positions at or past ``valid_len`` must scatter to the trash page,
+    never into a live page."""
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    spec = attn_spec(cfg)
+    params = attn.init_attention(KEY, cfg.d_model, spec)
+    b, page, c = 1, 4, 3
+    pool = attn.init_paged_pool(4, page, spec)
+    live = np.asarray(pool["k"][1:]).copy()
+    tables = jnp.asarray([[1, 2, 3]], jnp.int32)
+    x = jax.random.normal(KEY, (b, c, cfg.d_model), jnp.bfloat16)
+    # start=6, valid_len=7: row 0 writes live, rows 1-2 overflow
+    _, pool = attn.paged_verify_attention(
+        params, x, pool, tables, jnp.asarray([6], jnp.int32),
+        jnp.asarray([7], jnp.int32), spec)
+    after = np.asarray(pool["k"][1:])
+    changed = np.argwhere(np.any(live != after, axis=tuple(
+        range(1, after.ndim))))
+    # only page index 1 of the live slice (= page id 2, holding pos 6)
+    assert changed.tolist() == [[1]]
+
+
+# ---------------------------------------------------------------------------
+# engine: accepted tokens == non-speculative greedy, across window sizes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_spec_engine_matches_static_serve(k):
+    cfg, model, params = _llama()
+    trace = poisson_trace(4, 0.7, max_prompt=10, max_new=6,
+                          vocab=cfg.vocab, seed=3)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=24,
+                 spec_k=k, draft_params=params)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["completed"] == len(trace)
+    for req in trace:
+        ref = static_generate(model, params, req)
+        assert res["tokens"][req.rid] == ref, f"rid {req.rid}"
+    assert s["spec_windows"] > 0
+    assert s["draft_proposed"] == s["spec_windows"] * k
+    assert 0 <= s["draft_accepted"] <= s["draft_proposed"]
+    # every page back after per-window grow/trim cycles
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+
+
+def test_spec_self_draft_accepts_full_windows():
+    """Window-aligned budgets (6 decode tokens = two full k=2 windows) and
+    a self-draft: every proposal must be accepted — the draft pool holds
+    bit-exact KV for all committed positions, including the bonus token's
+    position a full acceptance commits."""
+    cfg, model, params = _llama()
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, tokens=rng.integers(1, cfg.vocab, size=9),
+                    max_new=7, arrival=0) for i in range(3)]
+    eng = Engine(model, params, max_slots=2, page_size=8, max_len=40,
+                 spec_k=2, draft_params=params)
+    res = eng.run(reqs)
+    s = res["stats"]
+    assert s["acceptance_rate"] == 1.0
+    assert s["tokens_per_step"] > 1
+    assert s["steps"] < s["generated_tokens"]
+    for req in reqs:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+
+
+def test_spec_junk_draft_rollback_keeps_identity():
+    """A draft from different random weights proposes near-pure garbage:
+    heavy per-window rejection and page rollback, yet accepted tokens
+    stay bit-identical and the pool drains clean."""
+    cfg, model, params = _llama()
+    junk = model.init(jax.random.PRNGKey(7))
+    trace = poisson_trace(4, 0.7, max_prompt=10, max_new=6,
+                          vocab=cfg.vocab, seed=3)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=24,
+                 spec_k=4, draft_params=junk)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["completed"] == len(trace)
+    assert s["acceptance_rate"] < 0.5
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+
+
+def test_spec_sod_tiers_match_static(monkeypatch, tmp_path):
+    """Both tiers planner-packed (target at 0.4, draft chosen by the cost
+    model): accepted tokens identical to the packed static reference."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tc.json"))
+    from repro.runtime import planner
+
+    cfg, model, raw = _llama(sod=True)
+    plan = planner.load_or_build("auto", raw, cfg.sod, cfg=cfg,
+                                 m_values=(8, 1))
+    draft_cfg, draft_plan = planner.build_draft_plan(
+        raw, cfg.sod, spec_k=2, cfg=cfg, m_values=(8, 1))
+    draft_params = sodify_params(raw, draft_cfg, plan=draft_plan)
+    params = sodify_params(raw, cfg.sod, plan=plan)
+    trace = poisson_trace(3, 0.7, max_prompt=10, max_new=5,
+                          vocab=cfg.vocab, seed=3)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=24,
+                 plan=plan, spec_k=2, draft_params=draft_params,
+                 draft_plan=draft_plan)
+    res = eng.run(trace)
+    assert res["stats"]["completed"] == len(trace)
+    for req in trace:
+        ref = static_generate(model, params, req, plan=plan)
+        assert res["tokens"][req.rid] == ref, f"rid {req.rid}"
+    assert not eng.page_pool.allocated
+
+
+def test_spec_defaults_off_zero_counters():
+    """``spec_k=0`` takes the legacy decode path: spec counters stay 0,
+    the derived rates report 0/neutral, and no draft state exists."""
+    cfg, model, params = _llama()
+    trace = poisson_trace(2, 0.6, max_prompt=8, max_new=4,
+                          vocab=cfg.vocab, seed=1)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=16)
+    assert not hasattr(eng, "draft_pool")
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["spec_windows"] == 0 and s["draft_proposed"] == 0
+    assert s["draft_accepted"] == 0 and s["acceptance_rate"] == 0.0
+    assert s["tokens_per_step"] > 0
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+
+
+def test_spec_validation_errors():
+    cfg, model, params = _llama()
+    with pytest.raises(ValueError, match="draft_params"):
+        Engine(model, params, max_len=16, spec_k=2)
+    with pytest.raises(ValueError, match="speculative"):
+        Engine(model, params, max_len=16, spec_k=2, draft_params=params,
+               prefill_chunk=4)
+    hybrid = build_model(configs.reduced(configs.get_config("zamba2-2.7b")))
+    with pytest.raises(ValueError, match="paged KV"):
+        Engine(hybrid, {}, max_len=16, spec_k=2, draft_params={})
+
+
+# ---------------------------------------------------------------------------
+# planner: draft-tier plan + cost-model density choice
+# ---------------------------------------------------------------------------
+def test_draft_plan_cost_model(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tc.json"))
+    from repro.runtime import planner
+
+    cfg, model, params = _llama(sod=True)
+    plan = planner.load_or_build("auto", params, cfg.sod, cfg=cfg,
+                                 m_values=(8, 1))
+    d, diag = planner.choose_draft_density(params, cfg.sod, spec_k=4,
+                                           cfg=cfg, m_values=(8, 1))
+    assert d in planner.DRAFT_DENSITY_LADDER
+    assert diag["chosen"] == d
+    assert len(diag["candidates"]) == len(planner.DRAFT_DENSITY_LADDER)
+    draft_cfg, draft_plan = planner.build_draft_plan(
+        params, cfg.sod, spec_k=4, cfg=cfg, m_values=(8, 1))
+    assert draft_cfg.density == d
+    assert draft_plan.compressed_bytes() < plan.compressed_bytes()
+    assert draft_plan.meta["tier"] == "draft"
+    assert draft_plan.meta["spec_k"] == 4
+    assert draft_plan.meta["density_choice"]["chosen"] == d
+
+
+def test_draft_plan_over_dense_target(monkeypatch, tmp_path):
+    """A dense (unpacked) target still gets a packed draft tier — the
+    draft SoDConfig is synthesized from scratch."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tc.json"))
+    from repro.core.sod import DENSE
+    from repro.runtime import planner
+
+    cfg, model, params = _llama()
+    draft_cfg, draft_plan = planner.build_draft_plan(
+        params, DENSE, draft_density=0.2, cfg=cfg, m_values=(8, 1))
+    assert draft_cfg.enabled and draft_cfg.density == 0.2
+    assert len(draft_plan) >= 1
+    # no cost-model diagnostics when the density was pinned explicitly
+    assert "density_choice" not in draft_plan.meta
+
+
+# ---------------------------------------------------------------------------
+# serve driver
+# ---------------------------------------------------------------------------
+def test_serve_spec_decode_end_to_end(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tc.json"))
+    from repro.launch import serve
+
+    summary = serve.main([
+        "--arch", "llama3.2-1b", "--reduced", "--engine",
+        "--requests", "3", "--prompt-len", "6", "--gen", "4",
+        "--max-slots", "2", "--page-size", "4",
+        "--spec-decode", "2", "--draft-sparsity", "0.5"])
+    assert summary["spec_decode"] == 2
+    assert summary["completed"] == 3
+    assert summary["spec_windows"] > 0
+    assert "acceptance_rate" in summary and "tokens_per_step" in summary
+    assert summary["draft_bytes"] > 0
+
+
+def test_serve_spec_decode_flag_validation(capsys):
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "llama3.2-1b", "--reduced",
+                    "--spec-decode", "2"])
+    assert "--engine" in capsys.readouterr().err
