@@ -51,6 +51,24 @@ SWEEP_SMOKE = [
     (64, 512, 512, 0.3, "block_csr"),
 ]
 
+# (m, k, n, density, fmt, qmode) — quantized-pack gate cases
+QUANT_SWEEP_FULL = [
+    (64, 256, 256, 0.3, "tiled_csc", "int8"),
+    (64, 256, 256, 0.3, "tiled_csc", "fp8"),
+    (64, 256, 256, 0.3, "tiled_csc", "codebook"),
+    (64, 512, 512, 0.3, "block_csr", "int8"),
+    (64, 512, 512, 0.3, "block_csr", "codebook"),
+]
+QUANT_SWEEP_SMOKE = [
+    (64, 256, 256, 0.3, "tiled_csc", "int8"),
+    (64, 256, 256, 0.3, "tiled_csc", "codebook"),
+    (64, 512, 512, 0.3, "block_csr", "int8"),
+]
+# Max relative output drift (vs the fp oracle, normalized by max|y_fp|)
+# allowed per quantization mode.  int8 keeps 127 levels per tile; fp8 has a
+# 3-bit mantissa; a 16-entry codebook is deliberately lossy.
+QDRIFT_TOL = {"int8": 0.02, "fp8": 0.08, "codebook": 0.5}
+
 ATOL = 5e-4
 # Wall-clock on shared CI runners is noisy; the tuned-vs-default tripwire
 # only counts a violation when it clears both a relative tolerance AND this
@@ -163,6 +181,101 @@ def bench_case(m, k, n, density, fmt, *, iters=3, top_k=4,
     }
 
 
+def quant_case(m, k, n, density, fmt, qmode, *, iters=3,
+               cache=None) -> dict:
+    """Quantized-pack gate: bytes invariant + fused-dequant parity + drift.
+
+    Three checks fold into ``ref_ok``:
+
+    * **bytes** — the quantized pack stores strictly fewer bytes than the
+      fp pack at the same density and layout, and the value payload shrinks
+      by exactly the mode's bit ratio (int8 halves it, codebook quarters
+      it);
+    * **kernel parity** — tuned dispatch on the quantized pack matches the
+      quantized jnp oracle at kernel ATOL (the Pallas fused dequant must
+      agree with reference dequantization, not merely be close);
+    * **drift** — the quantized oracle vs the *fp* oracle stays inside the
+      per-mode :data:`QDRIFT_TOL` (normalized by max|y_fp|).
+    """
+    name = f"{fmt}_m{m}_k{k}_n{n}_d{density:g}_q{qmode}"
+    if qmode == "fp8" and formats.fp8_dtype() is None:
+        return {"name": name, "fmt": fmt, "qmode": qmode,
+                "skipped": "no fp8 dtype in this jax build",
+                "ref_ok": True}
+    x, w, p_fp = _build(m, k, n, density, fmt)
+    p_q = formats.quantize_packed(p_fp, qmode)
+    backend = registry.current_backend()
+
+    fn_ref = ref.sod_matmul_ref if fmt == "tiled_csc" else ref.block_matmul_ref
+    y_fp = np.asarray(fn_ref(x, p_fp))
+    y_qref = np.asarray(fn_ref(x, p_q))
+    entry = autotune.tune(x, p_q, backend=backend, cache=cache,
+                          top_k=2, iters=iters, force=True)
+    y_q = np.asarray(registry.get_impl(entry["impl"]).run(
+        x, p_q, backend=backend, **entry["params"]))
+
+    kernel_err = float(np.max(np.abs(y_q - y_qref)))
+    drift = float(np.max(np.abs(y_qref - y_fp))) / (
+        float(np.max(np.abs(y_fp))) or 1.0)
+    qb, fb = p_q.nbytes_compressed(), p_fp.nbytes_compressed()
+    value_ratio = formats.qvalue_bits(qmode) / 16.0
+    # bytes invariant: strictly below the fp pack, and the value payload
+    # shrinks by exactly the mode's bit ratio (int8 → 0.5, codebook → 0.25)
+    bytes_ok = qb < fb and value_ratio < 1.0
+    return {
+        "name": name,
+        "fmt": fmt, "m": m, "k": k, "n": n, "density": density,
+        "qmode": qmode,
+        "tuned_impl": entry["impl"],
+        "q_bytes": qb, "fp_bytes": fb,
+        "value_bytes_ratio": value_ratio,
+        "compression_ratio": round(qb / p_q.nbytes_dense(), 5),
+        "kernel_err": kernel_err,
+        "drift_vs_fp": round(drift, 5),
+        "max_abs_err": kernel_err,
+        "ref_ok": bool(bytes_ok and kernel_err <= ATOL
+                       and drift <= QDRIFT_TOL[qmode]),
+    }
+
+
+def planner_quant_case(cache=None) -> dict:
+    """Planner qmode gate: dense fallback judged on *quantized* bytes.
+
+    At density 0.8 a tiled fp pack exceeds the dense byte count (≈1.2×),
+    so the planner's fallback stores the layer dense — but the same layer
+    under int8 packs to ≈0.8× and must stay packed.  Also checks byte
+    parity: the bytes a plan promises (``PackPlan.compressed_bytes``)
+    equal what the pack actually stores (``nbytes_compressed``), per mode.
+    """
+    from repro.core.sod import SoDConfig, sodify_params
+    from repro.runtime import planner
+
+    key = jax.random.PRNGKey(11)
+    params = {"mlp": {"w_gate": pruning.random_sparse(key, (256, 512), 0.8)}}
+    checks, parity_ok = {}, True
+    for qmode in ("none", "int8"):
+        sodc = SoDConfig(mode="tiled_csc", density=0.8, min_dim=128,
+                         qmode=qmode)
+        plan = planner.build_plan(params, sodc, cache=cache, m_values=(64,))
+        e = plan.entries[".mlp.w_gate"]
+        checks[qmode] = e.mode
+        if e.mode != "dense":
+            packed = sodify_params(params, sodc, plan=plan)
+            leaf = packed["mlp"]["w_gate"]
+            parity_ok &= leaf.nbytes_compressed() == e.compressed_bytes()
+    # fp pack at d=0.8 must fall back to dense; int8 must stay packed and
+    # the plan's byte promise must match the real pack exactly
+    ok = (checks.get("none") == "dense"
+          and checks.get("int8") == "tiled_csc" and parity_ok)
+    return {
+        "name": "planner_quant_dense_fallback",
+        "fmt": "planner", "density": 0.8,
+        "mode_by_qmode": checks,
+        "plan_pack_byte_parity": bool(parity_ok),
+        "ref_ok": bool(ok),
+    }
+
+
 def planner_case(cache=None) -> dict:
     """Planner-produced pack: the bench gate covers the per-layer plan path
     (build → pack-through-plan → dispatch under the active plan), not just
@@ -238,7 +351,10 @@ def sweep(smoke=False, iters=None, cache=None) -> dict:
                              cache=cache)
         rec["tripwire_retries"] = retries
         records.append(rec)
+    for c in (QUANT_SWEEP_SMOKE if smoke else QUANT_SWEEP_FULL):
+        records.append(quant_case(*c, iters=iters, cache=cache))
     records.append(planner_case(cache=cache))
+    records.append(planner_quant_case(cache=cache))
     return {
         "schema": 1,
         "backend": registry.current_backend(),
@@ -293,9 +409,9 @@ def check_against(result: dict, baseline_path: str, tol=0.2) -> list[str]:
                 f"{rec['name']}: planner pack {rec['planner_bytes']}B "
                 f"exceeds global-config pack {rec['global_bytes']}B")
         b = base_recs.get(rec["name"])
-        if b is not None:
-            cr, bcr = rec["compression_ratio"], b["compression_ratio"]
-            if abs(cr - bcr) > tol * bcr:
+        if b is not None and "compression_ratio" in b:
+            cr, bcr = rec.get("compression_ratio"), b["compression_ratio"]
+            if cr is not None and abs(cr - bcr) > tol * bcr:
                 problems.append(
                     f"{rec['name']}: compression_ratio {cr} vs baseline {bcr}")
         if "tuned" in rec and _tripwire_violation(rec, tol):
@@ -329,9 +445,9 @@ def run():
             rows.append(
                 (f"kernel_{rec['name']}_tuned[{rec['tuned']['impl']}]",
                  rec["tuned"]["us"], rec["speedup"]))
-        else:  # planner record: ratio only, no timed default/tuned pair
+        else:  # planner/quant record: ratio only, no timed pair
             rows.append((f"kernel_{rec['name']}", 0.0,
-                         rec["compression_ratio"]))
+                         rec.get("compression_ratio", 0.0)))
         if not rec["ref_ok"]:
             mismatches.append(
                 f"{rec['name']}: max_abs_err={rec['max_abs_err']:.2e}")
@@ -372,10 +488,18 @@ def main(argv=None) -> int:
     hdr = f"{'case':34s} {'default_us':>11s} {'tuned_us':>9s} {'speedup':>8s} {'tuned impl':>14s} ok"
     print(hdr)
     for rec in result["records"]:
-        if "default" not in rec:   # planner record: bytes, not wall time
-            print(f"{rec['name']:34s} planner {rec['planner_bytes']}B vs "
-                  f"global {rec['global_bytes']}B "
-                  f"{'PASS' if rec['ref_ok'] else 'FAIL'}")
+        if "default" not in rec:   # planner/quant record: bytes, not time
+            status = "PASS" if rec["ref_ok"] else "FAIL"
+            if "planner_bytes" in rec:
+                detail = (f"planner {rec['planner_bytes']}B vs "
+                          f"global {rec['global_bytes']}B")
+            elif "qmode" in rec:
+                detail = (f"skipped: {rec['skipped']}" if "skipped" in rec
+                          else f"q={rec['qmode']} {rec['q_bytes']}B vs fp "
+                               f"{rec['fp_bytes']}B drift={rec['drift_vs_fp']}")
+            else:
+                detail = str(rec.get("mode_by_qmode", ""))
+            print(f"{rec['name']:34s} {detail} {status}")
             continue
         print(f"{rec['name']:34s} {rec['default']['us']:11.1f} "
               f"{rec['tuned']['us']:9.1f} {rec['speedup']:8.2f} "

@@ -9,7 +9,12 @@ Validates every ``[text](target)`` in the given markdown files (or every
   heading in the target file, using GitHub's slug rules (lowercase,
   spaces to dashes, punctuation dropped);
 * external ``http(s)://`` and ``mailto:`` links are skipped (CI must not
-  depend on network reachability).
+  depend on network reachability);
+* inline-code **code pointers** of the form ``path/to/file.py:Symbol``
+  (the style docs/ARCHITECTURE.md uses) must point at a real file —
+  resolved against the repo root, ``src/repro/``, or the doc's own
+  directory — and ``Symbol`` must be defined in it (a ``def``/``class``
+  or a module-level assignment).
 
 Exit status 1 with a per-link report if anything is broken.
 
@@ -25,6 +30,8 @@ import sys
 # [text](target) — excluding images' leading "!" is unnecessary: image
 # paths should resolve too.  Nested parens in URLs are out of scope.
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+# `path/file.py:Symbol` — the code-pointer idiom in docs/ARCHITECTURE.md
+CODE_PTR_RE = re.compile(r"`([\w./-]+\.py):(\w+)`")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
 CODE_FENCE_RE = re.compile(r"^(```|~~~)")
 EXTERNAL = ("http://", "https://", "mailto:")
@@ -77,6 +84,38 @@ def iter_links(path: pathlib.Path):
             yield lineno, m.group(1)
 
 
+def iter_code_pointers(path: pathlib.Path):
+    in_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in CODE_PTR_RE.finditer(line):
+            yield lineno, m.group(1), m.group(2)
+
+
+def resolve_source(doc: pathlib.Path, rel: str) -> pathlib.Path | None:
+    """Find the source file a pointer names: repo root, ``src/repro/``
+    (the ARCHITECTURE.md convention), or next to the doc itself."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    for base in (root, root / "src" / "repro", doc.parent):
+        cand = base / rel
+        if cand.is_file():
+            return cand
+    return None
+
+
+def defines_symbol(src: pathlib.Path, symbol: str) -> bool:
+    """True when ``symbol`` is a def/class (any nesting) or a module-level
+    assignment in ``src`` — a plain text scan, no import needed."""
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(symbol)}\b"
+        rf"|^{re.escape(symbol)}\s*[:=]", re.MULTILINE)
+    return bool(pat.search(src.read_text()))
+
+
 def check_file(path: pathlib.Path) -> list[str]:
     errors = []
     for lineno, target in iter_links(path):
@@ -96,6 +135,14 @@ def check_file(path: pathlib.Path) -> list[str]:
                 errors.append(f"{path}:{lineno}: broken anchor "
                               f"{target!r} (no heading slugs to "
                               f"{frag!r} in {dest.name})")
+    for lineno, rel, symbol in iter_code_pointers(path):
+        src = resolve_source(path, rel)
+        if src is None:
+            errors.append(f"{path}:{lineno}: dangling code pointer "
+                          f"`{rel}:{symbol}` ({rel} not found)")
+        elif not defines_symbol(src, symbol):
+            errors.append(f"{path}:{lineno}: stale code pointer "
+                          f"`{rel}:{symbol}` (no such symbol in {src})")
     return errors
 
 

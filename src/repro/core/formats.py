@@ -24,6 +24,25 @@ through ``to_dense`` (scatter-add ⇒ gather gradient onto the fixed mask —
 this is what makes fixed-mask sparse *training* work for free), and carry
 byte-accounting helpers that honour the paper's 16-bit value / 8-bit index
 assumption as well as the TPU bf16/int8 layout.
+
+Quantized value storage (``qmode``)
+-----------------------------------
+
+On top of sparsity, the packed value buffers can be stored quantized
+(EIE-style weight sharing taken to the SoD formats).  Both executable
+formats carry a ``qmode`` axis:
+
+  * ``"none"``     — values stay in the pack dtype (fp32/bf16); default.
+  * ``"int8"``     — symmetric int8 with one fp scale per (bk, bn) tile.
+  * ``"fp8"``      — float8_e4m3 values with one fp scale per tile.
+  * ``"codebook"`` — EIE-style weight sharing: a per-matrix table of
+    ``CODEBOOK_SIZE`` shared fp values (entry 0 reserved for 0.0) and a
+    narrow per-slot index into it.
+
+Quantization happens at pack time (:func:`quantize_packed`, called by the
+packers); dequantization is fused into the Pallas decompress loops and
+into ``to_dense`` so every consumer — oracle, VJP, SPMD gather — sees the
+dequantized weight.
 """
 from __future__ import annotations
 
@@ -47,7 +66,51 @@ __all__ = [
     "padded_shape",
     "observed_tiled_cap",
     "observed_block_cap",
+    "quantize_packed",
+    "qvalue_bits",
+    "fp8_dtype",
+    "QMODES",
+    "CODEBOOK_SIZE",
 ]
+
+# -- quantized value storage -------------------------------------------------
+# The accounting constants are shared with the (jax-free) plan layer so the
+# planner's compressed_bytes can never drift from the packed containers'.
+from repro.core.plan import (  # noqa: E402
+    CODEBOOK_SIZE, QMODES, QVALUE_BITS, SCALE_BITS)
+
+
+def fp8_dtype():
+    """The fp8 value dtype (``float8_e4m3fn``), or ``None`` when this jax
+    build has no fp8 support — callers gate the ``"fp8"`` qmode on it."""
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def qvalue_bits(qmode: str, ncodes: int = CODEBOOK_SIZE) -> int:
+    """Paper-accounting bits per stored value slot under ``qmode``.
+
+    ``"none"`` keeps the paper's 16-bit value assumption; int8/fp8 store one
+    byte; codebook stores only the index into the shared table
+    (``ceil(log2(ncodes))``, 4 bits at the default table size).
+    """
+    if qmode == "codebook":
+        return max(int(np.ceil(np.log2(max(ncodes, 2)))), 1)
+    if qmode in (None, "none"):
+        qmode = "none"
+    if qmode not in QVALUE_BITS:
+        raise ValueError(
+            f"unknown qmode {qmode!r} (expected one of {QMODES})")
+    return QVALUE_BITS[qmode]
+
+
+def _check_qmode(qmode: str) -> str:
+    qmode = qmode or "none"
+    if qmode not in QMODES:
+        raise ValueError(f"unknown qmode {qmode!r} (expected one of {QMODES})")
+    if qmode == "fp8" and fp8_dtype() is None:
+        raise ValueError("qmode='fp8' needs jnp.float8_e4m3fn, which this "
+                         "jax build does not provide")
+    return qmode
 
 
 def density(x) -> float:
@@ -59,6 +122,7 @@ def density(x) -> float:
 
 
 def padded_shape(shape: tuple[int, int], tile: tuple[int, int]) -> tuple[int, int]:
+    """Round ``shape`` up to whole multiples of ``tile``."""
     bk, bn = tile
     k, n = shape
     return ((k + bk - 1) // bk * bk, (n + bn - 1) // bn * bn)
@@ -107,6 +171,124 @@ def observed_block_cap(w, tile: tuple[int, int], br: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Quantization helpers shared by both executable formats
+# ---------------------------------------------------------------------------
+def _fit_codebook(x: np.ndarray, ncodes: int) -> np.ndarray:
+    """EIE-style shared-value table via 1-D Lloyd k-means (deterministic).
+
+    Entry 0 is reserved for exactly 0.0 so padding slots (and pruned
+    positions inside stored blocks) round-trip to zero; the remaining
+    ``ncodes - 1`` centroids are quantile-initialised over the non-zero
+    values and refined for a few Lloyd iterations.
+    """
+    book = np.zeros((ncodes,), np.float32)
+    nz = np.asarray(x, np.float32).ravel()
+    nz = nz[nz != 0]
+    if nz.size == 0:
+        return book
+    k = ncodes - 1
+    cent = np.quantile(nz, np.linspace(0.0, 1.0, k))
+    # collapsed quantiles (few distinct values) would alias centroids;
+    # nudge them apart so argmin assignment stays well defined
+    cent = cent + np.arange(k) * 1e-12
+    for _ in range(8):
+        assign = np.argmin(np.abs(nz[:, None] - cent[None, :]), axis=1)
+        for i in range(k):
+            sel = assign == i
+            if sel.any():
+                cent[i] = nz[sel].mean()
+    book[1:] = np.sort(cent)
+    return book
+
+
+def _dequant_values(vals, scale, codebook, qmode: str, nval_dims: int):
+    """Dequantize a packed value buffer back to float32.
+
+    ``vals`` is ``(*lead, Kt, Nt, *value_dims)`` with ``nval_dims`` trailing
+    value dims (2 for TiledCSC's ``(cap, bn)``, 3 for BlockCSR's
+    ``(bcap, br, bn)``); ``scale`` is ``(*lead, Kt, Nt)``; ``codebook`` is
+    ``(*lead, ncodes)``.  Differentiable in ``scale`` / ``codebook``, which
+    is what routes training gradients into the quantization parameters.
+    """
+    if qmode in (None, "none"):
+        return vals
+    if qmode in ("int8", "fp8"):
+        s = scale.reshape(scale.shape + (1,) * nval_dims)
+        return vals.astype(jnp.float32) * s
+    if qmode == "codebook":
+        lead_ndim = vals.ndim - 2 - nval_dims
+        idx = vals.astype(jnp.int32).reshape(vals.shape[:lead_ndim] + (-1,))
+        out = jnp.take_along_axis(codebook.astype(jnp.float32), idx, axis=-1)
+        return out.reshape(vals.shape)
+    raise ValueError(f"unknown qmode {qmode!r}")
+
+
+def _quantize_values(vals, qmode: str, nval_dims: int, ncodes: int):
+    """Quantize a packed fp value buffer; returns ``(qvals, scale, codebook)``.
+
+    Shapes as in :func:`_dequant_values`.  Padding slots hold value 0 and
+    map to quantized 0 (int8/fp8) or codebook entry 0 in every mode, so the
+    sentinel-row/-id masking downstream keeps working unchanged.
+    """
+    qmode = _check_qmode(qmode)
+    if qmode == "none":
+        return vals, None, None
+    tile_axes = tuple(range(vals.ndim - nval_dims, vals.ndim))
+    absmax = jnp.max(jnp.abs(vals.astype(jnp.float32)), axis=tile_axes)
+    if qmode == "int8":
+        scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+        s = scale.reshape(scale.shape + (1,) * nval_dims)
+        q = jnp.clip(jnp.round(vals.astype(jnp.float32) / s), -127, 127)
+        return q.astype(jnp.int8), scale.astype(jnp.float32), None
+    if qmode == "fp8":
+        scale = jnp.where(absmax > 0, absmax / 448.0, 1.0)
+        s = scale.reshape(scale.shape + (1,) * nval_dims)
+        q = (vals.astype(jnp.float32) / s).astype(fp8_dtype())
+        return q, scale.astype(jnp.float32), None
+    # codebook: fit one shared-value table per lead slice (host-side numpy —
+    # packing is an eager, concrete-weights operation)
+    if isinstance(vals, jax.core.Tracer):
+        raise ValueError("qmode='codebook' needs concrete weights at pack "
+                         "time (the shared-value table is fit with numpy)")
+    lead = vals.shape[:vals.ndim - 2 - nval_dims]
+    v_np = np.asarray(vals, np.float32).reshape((-1,) + vals.shape[len(lead):])
+    books = np.stack([_fit_codebook(v_np[i], ncodes)
+                      for i in range(v_np.shape[0])])
+    idx = np.empty(v_np.shape, np.int8)
+    for i in range(v_np.shape[0]):
+        idx[i] = np.argmin(
+            np.abs(v_np[i][..., None] - books[i]), axis=-1).astype(np.int8)
+    codebook = jnp.asarray(books.reshape(lead + (ncodes,)), jnp.float32)
+    return jnp.asarray(idx.reshape(vals.shape)), None, codebook
+
+
+def quantize_packed(packed, qmode: str, ncodes: int = CODEBOOK_SIZE):
+    """Quantize the value buffer of a packed operand (TiledCSC/BlockCSR).
+
+    Returns a new container with ``qmode`` set and ``vals``/``block_vals``
+    replaced by the quantized representation plus the ``scale`` /
+    ``codebook`` side bands.  ``qmode='none'`` (or quantizing an already
+    quantized operand with the same mode) is the identity.
+    """
+    qmode = _check_qmode(qmode)
+    if qmode == getattr(packed, "qmode", "none"):
+        return packed
+    if getattr(packed, "qmode", "none") != "none":
+        raise ValueError(f"operand is already quantized ({packed.qmode}); "
+                         "re-pack from dense to change qmode")
+    if isinstance(packed, TiledCSC):
+        q, scale, codebook = _quantize_values(packed.vals, qmode, 2, ncodes)
+        return dataclasses.replace(packed, vals=q, scale=scale,
+                                   codebook=codebook, qmode=qmode)
+    if isinstance(packed, BlockCSR):
+        q, scale, codebook = _quantize_values(
+            packed.block_vals, qmode, 3, ncodes)
+        return dataclasses.replace(packed, block_vals=q, scale=scale,
+                                   codebook=codebook, qmode=qmode)
+    raise TypeError(f"cannot quantize {type(packed).__name__}")
+
+
+# ---------------------------------------------------------------------------
 # TiledCSC — element-granular, paper-faithful static-shape CSC
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
@@ -120,46 +302,78 @@ class TiledCSC:
     matches them and scatter-add drops them (``mode='drop'``), which also
     guarantees *exactly zero* gradient flow into padding slots — fixed-mask
     sparse training stays on the mask.
+
+    Under a quantized ``qmode``, ``vals`` holds the quantized representation
+    (int8 / fp8 codes, or int8 codebook indices) and ``scale`` / ``codebook``
+    carry the dequantization side band; padding slots quantize to 0 (or
+    codebook entry 0 == 0.0), so the sentinel logic is qmode-oblivious.
     """
 
     vals: jax.Array   # (*lead, Kt, Nt, cap, bn) — lead = layer-stack/expert dims
     rows: jax.Array   # same shape, int8 (bk <= 128) or int32
     shape: tuple[int, int]          # logical (K, N) before tile padding
     tile: tuple[int, int]
+    scale: Any = None      # (*lead, Kt, Nt) f32, int8/fp8 modes only
+    codebook: Any = None   # (*lead, ncodes) f32, codebook mode only
+    qmode: str = "none"
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        return (self.vals, self.rows), (self.shape, self.tile)
+        """Flatten into (array children, static aux) for jax pytrees."""
+        return (self.vals, self.rows, self.scale, self.codebook), (
+            self.shape, self.tile, self.qmode)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        vals, rows = children
-        shape, tile = aux
-        return cls(vals=vals, rows=rows, shape=shape, tile=tile)
+        """Rebuild from :meth:`tree_flatten` output."""
+        vals, rows, scale, codebook = children
+        shape, tile, qmode = aux
+        return cls(vals=vals, rows=rows, shape=shape, tile=tile,
+                   scale=scale, codebook=codebook, qmode=qmode)
 
     # -- views --------------------------------------------------------------
     @property
     def cap(self) -> int:
+        """Padded slot count per tile column (trailing value dim)."""
         return self.vals.shape[-2]
 
     @property
     def grid(self) -> tuple[int, int]:
+        """``(Kt, Nt)`` tile-grid extents."""
         return self.vals.shape[-4], self.vals.shape[-3]
 
     @property
     def lead(self) -> tuple[int, ...]:
+        """Leading stack dims (layer groups / experts), ahead of the grid."""
         return tuple(self.vals.shape[:-4])
 
     @property
     def dtype(self):
+        """Stored value dtype: fp, int8 codes, or fp8."""
         return self.vals.dtype
 
-    def nbytes_compressed(self, value_bits: int = 16, index_bits: int = 8) -> int:
-        """Footprint under the paper's encoding (value + index per slot)."""
+    def nbytes_compressed(self, value_bits: int | None = None,
+                          index_bits: int = 8) -> int:
+        """Footprint under the paper's encoding (value + index per slot).
+
+        ``value_bits=None`` uses the ``qmode``'s width (16 unquantized, 8
+        for int8/fp8, index width for codebook) plus the side-band cost:
+        one 16-bit scale per tile, or 16 bits per codebook entry.
+        """
+        side = 0
+        if value_bits is None:
+            ncodes = (self.codebook.shape[-1] if self.codebook is not None
+                      else CODEBOOK_SIZE)
+            value_bits = qvalue_bits(self.qmode, ncodes)
+            if self.scale is not None:
+                side += int(np.prod(self.scale.shape)) * SCALE_BITS // 8
+            if self.codebook is not None:
+                side += int(np.prod(self.codebook.shape)) * SCALE_BITS // 8
         slots = int(np.prod(self.vals.shape))
-        return slots * (value_bits + index_bits) // 8
+        return slots * (value_bits + index_bits) // 8 + side
 
     def nbytes_dense(self, value_bits: int = 16) -> int:
+        """Dense-equivalent bytes at ``value_bits`` (lead dims included)."""
         # nbytes_compressed counts the stacked (layer-group / expert) lead
         # dims via vals.shape; the dense equivalent must too, or stacked
         # leaves report a compression ratio off by prod(lead)
@@ -168,14 +382,28 @@ class TiledCSC:
             * value_bits // 8
 
     def compression_ratio(self) -> float:
+        """``nbytes_compressed / nbytes_dense`` — below 1 when packing pays."""
         return self.nbytes_compressed() / max(self.nbytes_dense(), 1)
+
+    def dequantize(self) -> "TiledCSC":
+        """The equivalent unquantized (``qmode='none'``) operand, values
+        dequantized to float32.  Identity when already unquantized."""
+        if self.qmode == "none":
+            return self
+        vals = _dequant_values(self.vals, self.scale, self.codebook,
+                               self.qmode, 2)
+        return TiledCSC(vals=vals, rows=self.rows, shape=self.shape,
+                        tile=self.tile)
 
     def to_dense(self) -> jax.Array:
         """Differentiable scatter-add decompression (the jnp 'oracle').
 
         Leading (layer-stack / expert) dims are vmapped; returns
-        ``(*lead, K, N)``.
+        ``(*lead, K, N)``.  Quantized operands dequantize first (float32
+        output), which keeps gradients flowing into ``scale``/``codebook``.
         """
+        if self.qmode != "none":
+            return self.dequantize().to_dense()
         if self.lead:
             flat = TiledCSC(
                 vals=self.vals.reshape((-1,) + self.vals.shape[-4:]),
@@ -210,12 +438,15 @@ def pack_tiled_csc(
     tile: tuple[int, int] = (128, 128),
     cap: int | None = None,
     index_dtype=None,
+    qmode: str = "none",
+    ncodes: int = CODEBOOK_SIZE,
 ) -> TiledCSC:
     """Pack a dense matrix into :class:`TiledCSC`.
 
     ``cap=None`` chooses the exact max column non-zero count over all tiles
     (lossless).  A smaller ``cap`` keeps the ``cap`` largest-magnitude entries
-    per tile column (lossy, ESE-style load-capping).
+    per tile column (lossy, ESE-style load-capping).  ``qmode`` quantizes the
+    value buffer after packing (:func:`quantize_packed`).
 
     Leading dims (layer stacks / experts) are packed with a *shared* cap so
     the result slices homogeneously under ``lax.scan``.
@@ -232,8 +463,10 @@ def pack_tiled_csc(
             lead + packed[0].vals.shape)
         rows = jnp.stack([p.rows for p in packed]).reshape(
             lead + packed[0].rows.shape)
-        return TiledCSC(vals=vals, rows=rows, shape=tuple(w.shape[-2:]),
-                        tile=tile)
+        return quantize_packed(
+            TiledCSC(vals=vals, rows=rows, shape=tuple(w.shape[-2:]),
+                     tile=tile),
+            qmode, ncodes)
     if w.ndim != 2:
         raise ValueError(f"expected >=2-D matrix, got {w.shape}")
     bk, bn = tile
@@ -286,7 +519,9 @@ def pack_tiled_csc(
     if index_dtype is None:
         index_dtype = jnp.int8 if bk <= 128 else jnp.int32
     rows = rows.astype(index_dtype)
-    return TiledCSC(vals=vals, rows=rows, shape=shape, tile=(bk, bn))
+    return quantize_packed(
+        TiledCSC(vals=vals, rows=rows, shape=shape, tile=(bk, bn)),
+        qmode, ncodes)
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +538,9 @@ class BlockCSR:
     in-tile block indices (padding id = -1, dropped on scatter).  ``tile_nnz``
     counts non-zero sub-blocks per macro tile; a macro tile with 0 can be
     skipped entirely by the matmul kernel (compute win).
+
+    ``qmode``/``scale``/``codebook`` quantize the ``block_vals`` buffer the
+    same way :class:`TiledCSC` quantizes ``vals`` (scale per macro tile).
     """
 
     block_vals: jax.Array  # (Kt, Nt, bcap, br, bn)
@@ -311,48 +549,86 @@ class BlockCSR:
     shape: tuple[int, int]
     tile: tuple[int, int]  # (bk, bn) macro tile
     br: int                # sub-block rows
+    scale: Any = None      # (*lead, Kt, Nt) f32, int8/fp8 modes only
+    codebook: Any = None   # (*lead, ncodes) f32, codebook mode only
+    qmode: str = "none"
 
     def tree_flatten(self):
-        return (self.block_vals, self.block_ids, self.tile_nnz), (
+        """Flatten into (array children, static aux) for jax pytrees."""
+        return (self.block_vals, self.block_ids, self.tile_nnz,
+                self.scale, self.codebook), (
             self.shape,
             self.tile,
             self.br,
+            self.qmode,
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        block_vals, block_ids, tile_nnz = children
-        shape, tile, br = aux
-        return cls(block_vals, block_ids, tile_nnz, shape, tile, br)
+        """Rebuild from :meth:`tree_flatten` output."""
+        block_vals, block_ids, tile_nnz, scale, codebook = children
+        shape, tile, br, qmode = aux
+        return cls(block_vals, block_ids, tile_nnz, shape, tile, br,
+                   scale=scale, codebook=codebook, qmode=qmode)
 
     @property
     def bcap(self) -> int:
+        """Stored sub-blocks per tile (trailing block dim)."""
         return self.block_vals.shape[-3]
 
     @property
     def grid(self) -> tuple[int, int]:
+        """``(Kt, Nt)`` tile-grid extents."""
         return self.block_vals.shape[-5], self.block_vals.shape[-4]
 
     @property
     def lead(self) -> tuple[int, ...]:
+        """Leading stack dims (layer groups / experts), ahead of the grid."""
         return tuple(self.block_vals.shape[:-5])
 
     @property
     def dtype(self):
+        """Stored value dtype: fp, int8 codes, or fp8."""
         return self.block_vals.dtype
 
-    def nbytes_compressed(self, value_bits: int = 16, index_bits: int = 16) -> int:
+    def nbytes_compressed(self, value_bits: int | None = None,
+                          index_bits: int = 16) -> int:
+        """Footprint: stored sub-block values + block ids (+ quant side
+        band under a quantized ``qmode``, as in :class:`TiledCSC`)."""
+        side = 0
+        if value_bits is None:
+            ncodes = (self.codebook.shape[-1] if self.codebook is not None
+                      else CODEBOOK_SIZE)
+            value_bits = qvalue_bits(self.qmode, ncodes)
+            if self.scale is not None:
+                side += int(np.prod(self.scale.shape)) * SCALE_BITS // 8
+            if self.codebook is not None:
+                side += int(np.prod(self.codebook.shape)) * SCALE_BITS // 8
         v = int(np.prod(self.block_vals.shape)) * value_bits // 8
         i = int(np.prod(self.block_ids.shape)) * index_bits // 8
-        return v + i
+        return v + i + side
 
     def nbytes_dense(self, value_bits: int = 16) -> int:
+        """Dense-equivalent bytes at ``value_bits`` (lead dims included)."""
         # see TiledCSC.nbytes_dense: the lead dims count on both sides
         kp, np_ = padded_shape(self.shape, self.tile)
         return int(np.prod(self.lead, dtype=np.int64)) * kp * np_ \
             * value_bits // 8
 
+    def dequantize(self) -> "BlockCSR":
+        """The equivalent unquantized operand (cf. ``TiledCSC.dequantize``)."""
+        if self.qmode == "none":
+            return self
+        bvals = _dequant_values(self.block_vals, self.scale, self.codebook,
+                                self.qmode, 3)
+        return BlockCSR(block_vals=bvals, block_ids=self.block_ids,
+                        tile_nnz=self.tile_nnz, shape=self.shape,
+                        tile=self.tile, br=self.br)
+
     def to_dense(self) -> jax.Array:
+        """Differentiable scatter-add decompression to ``(*lead, K, N)``."""
+        if self.qmode != "none":
+            return self.dequantize().to_dense()
         if self.lead:
             bv = self.block_vals.reshape((-1,) + self.block_vals.shape[-5:])
             bi = self.block_ids.reshape((-1,) + self.block_ids.shape[-3:])
@@ -387,8 +663,13 @@ def pack_block_csr(
     tile: tuple[int, int] = (128, 128),
     br: int = 8,
     bcap: int | None = None,
+    qmode: str = "none",
+    ncodes: int = CODEBOOK_SIZE,
 ) -> BlockCSR:
-    """Pack a dense matrix into :class:`BlockCSR` (lossless for bcap=None)."""
+    """Pack a dense matrix into :class:`BlockCSR` (lossless for bcap=None).
+
+    ``qmode`` quantizes ``block_vals`` after packing (:func:`quantize_packed`).
+    """
     bk, bn = tile
     if bk % br:
         raise ValueError(f"tile rows {bk} not divisible by block rows {br}")
@@ -400,14 +681,14 @@ def pack_block_csr(
             bcap = max(observed_block_cap(w, tile, br), 1)
         packed = [pack_block_csr(flat[i], tile, br, bcap)
                   for i in range(flat.shape[0])]
-        return BlockCSR(
+        return quantize_packed(BlockCSR(
             block_vals=jnp.stack([p.block_vals for p in packed]).reshape(
                 lead + packed[0].block_vals.shape),
             block_ids=jnp.stack([p.block_ids for p in packed]).reshape(
                 lead + packed[0].block_ids.shape),
             tile_nnz=jnp.stack([p.tile_nnz for p in packed]).reshape(
                 lead + packed[0].tile_nnz.shape),
-            shape=tuple(w.shape[-2:]), tile=tile, br=br)
+            shape=tuple(w.shape[-2:]), tile=tile, br=br), qmode, ncodes)
     shape = tuple(w.shape)
     w = _pad_to_tiles(w, tile)
     kp, np_ = w.shape
@@ -440,14 +721,14 @@ def pack_block_csr(
     )
     block_vals = jnp.where(valid[:, :, :, None, None], block_vals, 0).astype(w.dtype)
     block_ids = jnp.where(valid, order, -1).astype(jnp.int32)
-    return BlockCSR(
+    return quantize_packed(BlockCSR(
         block_vals=block_vals,
         block_ids=block_ids,
         tile_nnz=tile_nnz,
         shape=shape,
         tile=(bk, bn),
         br=br,
-    )
+    ), qmode, ncodes)
 
 
 # ---------------------------------------------------------------------------
@@ -463,21 +744,26 @@ class Bitmap:
     shape: tuple[int, int]
 
     def tree_flatten(self):
+        """Flatten into (array children, static aux) for jax pytrees."""
         return (self.mask, self.vals), (self.shape,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Rebuild from :meth:`tree_flatten` output."""
         mask, vals = children
         return cls(mask, vals, aux[0])
 
     def nbytes_compressed(self, value_bits: int = 16) -> int:
+        """Bitmap bytes (1 bit/element) plus the stored value list."""
         bits = int(np.prod(self.mask.shape))  # 1 bit/element bitmap
         return bits // 8 + self.vals.shape[0] * value_bits // 8
 
     def nbytes_dense(self, value_bits: int = 16) -> int:
+        """Dense-equivalent bytes at ``value_bits``."""
         return int(np.prod(self.shape)) * value_bits // 8
 
     def to_dense(self) -> jax.Array:
+        """Reconstruct the dense matrix (bitmap-guided scatter)."""
         flat_mask = self.mask.reshape(-1)
         pos = jnp.cumsum(flat_mask) - 1
         gathered = self.vals[jnp.clip(pos, 0, self.vals.shape[0] - 1)]
@@ -486,6 +772,7 @@ class Bitmap:
 
 
 def pack_bitmap(w: jax.Array, cap: int | None = None) -> Bitmap:
+    """Pack into :class:`Bitmap`: 1-bit mask + row-major value list."""
     w = jnp.asarray(w)
     mask = w != 0
     flat = w.reshape(-1)
@@ -524,6 +811,7 @@ def pack_csc(w: np.ndarray) -> dict[str, np.ndarray]:
 
 
 def unpack_csc(csc: dict[str, np.ndarray]) -> np.ndarray:
+    """Reconstruct the dense matrix from a :func:`pack_csc` dict."""
     k, n = (int(x) for x in csc["shape"])
     out = np.zeros((k, n), csc["values"].dtype)
     ptr = csc["col_pointers"]
@@ -535,6 +823,7 @@ def unpack_csc(csc: dict[str, np.ndarray]) -> np.ndarray:
 
 def csc_nbytes(csc: dict[str, np.ndarray], value_bits: int = 16,
                index_bits: int = 8, pointer_bits: int = 32) -> int:
+    """Byte footprint of a pointer-CSC dict at the given bit widths."""
     nnz = csc["values"].shape[0]
     ncols = csc["col_pointers"].shape[0]
     return (nnz * (value_bits + index_bits) + ncols * pointer_bits) // 8

@@ -33,6 +33,8 @@ from typing import Any
 
 __all__ = [
     "PLAN_VERSION",
+    "QMODES",
+    "QVALUE_BITS",
     "PackPlan",
     "ModelPlan",
     "expected_cap",
@@ -50,6 +52,17 @@ PLAN_VERSION = 1
 VALUE_BITS = 16
 TILED_INDEX_BITS = 8
 BLOCK_INDEX_BITS = 16
+
+#: Quantized value-storage modes (the ``qmode`` plan axis; mirrored by the
+#: executable formats in :mod:`repro.core.formats`).
+QMODES = ("none", "int8", "fp8", "codebook")
+#: Paper-accounting bits per stored value slot under each qmode — codebook
+#: slots store only the index into the shared table.
+QVALUE_BITS = {"none": 16, "int8": 8, "fp8": 8, "codebook": 4}
+#: Bits for one per-tile scale or one codebook entry (side band).
+SCALE_BITS = 16
+#: Entries in the codebook's shared-value table (entry 0 reserved for 0.0).
+CODEBOOK_SIZE = 16
 
 
 def _align_slots(cap: int, align: int = 8) -> int:
@@ -121,6 +134,7 @@ class PackPlan:
     cap: int | None = None           # TiledCSC slot capacity
     bcap: int | None = None          # BlockCSR sub-block capacity
     dtype: str = "bfloat16"
+    qmode: str = "none"              # value quantization: none|int8|fp8|codebook
     impl: str = "auto"               # dispatch hint: auto | jnp | pallas
     dispatch_params: dict = dataclasses.field(default_factory=dict)
     spmd: dict | None = None         # SpmdPlan fields (runtime.spmd), or None
@@ -129,6 +143,9 @@ class PackPlan:
     def __post_init__(self):
         if self.mode not in ("dense", "tiled_csc", "block_csr"):
             raise ValueError(f"unknown plan mode {self.mode!r}")
+        if self.qmode not in QMODES:
+            raise ValueError(f"unknown plan qmode {self.qmode!r} "
+                             f"(expected one of {QMODES})")
 
     # -- derived layout facts ------------------------------------------------
     @property
@@ -143,7 +160,8 @@ class PackPlan:
         can observe from the operand alone (no parameter path)."""
         slot = self.cap if self.mode == "tiled_csc" else self.bcap
         return (self.mode, tuple(self.shape), tuple(self.tile),
-                int(slot or 0), self.br if self.mode == "block_csr" else 0)
+                int(slot or 0), self.br if self.mode == "block_csr" else 0,
+                self.qmode)
 
     def _lead_n(self) -> int:
         n = 1
@@ -151,24 +169,36 @@ class PackPlan:
             n *= int(d)
         return n
 
+    def _qside_bytes(self, kt: int, nt: int) -> int:
+        """Per-lead-slice side-band bytes of the qmode (scales / codebook)."""
+        if self.qmode in ("int8", "fp8"):
+            return kt * nt * SCALE_BITS // 8
+        if self.qmode == "codebook":
+            return CODEBOOK_SIZE * SCALE_BITS // 8
+        return 0
+
     def compressed_bytes(self) -> int:
         """Footprint of the packed (or dense) leaf under this plan — same
-        accounting as the formats' ``nbytes_compressed``."""
+        accounting as the formats' ``nbytes_compressed`` (value slots at the
+        qmode's width plus the quantization side band)."""
         k, n = self.shape
         if self.mode == "dense":
             return self._lead_n() * k * n * VALUE_BITS // 8
         kt, nt = self.grid
         bk, bn = self.tile
+        vbits = QVALUE_BITS[self.qmode]
+        side = self._qside_bytes(kt, nt)
         if self.mode == "tiled_csc":
             cap = self.cap if self.cap is not None else tiled_cap(
                 bk, self.density)
             slots = kt * nt * cap * bn
-            return self._lead_n() * slots * (VALUE_BITS + TILED_INDEX_BITS) // 8
+            return self._lead_n() * (
+                slots * (vbits + TILED_INDEX_BITS) // 8 + side)
         bcap = self.bcap if self.bcap is not None else block_bcap(
             bk // self.br, self.density, self.prune_method, self.br * bn)
-        vals = kt * nt * bcap * self.br * bn * VALUE_BITS // 8
+        vals = kt * nt * bcap * self.br * bn * vbits // 8
         ids = kt * nt * bcap * BLOCK_INDEX_BITS // 8
-        return self._lead_n() * (vals + ids)
+        return self._lead_n() * (vals + ids + side)
 
     def dense_bytes(self) -> int:
         """Footprint the same leaf would take stored dense — the baseline
@@ -188,6 +218,8 @@ class PackPlan:
                  f"bcap={self.bcap}")
         if self.lead:
             s += f" lead={tuple(self.lead)}"
+        if self.qmode != "none":
+            s += f" q={self.qmode}"
         if self.impl != "auto":
             s += f" impl={self.impl}"
         if self.dispatch_params:
@@ -209,6 +241,8 @@ class PackPlan:
         """JSON-safe dict, dropping empty fields (keeps plan files small
         and diffable); inverse of :meth:`from_json`."""
         d = dataclasses.asdict(self)
+        if d.get("qmode") == "none":
+            del d["qmode"]  # default; keeps pre-qmode plan files diff-clean
         return {k: v for k, v in d.items() if v not in (None, {}, "", ())
                 or k in ("mode", "shape", "cap", "bcap")}
 

@@ -42,13 +42,17 @@ class SoDConfig:
     br: int = 8                    # BlockCSR sub-block rows
     impl: str = "auto"             # auto | jnp | pallas
     min_dim: int = 128             # matrices smaller than this stay dense
+    qmode: str = "none"            # none | int8 | fp8 | codebook
 
     def __post_init__(self):
         if self.mode not in ("dense", "tiled_csc", "block_csr"):
             raise ValueError(f"unknown SoD mode {self.mode!r}")
+        if self.qmode not in plan_mod.QMODES:
+            raise ValueError(f"unknown SoD qmode {self.qmode!r}")
 
     @property
     def enabled(self) -> bool:
+        """True when a Sparse-on-Dense mode is configured."""
         return self.mode != "dense"
 
 
@@ -91,8 +95,9 @@ def pack_param(w: jax.Array, cfg: SoDConfig, prune: bool = True):
     if prune and cfg.density < 1.0:
         w = prune_weight(w, cfg.density, cfg.prune_method, cfg.tile, cfg.br)
     if cfg.mode == "tiled_csc":
-        return formats.pack_tiled_csc(w, tile=cfg.tile)
-    return formats.pack_block_csr(w, tile=cfg.tile, br=cfg.br)
+        return formats.pack_tiled_csc(w, tile=cfg.tile, qmode=cfg.qmode)
+    return formats.pack_block_csr(w, tile=cfg.tile, br=cfg.br,
+                                  qmode=cfg.qmode)
 
 
 def _layout_key(w) -> tuple:
@@ -100,9 +105,9 @@ def _layout_key(w) -> tuple:
     :meth:`repro.core.plan.PackPlan.layout_key`."""
     if isinstance(w, TiledCSC):
         return ("tiled_csc", tuple(int(s) for s in w.shape),
-                tuple(int(t) for t in w.tile), int(w.cap), 0)
+                tuple(int(t) for t in w.tile), int(w.cap), 0, w.qmode)
     return ("block_csr", tuple(int(s) for s in w.shape),
-            tuple(int(t) for t in w.tile), int(w.bcap), int(w.br))
+            tuple(int(t) for t in w.tile), int(w.bcap), int(w.br), w.qmode)
 
 
 def _plan_spmd(entry: PackPlan):
@@ -259,7 +264,11 @@ def _pack_planned(name: str, leaf, entry: PackPlan, prune: bool):
     else:
         packed = formats.pack_block_csr(w, tile=entry.tile, br=entry.br,
                                         bcap=entry.bcap)
+    # truncation is judged on the unquantized pack: quantization may round
+    # small survivors to code 0, which is lossy-by-design, not capacity loss
     _check_plan_truncation(name, w, packed)
+    if entry.qmode != "none":
+        packed = formats.quantize_packed(packed, entry.qmode)
     return packed
 
 
@@ -293,33 +302,64 @@ def sodify_params(params, cfg: SoDConfig, prune: bool = True,
                     w = _prune_leaf(w, cfg.density, cfg.prune_method,
                                     cfg.tile, cfg.br)
                 if cfg.mode == "tiled_csc":
-                    out.append(formats.pack_tiled_csc(w, tile=cfg.tile))
+                    out.append(formats.pack_tiled_csc(w, tile=cfg.tile,
+                                                      qmode=cfg.qmode))
                 else:
                     out.append(formats.pack_block_csr(w, tile=cfg.tile,
-                                                      br=cfg.br))
+                                                      br=cfg.br,
+                                                      qmode=cfg.qmode))
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def _abstract_tiled(lead, k, n, dtype, tile, cap) -> TiledCSC:
+def _abstract_qside(lead, kt, nt, dtype, qmode):
+    """(value dtype, scale SDS, codebook SDS) for an abstract quantized pack.
+
+    Mirrors the concrete side-band shapes :func:`repro.core.formats.
+    quantize_packed` produces: per-tile f32 scale for int8/fp8, a per-lead
+    shared-value table for codebook mode.
+    """
+    if qmode == "none":
+        return dtype, None, None
+    if qmode == "codebook":
+        book = jax.ShapeDtypeStruct(
+            lead + (formats.CODEBOOK_SIZE,), jnp.float32)
+        return jnp.int8, None, book
+    scale = jax.ShapeDtypeStruct(lead + (kt, nt), jnp.float32)
+    if qmode == "fp8":
+        fp8 = formats.fp8_dtype()
+        if fp8 is None:
+            raise ValueError(
+                "qmode='fp8' needs a jax build with float8_e4m3fn")
+        return fp8, scale, None
+    return jnp.int8, scale, None
+
+
+def _abstract_tiled(lead, k, n, dtype, tile, cap,
+                    qmode: str = "none") -> TiledCSC:
     bk, bn = tile
     kt, nt = -(-k // bk), -(-n // bn)
     idx = jnp.int8 if bk <= 128 else jnp.int32
+    vdt, scale, codebook = _abstract_qside(lead, kt, nt, dtype, qmode)
     return TiledCSC(
-        vals=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), dtype),
+        vals=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), vdt),
         rows=jax.ShapeDtypeStruct(lead + (kt, nt, cap, bn), idx),
-        shape=(k, n), tile=tuple(tile))
+        shape=(k, n), tile=tuple(tile),
+        scale=scale, codebook=codebook, qmode=qmode)
 
 
-def _abstract_block(lead, k, n, dtype, tile, br, bcap) -> BlockCSR:
+def _abstract_block(lead, k, n, dtype, tile, br, bcap,
+                    qmode: str = "none") -> BlockCSR:
     bk, bn = tile
     kt, nt = -(-k // bk), -(-n // bn)
+    vdt, scale, codebook = _abstract_qside(lead, kt, nt, dtype, qmode)
     return BlockCSR(
-        block_vals=jax.ShapeDtypeStruct(lead + (kt, nt, bcap, br, bn), dtype),
+        block_vals=jax.ShapeDtypeStruct(lead + (kt, nt, bcap, br, bn), vdt),
         block_ids=jax.ShapeDtypeStruct(lead + (kt, nt, bcap), jnp.int32),
         tile_nnz=jax.ShapeDtypeStruct(lead + (kt, nt), jnp.int32),
-        shape=(k, n), tile=tuple(tile), br=br)
+        shape=(k, n), tile=tuple(tile), br=br,
+        scale=scale, codebook=codebook, qmode=qmode)
 
 
 def sodify_abstract(params_sds, cfg: SoDConfig,
@@ -350,14 +390,16 @@ def sodify_abstract(params_sds, cfg: SoDConfig,
                 cap = entry.cap if entry.cap is not None else \
                     plan_mod.tiled_cap(entry.tile[0], entry.density)
                 out.append(_abstract_tiled(lead, k, n, leaf.dtype,
-                                           entry.tile, cap))
+                                           entry.tile, cap,
+                                           qmode=entry.qmode))
             else:
                 bcap = entry.bcap if entry.bcap is not None else \
                     plan_mod.block_bcap(
                         entry.tile[0] // entry.br, entry.density,
                         entry.prune_method, entry.br * entry.tile[1])
                 out.append(_abstract_block(lead, k, n, leaf.dtype,
-                                           entry.tile, entry.br, bcap))
+                                           entry.tile, entry.br, bcap,
+                                           qmode=entry.qmode))
             continue
         if not (_packable(name, leaf) and min(leaf.shape[-2:]) >= cfg.min_dim):
             out.append(leaf)
@@ -366,12 +408,13 @@ def sodify_abstract(params_sds, cfg: SoDConfig,
         k, n = leaf.shape[-2:]
         if cfg.mode == "tiled_csc":
             cap = plan_mod.tiled_cap(bk, cfg.density)
-            out.append(_abstract_tiled(lead, k, n, leaf.dtype, cfg.tile, cap))
+            out.append(_abstract_tiled(lead, k, n, leaf.dtype, cfg.tile, cap,
+                                       qmode=cfg.qmode))
         else:
             bcap = plan_mod.block_bcap(bk // cfg.br, cfg.density,
                                        cfg.prune_method, cfg.br * bn)
             out.append(_abstract_block(lead, k, n, leaf.dtype, cfg.tile,
-                                       cfg.br, bcap))
+                                       cfg.br, bcap, qmode=cfg.qmode))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -387,14 +430,20 @@ def _flatten_named(tree):
     return named, treedef
 
 
-def weight_bytes(w, value_bits: int = 16, index_bits: int = 8) -> int:
-    """Bytes this operand occupies in memory (compressed when packed)."""
+def weight_bytes(w, value_bits: int | None = None,
+                 index_bits: int = 8) -> int:
+    """Bytes this operand occupies in memory (compressed when packed).
+
+    ``value_bits=None`` (default) counts packed values at the container's
+    own quantized width (plus scale/codebook side bands); an explicit
+    ``value_bits`` overrides.  Dense arrays are sized at 16-bit by default.
+    """
     if isinstance(w, TiledCSC):
         return w.nbytes_compressed(value_bits, index_bits)
     if isinstance(w, BlockCSR):
         return w.nbytes_compressed(value_bits)
     if hasattr(w, "size"):
-        return int(w.size) * value_bits // 8
+        return int(w.size) * (16 if value_bits is None else value_bits) // 8
     return 0
 
 

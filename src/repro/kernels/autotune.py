@@ -42,6 +42,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.plan import QVALUE_BITS
 from repro.kernels import registry
 from repro.kernels.registry import KernelImpl, ProblemKey
 
@@ -91,6 +92,11 @@ def key_str(key: ProblemKey) -> str:
     bk, bn = key.tile
     s = (f"{key.fmt}|m={key.m}|k={key.k}|n={key.n}|d={d}"
          f"|t={bk}x{bn}|cap={key.cap}|{key.dtype}|{key.backend}")
+    if key.qmode != "none":
+        # appended only when quantized: pre-qmode cache entries stay valid,
+        # and int8 codes vs codebook indices (same int8 dtype, different
+        # dequant inner loop) cannot collide on one entry
+        s += f"|q={key.qmode}"
     if key.mesh:
         s += f"|mesh={key.mesh}"
     return s
@@ -227,14 +233,20 @@ def predict_us(key: ProblemKey, impl: KernelImpl, params: dict) -> float:
         return max(flops / peak,
                    (x_bytes + dense_w_bytes + out_bytes) / bw) * 1e6
 
-    # pallas impls: compressed traffic
-    w_bytes = key.density * dense_w_bytes * 1.5
+    # pallas impls: compressed traffic.  Value bytes per slot follow the
+    # qmode (16-bit unquantized, 8-bit int8/fp8, 4-bit codebook index) over
+    # a 1-byte row index and 2-byte dense elements — 1.5·density unquantized,
+    # less when the values are stored quantized.
+    vbytes = QVALUE_BITS.get(key.qmode, 16) / 8.0
+    w_bytes = key.density * dense_w_bytes * ((vbytes + 1.0) / 2.0)
     bm = params.get("bm", 128)
     mt = max(-(-m // max(bm, 1)), 1)
     bk, bn = key.tile
     decomp_elems = key.kt * (n / bn) * key.cap * bn   # slots touched once
     slot_chunk = max(params.get("slot_chunk", 8), 1)
     decomp_cost = decomp_elems * (1.0 + 8.0 / slot_chunk)  # loop overhead
+    if key.qmode == "codebook":
+        decomp_cost *= 2.0   # compare-select over the shared-value table
     k_slab = params.get("k_slab", 0)
     if 0 < k_slab < key.kt:
         decomp_cost *= mt                    # re-decompress per M-block
@@ -370,27 +382,34 @@ def warmup_params(
         params, is_leaf=lambda l: isinstance(l, (TiledCSC, BlockCSR)))
     seen: dict[tuple, object] = {}
     for leaf in leaves:
+        def _slice0(a, tail):
+            # first per-matrix slice of a stacked side array (None stays None)
+            return None if a is None else a.reshape((-1,) + a.shape[-tail:])[0]
+
         if isinstance(leaf, TiledCSC):
             if leaf.lead:
                 # Stacked (scan/expert) layouts: the model's scan body
                 # slices lead dims off before sod.apply (lax.scan slicing +
                 # tree_map(t[j])), so dispatch sees the per-layer slice —
                 # tune that slice and the keys line up exactly.
-                flat_v = leaf.vals.reshape((-1,) + leaf.vals.shape[-4:])
-                flat_r = leaf.rows.reshape((-1,) + leaf.rows.shape[-4:])
-                leaf = TiledCSC(flat_v[0], flat_r[0], leaf.shape, leaf.tile)
+                leaf = TiledCSC(_slice0(leaf.vals, 4), _slice0(leaf.rows, 4),
+                                leaf.shape, leaf.tile,
+                                scale=_slice0(leaf.scale, 2),
+                                codebook=_slice0(leaf.codebook, 1),
+                                qmode=leaf.qmode)
             sig = ("tiled_csc", leaf.shape, leaf.cap, str(leaf.dtype),
-                   leaf.tile)
+                   leaf.tile, leaf.qmode)
         elif isinstance(leaf, BlockCSR):
             if leaf.lead:
-                bv = leaf.block_vals.reshape(
-                    (-1,) + leaf.block_vals.shape[-5:])
-                bi = leaf.block_ids.reshape((-1,) + leaf.block_ids.shape[-3:])
-                tn = leaf.tile_nnz.reshape((-1,) + leaf.tile_nnz.shape[-2:])
-                leaf = BlockCSR(bv[0], bi[0], tn[0], leaf.shape, leaf.tile,
-                                leaf.br)
+                leaf = BlockCSR(_slice0(leaf.block_vals, 5),
+                                _slice0(leaf.block_ids, 3),
+                                _slice0(leaf.tile_nnz, 2),
+                                leaf.shape, leaf.tile, leaf.br,
+                                scale=_slice0(leaf.scale, 2),
+                                codebook=_slice0(leaf.codebook, 1),
+                                qmode=leaf.qmode)
             sig = ("block_csr", leaf.shape, leaf.bcap, str(leaf.dtype),
-                   leaf.tile, leaf.br)
+                   leaf.tile, leaf.br, leaf.qmode)
         else:
             continue
         seen.setdefault(sig, leaf)

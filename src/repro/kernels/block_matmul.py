@@ -31,15 +31,15 @@ def _block_matmul_kernel(
     ids_ref,     # SMEM (Kt, Nt, bcap) int32, -1 = padding
     x_ref,       # (bm, bk)
     bvals_ref,   # (1, 1, bcap, br, bn)
-    o_ref,       # (bm, bn)
-    slab_ref,    # (Kt, bk, bn) scratch
-    acc_ref,     # (bm, bn) f32 scratch
-    *,
+    *refs,       # [scale_ref (1,1) | cb_ref (1,ncodes)], o_ref, slab_ref, acc_ref
     kt_total: int,
     bk: int,
     br: int,
     bcap: int,
+    qmode: str = "none",
 ):
+    o_ref, slab_ref, acc_ref = refs[-3:]
+    q_ref = refs[0] if qmode != "none" else None
     n = pl.program_id(0)
     m = pl.program_id(1)
     k = pl.program_id(2)
@@ -47,18 +47,35 @@ def _block_matmul_kernel(
 
     @pl.when(jnp.logical_and(m == 0, nnz > 0))
     def _decompress():
+        bn_ = bvals_ref.shape[-1]
+        cb = q_ref[...] if qmode == "codebook" else None
+        # Quantized blocks accumulate in f32 (codes dequantize per block;
+        # the shared per-tile scale multiplies the finished tile once).
+        tile_dtype = bvals_ref.dtype if qmode == "none" else jnp.float32
+
         def body(s, tile):
             bid = ids_ref[k, n, s]
             # Padding (bid == -1) contributes zeros added at offset 0 — a
-            # no-op because real block ids are unique and values are 0.
+            # no-op because real block ids are unique and values are 0
+            # (codebook entry 0 is pinned to 0.0 for the same reason).
             off = jnp.maximum(bid, 0) * br
             blk = bvals_ref[0, 0, s]
+            if qmode == "codebook":
+                idx = blk.astype(jnp.int32)
+                deq = jnp.zeros(blk.shape, jnp.float32)
+                for code in range(cb.shape[-1]):
+                    deq += jnp.where(idx == code, cb[0, code], 0.0)
+                blk = deq
+            elif qmode != "none":
+                blk = blk.astype(jnp.float32)
             cur = jax.lax.dynamic_slice(tile, (off, 0), (br, tile.shape[1]))
             return jax.lax.dynamic_update_slice(tile, cur + blk, (off, 0))
 
         tile = jax.lax.fori_loop(
-            0, bcap, body, jnp.zeros((bk, bvals_ref.shape[-1]), bvals_ref.dtype)
+            0, bcap, body, jnp.zeros((bk, bn_), tile_dtype)
         )
+        if qmode in ("int8", "fp8"):
+            tile = tile * q_ref[0, 0]
         slab_ref[k] = tile.astype(slab_ref.dtype)
 
     @pl.when(k == 0)
@@ -115,8 +132,20 @@ def block_matmul_pallas(
         transcendentals=0,
     )
 
+    qmode = packed.qmode
+    extra_in = []
+    extra_specs = []
+    if qmode in ("int8", "fp8"):
+        extra_in.append(packed.scale)
+        extra_specs.append(pl.BlockSpec((1, 1), lambda n, m, k, *_: (k, n)))
+    elif qmode == "codebook":
+        cb = packed.codebook.reshape(1, -1)
+        extra_in.append(cb)
+        extra_specs.append(pl.BlockSpec(cb.shape, lambda n, m, k, *_: (0, 0)))
+
     kernel = functools.partial(
-        _block_matmul_kernel, kt_total=kt, bk=bk, br=br, bcap=bcap
+        _block_matmul_kernel, kt_total=kt, bk=bk, br=br, bcap=bcap,
+        qmode=qmode,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -126,6 +155,7 @@ def block_matmul_pallas(
             pl.BlockSpec(
                 (1, 1, bcap, br, bn), lambda n, m, k, *_: (k, n, 0, 0, 0)
             ),
+            *extra_specs,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda n, m, k, *_: (m, n)),
         scratch_shapes=[
@@ -142,4 +172,4 @@ def block_matmul_pallas(
         ),
         cost_estimate=cost,
         interpret=interpret,
-    )(packed.tile_nnz, packed.block_ids, x, packed.block_vals)
+    )(packed.tile_nnz, packed.block_ids, x, packed.block_vals, *extra_in)

@@ -22,10 +22,17 @@ from repro.kernels.sod_matmul import _decompress_tile
 __all__ = ["decompress_pallas"]
 
 
-def _decompress_kernel(vals_ref, rows_ref, o_ref, *, bk, slot_chunk):
+def _decompress_kernel(vals_ref, rows_ref, *refs, bk, slot_chunk, qmode):
+    """One (bk, bn) tile per grid step; dequant fused as in the matmul."""
+    o_ref = refs[-1]
+    q_ref = refs[0] if qmode != "none" else None
     vals = vals_ref[0, 0]
     rows = rows_ref[0, 0].astype(jnp.int32)
-    o_ref[...] = _decompress_tile(vals, rows, bk, slot_chunk).astype(o_ref.dtype)
+    cb = q_ref[...] if qmode == "codebook" else None
+    tile = _decompress_tile(vals, rows, bk, slot_chunk, codebook=cb)
+    if qmode in ("int8", "fp8"):
+        tile = tile * q_ref[0, 0]
+    o_ref[...] = tile.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("slot_chunk", "interpret", "out_dtype"))
@@ -36,8 +43,14 @@ def decompress_pallas(
     interpret: bool = True,
     out_dtype=None,
 ):
-    """Dense (Kp, Np) matrix from a TiledCSC operand (padded shape)."""
-    out_dtype = out_dtype or packed.vals.dtype
+    """Dense (Kp, Np) matrix from a TiledCSC operand (padded shape).
+
+    Quantized operands dequantize in-kernel; their default output dtype is
+    float32 (the stored value dtype is the code, not a value).
+    """
+    qmode = packed.qmode
+    out_dtype = out_dtype or (
+        jnp.float32 if qmode != "none" else packed.vals.dtype)
     kt, nt = packed.grid
     bk, bn = packed.tile
     cap = packed.cap
@@ -53,13 +66,24 @@ def decompress_pallas(
         ),
         transcendentals=0,
     )
-    kernel = functools.partial(_decompress_kernel, bk=bk, slot_chunk=slot_chunk)
+    extra_in = []
+    extra_specs = []
+    if qmode in ("int8", "fp8"):
+        extra_in.append(packed.scale)
+        extra_specs.append(pl.BlockSpec((1, 1), lambda k, n: (k, n)))
+    elif qmode == "codebook":
+        cb = packed.codebook.reshape(1, -1)
+        extra_in.append(cb)
+        extra_specs.append(pl.BlockSpec(cb.shape, lambda k, n: (0, 0)))
+    kernel = functools.partial(_decompress_kernel, bk=bk,
+                               slot_chunk=slot_chunk, qmode=qmode)
     out = pl.pallas_call(
         kernel,
         grid=(kt, nt),
         in_specs=[
             pl.BlockSpec((1, 1, cap, bn), lambda k, n: (k, n, 0, 0)),
             pl.BlockSpec((1, 1, cap, bn), lambda k, n: (k, n, 0, 0)),
+            *extra_specs,
         ],
         out_specs=pl.BlockSpec((bk, bn), lambda k, n: (k, n)),
         out_shape=jax.ShapeDtypeStruct((kt * bk, nt * bn), out_dtype),
@@ -68,5 +92,5 @@ def decompress_pallas(
         ),
         cost_estimate=cost,
         interpret=interpret,
-    )(packed.vals, packed.rows)
+    )(packed.vals, packed.rows, *extra_in)
     return out

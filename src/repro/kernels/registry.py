@@ -34,7 +34,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BlockCSR, TiledCSC
+from repro.core.formats import BlockCSR, TiledCSC, fp8_dtype
 
 __all__ = [
     "KernelImpl",
@@ -80,6 +80,10 @@ class ProblemKey:
     tile: tuple[int, int] = (128, 128)
     cap: int = 0             # TiledCSC slot capacity / BlockCSR bcap*br
     kt: int = 1              # K-tile grid size
+    # value quantization mode of the packed operand (none|int8|fp8|codebook).
+    # Distinct from dtype: int8 codes and codebook indices share the int8
+    # storage dtype but need different dequant work in the kernel.
+    qmode: str = "none"
 
     # Non-empty when dispatching *inside* the SPMD execution layer
     # (repro.runtime.spmd): a signature like "data=4,model=2|dp" naming the
@@ -118,6 +122,10 @@ class KernelImpl:
     # shard_map wrapper ("data" = M-sharding, "model" = N/K tensor
     # parallelism).  Empty = natively partitionable, no wrapper needed.
     mesh_axes: tuple[str, ...] = ()
+    # value-quantization modes this impl can dequantize (capability
+    # predicate for the qmode axis; fp8 is additionally gated on the jax
+    # build actually providing an fp8 dtype — see supports()).
+    qmodes: tuple[str, ...] = ("none", "int8", "fp8", "codebook")
 
     @property
     def requires_shard_map(self) -> bool:
@@ -125,8 +133,15 @@ class KernelImpl:
         return self.spmd_partitionable and bool(self.mesh_axes)
 
     def supports(self, key: ProblemKey) -> bool:
-        """Whether this impl can run the problem (format and backend)."""
-        return key.fmt in self.formats and key.backend in self.backends
+        """Whether this impl can run the problem (format, backend, and the
+        operand's value-quantization mode)."""
+        if key.fmt not in self.formats or key.backend not in self.backends:
+            return False
+        if key.qmode not in self.qmodes:
+            return False
+        if key.qmode == "fp8" and fp8_dtype() is None:
+            return False
+        return True
 
     def canonical_params(self, key: ProblemKey, params: dict, m: int) -> dict:
         """Params as the runner will actually execute them for concrete
@@ -254,7 +269,8 @@ def problem_key(w, m: int, backend: str | None = None,
     return ProblemKey(
         fmt, _m_bucket(m), int(k), int(n), static_density(w),
         str(jnp.dtype(w.dtype)), backend,
-        tile=tuple(w.tile), cap=int(cap), kt=int(kt), mesh=mesh,
+        tile=tuple(w.tile), cap=int(cap), kt=int(kt),
+        qmode=getattr(w, "qmode", "none"), mesh=mesh,
     )
 
 

@@ -31,21 +31,43 @@ from repro.core.formats import TiledCSC
 __all__ = ["sod_matmul_pallas"]
 
 
+def _dequant_chunk(v: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Codebook dequant of one slot chunk: unrolled compare-select over the
+    (small, static) shared-value table — same VPU idiom as the row-index
+    compare-accumulate, no gather needed."""
+    idx = v.astype(jnp.int32)
+    out = jnp.zeros(v.shape, jnp.float32)
+    for code in range(codebook.shape[-1]):
+        out += jnp.where(idx == code, codebook[0, code], 0.0)
+    return out
+
+
 def _decompress_tile(
     vals: jax.Array,  # (cap, bn)
     rows: jax.Array,  # (cap, bn) int32, -1 = padding
     bk: int,
     slot_chunk: int,
+    codebook: jax.Array | None = None,  # (1, ncodes) for qmode='codebook'
 ) -> jax.Array:
-    """Compare-accumulate decompression of one (bk, bn) tile (VPU loop)."""
+    """Compare-accumulate decompression of one (bk, bn) tile (VPU loop).
+
+    Accumulates in float32 — for quantized operands ``vals`` holds the raw
+    codes; codebook indices dequantize per chunk here, while int8/fp8 codes
+    sum raw and the caller applies the per-tile scale once to the finished
+    tile (``Σ qᵢ·s = s·Σ qᵢ``), keeping dequant off the inner loop.
+    """
     cap, bn = vals.shape
     iota = jax.lax.broadcasted_iota(jnp.int32, (bk, 1, bn), 0)
 
     def body(c, acc):
         r = jax.lax.dynamic_slice(rows, (c * slot_chunk, 0), (slot_chunk, bn))
         v = jax.lax.dynamic_slice(vals, (c * slot_chunk, 0), (slot_chunk, bn))
+        if codebook is None:
+            vf = v.astype(jnp.float32)
+        else:
+            vf = _dequant_chunk(v, codebook)
         hit = iota == r[None, :, :]
-        contrib = jnp.where(hit, v[None, :, :].astype(jnp.float32), 0.0)
+        contrib = jnp.where(hit, vf[None, :, :], 0.0)
         return acc + jnp.sum(contrib, axis=1)
 
     n_chunks = cap // slot_chunk
@@ -59,15 +81,15 @@ def _sod_matmul_kernel(
     x_ref,      # (bm, bk)
     vals_ref,   # (1, 1, cap, bn)
     rows_ref,   # (1, 1, cap, bn)
-    o_ref,      # (bm, bn)
-    slab_ref,   # (slab_len, bk, bn) VMEM scratch — decompressed K-slab
-    acc_ref,    # (bm, bn) f32 VMEM scratch
-    *,
+    *refs,      # [scale_ref (1,1) | cb_ref (1,ncodes)], o_ref, slab_ref, acc_ref
     kt_total: int,
     bk: int,
     slot_chunk: int,
     slab_len: int,
+    qmode: str = "none",
 ):
+    o_ref, slab_ref, acc_ref = refs[-3:]
+    q_ref = refs[0] if qmode != "none" else None
     m = pl.program_id(1)
     k = pl.program_id(2)
     resident = slab_len >= kt_total
@@ -77,12 +99,16 @@ def _sod_matmul_kernel(
     # it across the whole M sweep (the paper's weight-stationary reuse).
     # Non-resident slab (slab_len < Kt — the VMEM-constrained k_slab tuning
     # point): re-decompress on every visit, trading VPU work for VMEM.
+    # Dequantization fuses here too — the scale rides the same residency,
+    # so quantized operands cost zero extra HBM round trips.
     def _decompress():
         vals = vals_ref[0, 0]
         rows = rows_ref[0, 0].astype(jnp.int32)
-        slab_ref[slot] = _decompress_tile(vals, rows, bk, slot_chunk).astype(
-            slab_ref.dtype
-        )
+        cb = q_ref[...] if qmode == "codebook" else None
+        tile = _decompress_tile(vals, rows, bk, slot_chunk, codebook=cb)
+        if qmode in ("int8", "fp8"):
+            tile = tile * q_ref[0, 0]
+        slab_ref[slot] = tile.astype(slab_ref.dtype)
 
     if resident:
         pl.when(m == 0)(_decompress)
@@ -141,7 +167,8 @@ def sod_matmul_pallas(
         raise ValueError(f"cap={cap} not a multiple of slot_chunk={slot_chunk}")
     mt = m_dim // bm
 
-    # Compressed-traffic cost estimate: this is what the roofline reads.
+    # Compressed-traffic cost estimate: this is what the roofline reads —
+    # quantized operands stream fewer value bytes (itemsize shrinks).
     idx_bytes = packed.rows.dtype.itemsize
     val_bytes = packed.vals.dtype.itemsize
     cost = pl.CostEstimate(
@@ -154,9 +181,24 @@ def sod_matmul_pallas(
         transcendentals=0,
     )
 
+    # Quantized operands append one extra input: the (Kt, Nt) per-tile
+    # scale (tile-indexed alongside vals) or the shared-value codebook
+    # (same (1, ncodes) block at every grid step).
+    qmode = packed.qmode
+    extra_in = []
+    extra_specs = []
+    if qmode in ("int8", "fp8"):
+        extra_in.append(packed.scale)
+        extra_specs.append(pl.BlockSpec((1, 1), lambda n, m, k: (k, n)))
+    elif qmode == "codebook":
+        cb = packed.codebook.reshape(1, -1)
+        extra_in.append(cb)
+        extra_specs.append(
+            pl.BlockSpec(cb.shape, lambda n, m, k: (0, 0)))
+
     kernel = functools.partial(
         _sod_matmul_kernel, kt_total=kt, bk=bk, slot_chunk=slot_chunk,
-        slab_len=slab_len,
+        slab_len=slab_len, qmode=qmode,
     )
     return pl.pallas_call(
         kernel,
@@ -165,6 +207,7 @@ def sod_matmul_pallas(
             pl.BlockSpec((bm, bk), lambda n, m, k: (m, k)),
             pl.BlockSpec((1, 1, cap, bn), lambda n, m, k: (k, n, 0, 0)),
             pl.BlockSpec((1, 1, cap, bn), lambda n, m, k: (k, n, 0, 0)),
+            *extra_specs,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda n, m, k: (m, n)),
         out_shape=jax.ShapeDtypeStruct((m_dim, nt * bn), out_dtype),
@@ -177,4 +220,4 @@ def sod_matmul_pallas(
         ),
         cost_estimate=cost,
         interpret=interpret,
-    )(x, packed.vals, packed.rows)
+    )(x, packed.vals, packed.rows, *extra_in)

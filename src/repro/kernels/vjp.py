@@ -25,9 +25,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BlockCSR, TiledCSC
+from repro.core.formats import BlockCSR, TiledCSC, _dequant_values
 
 __all__ = ["fused_matmul", "block_matmul", "pick_bm"]
+
+
+def _pull_quant(w_vals, scale, codebook, qmode, nval_dims, gdq):
+    """Cotangents of (vals, scale, codebook) given the cotangent of the
+    *dequantized* slot values.
+
+    Pulls ``gdq`` back through :func:`_dequant_values` with ``jax.vjp`` so
+    the quantized-weight gradient story is definitionally the same as
+    differentiating the jnp oracle's ``to_dense``: int codes get ``float0``,
+    fp8 codes get fp8 cotangents scaled by the tile scale, and scale /
+    codebook accumulate their chain-rule sums.
+    """
+    _, pull = jax.vjp(
+        lambda v, s, c: _dequant_values(v, s, c, qmode, nval_dims),
+        w_vals, scale, codebook)
+    return pull(gdq.astype(jnp.float32))
 
 
 def pick_bm(m: int, requested: int) -> int:
@@ -86,11 +102,18 @@ def fused_matmul(bm: int, slot_chunk: int, k_slab: int, interpret: bool,
                      ).astype(x2.dtype)
         tiles = _grad_w_tiles(x2, g, w.shape, w.tile, w.grid)
         rows = w.rows.astype(jnp.int32)
-        gvals = jnp.take_along_axis(tiles, jnp.clip(rows, 0, bk - 1), axis=2)
-        gvals = jnp.where(rows >= 0, gvals, 0).astype(w.vals.dtype)
+        gdq = jnp.take_along_axis(tiles, jnp.clip(rows, 0, bk - 1), axis=2)
+        gdq = jnp.where(rows >= 0, gdq, 0)
+        if w.qmode == "none":
+            gvals = gdq.astype(w.vals.dtype)
+            gscale = gcodebook = None
+        else:
+            gvals, gscale, gcodebook = _pull_quant(
+                w.vals, w.scale, w.codebook, w.qmode, 2, gdq)
         grows = np.zeros(w.rows.shape, jax.dtypes.float0)
         return gx, TiledCSC(vals=gvals, rows=grows, shape=w.shape,
-                            tile=w.tile)
+                            tile=w.tile, scale=gscale, codebook=gcodebook,
+                            qmode=w.qmode)
 
     f.defvjp(fwd, bwd)
     return f
@@ -130,15 +153,21 @@ def block_matmul(bm: int, interpret: bool, out_dtype: str | None):
         tiles5 = tiles.reshape(kt, nt, nb, br, bn)
         ids = w.block_ids
         idx = jnp.clip(ids, 0, nb - 1)[:, :, :, None, None]
-        gblocks = jnp.take_along_axis(
+        gdq = jnp.take_along_axis(
             tiles5, jnp.broadcast_to(idx, ids.shape + (br, bn)), axis=2)
-        gblocks = jnp.where((ids >= 0)[:, :, :, None, None], gblocks, 0
-                            ).astype(w.block_vals.dtype)
+        gdq = jnp.where((ids >= 0)[:, :, :, None, None], gdq, 0)
+        if w.qmode == "none":
+            gblocks = gdq.astype(w.block_vals.dtype)
+            gscale = gcodebook = None
+        else:
+            gblocks, gscale, gcodebook = _pull_quant(
+                w.block_vals, w.scale, w.codebook, w.qmode, 3, gdq)
         gids = np.zeros(ids.shape, jax.dtypes.float0)
         gnnz = np.zeros(w.tile_nnz.shape, jax.dtypes.float0)
         return gx, BlockCSR(block_vals=gblocks, block_ids=gids,
                             tile_nnz=gnnz, shape=w.shape, tile=w.tile,
-                            br=w.br)
+                            br=w.br, scale=gscale, codebook=gcodebook,
+                            qmode=w.qmode)
 
     f.defvjp(fwd, bwd)
     return f

@@ -121,6 +121,13 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sod", choices=("tiled_csc", "block_csr"), default=None)
     ap.add_argument("--density", type=float, default=0.3)
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "int8", "fp8", "codebook", "auto"),
+                    help="packed value quantization: int8/fp8 store "
+                         "per-tile-scaled codes, codebook an EIE-style "
+                         "shared-value table + 4-bit indices; 'auto' lets "
+                         "the planner pick per layer under its accuracy "
+                         "drift budget (requires --plan auto)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--engine", action="store_true",
                     help="continuous-batching engine mode: replay a "
@@ -184,9 +191,15 @@ def main(argv=None):
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg)
+    if args.quantize != "none" and not args.sod:
+        ap.error("--quantize requires Sparse-on-Dense packing "
+                 "(pass --sod tiled_csc|block_csr)")
+    if args.quantize == "auto" and args.plan != "auto":
+        ap.error("--quantize auto needs the planner (pass --plan auto)")
     if args.sod:
-        cfg = cfg.with_(sod=SoDConfig(mode=args.sod, density=args.density,
-                                      min_dim=64))
+        cfg = cfg.with_(sod=SoDConfig(
+            mode=args.sod, density=args.density, min_dim=64,
+            qmode=args.quantize if args.quantize != "auto" else "none"))
     model = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -220,9 +233,10 @@ def main(argv=None):
         # must come from the same cache file dispatch will read
         cache = autotune.install_cache(args.tuning_cache)
         if cfg.sod.enabled:
-            plan = planner.load_or_build(args.plan, params, cfg.sod,
-                                         cfg=cfg, cache=cache,
-                                         m_values=m_values)
+            plan = planner.load_or_build(
+                args.plan, params, cfg.sod, cfg=cfg, cache=cache,
+                m_values=m_values,
+                qmode="auto" if args.quantize == "auto" else None)
         if args.spec_decode:
             # draft packs the RAW weights — must happen before the target
             # tier's sodify_params prunes them in place below

@@ -40,6 +40,13 @@ def main(argv=None):
     ap.add_argument("--warmup", type=int, default=20)
     ap.add_argument("--sod", choices=("tiled_csc", "block_csr"), default=None)
     ap.add_argument("--density", type=float, default=0.3)
+    ap.add_argument("--quantize", default="none",
+                    choices=("none", "int8", "fp8", "codebook", "auto"),
+                    help="packed value quantization: int8/fp8 store "
+                         "per-tile-scaled codes, codebook an EIE-style "
+                         "shared-value table + 4-bit indices; 'auto' lets "
+                         "the planner pick per layer under its accuracy "
+                         "drift budget (requires --plan auto)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -63,9 +70,15 @@ def main(argv=None):
     cfg = configs.get_config(args.arch)
     if args.reduced:
         cfg = configs.reduced(cfg)
+    if args.quantize != "none" and not args.sod:
+        ap.error("--quantize requires Sparse-on-Dense packing "
+                 "(pass --sod tiled_csc|block_csr)")
+    if args.quantize == "auto" and args.plan != "auto":
+        ap.error("--quantize auto needs the planner (pass --plan auto)")
     if args.sod:
-        cfg = cfg.with_(sod=SoDConfig(mode=args.sod, density=args.density,
-                                      min_dim=64))
+        cfg = cfg.with_(sod=SoDConfig(
+            mode=args.sod, density=args.density, min_dim=64,
+            qmode=args.quantize if args.quantize != "auto" else "none"))
     model = LM(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = model.init(key)
@@ -80,9 +93,10 @@ def main(argv=None):
         # install the cache BEFORE planning: the planner's dispatch hints
         # must come from the same cache file dispatch will read
         cache = autotune.install_cache(args.tuning_cache)
-        plan = planner.load_or_build(args.plan, params, cfg.sod, cfg=cfg,
-                                     cache=cache,
-                                     m_values=(args.batch * args.seq,))
+        plan = planner.load_or_build(
+            args.plan, params, cfg.sod, cfg=cfg, cache=cache,
+            m_values=(args.batch * args.seq,),
+            qmode="auto" if args.quantize == "auto" else None)
         if plan is not None:
             n_dense = sum(e.mode == "dense" for e in plan.entries.values())
             print(f"pack plan: {len(plan)} layers "

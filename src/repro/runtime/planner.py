@@ -45,7 +45,8 @@ from repro.core.sod import SoDConfig
 from repro.kernels import registry
 
 __all__ = ["build_plan", "build_draft_plan", "choose_draft_density",
-           "warmup_plan", "load_or_build", "DRAFT_DENSITY_LADDER"]
+           "warmup_plan", "load_or_build", "DRAFT_DENSITY_LADDER",
+           "NOMINAL_QDRIFT"]
 
 
 def _is_abstract(leaf) -> bool:
@@ -102,8 +103,81 @@ def _abstract_operand(e: PackPlan, dtype):
     can never drift from the dry-run's abstract shapes."""
     k, n = e.shape
     if e.mode == "tiled_csc":
-        return sod._abstract_tiled((), k, n, dtype, e.tile, e.cap)
-    return sod._abstract_block((), k, n, dtype, e.tile, e.br, e.bcap)
+        return sod._abstract_tiled((), k, n, dtype, e.tile, e.cap,
+                                   qmode=e.qmode)
+    return sod._abstract_block((), k, n, dtype, e.tile, e.br, e.bcap,
+                               qmode=e.qmode)
+
+
+# Nominal relative-RMS round-trip drift per quantization mode, used when the
+# planner only has abstract shapes (no weight values to measure).  Calibrated
+# on gaussian magnitude-pruned weights; a measured pass always wins when the
+# weights are concrete.
+NOMINAL_QDRIFT = {"none": 0.0, "int8": 0.005, "fp8": 0.03, "codebook": 0.1}
+
+# auto-mode search order: ascending stored bits (codebook 4 < int8/fp8 8 <
+# none 16); int8 before fp8 because it drifts less at the same width
+_QMODE_ORDER = ("codebook", "int8", "fp8", "none")
+
+
+def _measured_qdrift(pruned2d, e: PackPlan) -> dict[str, float]:
+    """Relative-RMS round-trip drift of each candidate qmode on one
+    concretely pruned 2-D weight, packed at the entry's exact layout."""
+    if e.mode == "tiled_csc":
+        packed = formats.pack_tiled_csc(pruned2d, tile=e.tile, cap=e.cap)
+    else:
+        packed = formats.pack_block_csr(pruned2d, tile=e.tile, br=e.br,
+                                        bcap=e.bcap)
+    base = packed.to_dense()
+    bnorm = float(jnp.linalg.norm(base)) or 1.0
+    out = {"none": 0.0}
+    for q in _QMODE_ORDER:
+        if q == "none" or (q == "fp8" and formats.fp8_dtype() is None):
+            continue
+        dq = formats.quantize_packed(packed, q).to_dense()
+        out[q] = float(jnp.linalg.norm(dq - base)) / bnorm
+    return out
+
+
+def _select_qmode(e: PackPlan, leaf, requested: str, drift_budget: float,
+                  sod_cfg: SoDConfig, prune: bool) -> PackPlan:
+    """Resolve a plan entry's quantization mode.
+
+    An explicit mode is taken as-is (fp8 raises early when the jax build
+    lacks ``float8_e4m3fn``).  ``"auto"`` walks candidate modes from
+    smallest stored width up and keeps the first whose round-trip drift
+    fits ``drift_budget`` — measured on the actual pruned weights when
+    concrete, :data:`NOMINAL_QDRIFT` otherwise.  The chosen drift is
+    recorded in the entry's ``note`` so plan JSON explains the choice.
+    """
+    if requested == "none":
+        return e
+    if requested != "auto":
+        if requested == "fp8" and formats.fp8_dtype() is None:
+            raise ValueError(
+                "qmode='fp8' needs a jax build with float8_e4m3fn")
+        return dataclasses.replace(e, qmode=requested)
+    if _is_abstract(leaf):
+        drifts = {q: NOMINAL_QDRIFT[q] for q in _QMODE_ORDER
+                  if q == "none" or not (q == "fp8"
+                                         and formats.fp8_dtype() is None)}
+        tag = "nominal"
+    else:
+        w2 = jnp.asarray(leaf)
+        if w2.ndim > 2:
+            w2 = w2.reshape((-1,) + w2.shape[-2:])[0]
+        if prune and sod_cfg.density < 1.0:
+            w2 = sod.prune_weight(w2, sod_cfg.density, e.prune_method,
+                                  e.tile, e.br)
+        drifts = _measured_qdrift(w2, e)
+        tag = "measured"
+    for q in _QMODE_ORDER:
+        if q in drifts and drifts[q] <= drift_budget:
+            if q == "none":
+                return e
+            return dataclasses.replace(
+                e, qmode=q, note=f"qdrift({tag})={drifts[q]:.4f}")
+    return e
 
 
 def _attach_hint(e: PackPlan, dtype, cache, backend, m: int) -> PackPlan:
@@ -115,13 +189,15 @@ def _attach_hint(e: PackPlan, dtype, cache, backend, m: int) -> PackPlan:
     key = registry.problem_key(_abstract_operand(e, dtype), m=int(m),
                                backend=backend)
     hit = cache.get(key)
+    prefix = f"{e.note}; " if e.note else ""
     if hit is not None:
         return dataclasses.replace(
             e, dispatch_params=dict(hit.get("params") or {}),
-            note=f"tuned:{hit.get('impl', '?')}")
+            note=f"{prefix}tuned:{hit.get('impl', '?')}")
     ranked = autotune.rank_candidates(key)
     if ranked:
-        return dataclasses.replace(e, note=f"prior:{ranked[0][1].name}")
+        return dataclasses.replace(
+            e, note=f"{prefix}prior:{ranked[0][1].name}")
     return e
 
 
@@ -146,6 +222,8 @@ def build_plan(
     tiles: tuple[tuple[int, int], ...] | None = None,
     allow_dense: bool = True,
     prune: bool = True,
+    qmode: str | None = None,
+    drift_budget: float = 0.05,
 ) -> ModelPlan:
     """Per-layer :class:`~repro.core.plan.ModelPlan` for a param pytree.
 
@@ -153,7 +231,16 @@ def build_plan(
     ShapeDtypeStructs (deterministic budgets).  ``cfg``/``mesh`` enable the
     SPMD pass; ``tiles`` widens the tile-geometry search beyond
     ``sod_cfg.tile`` (candidates are ranked by compressed bytes).
+
+    ``qmode`` sets the per-layer value quantization: ``None`` inherits
+    ``sod_cfg.qmode``, an explicit mode applies everywhere, and ``"auto"``
+    picks the smallest mode whose round-trip drift fits ``drift_budget``
+    (measured against the pruned weights when concrete, nominal per-mode
+    constants otherwise).  The dense-bytes fallback below compares against
+    the *quantized* compressed bytes, so the plan's dense-never-worse
+    guarantee holds for the bytes the pack will actually store.
     """
+    req_qmode = sod_cfg.qmode if qmode is None else qmode
     entries: dict[str, PackPlan] = {}
     if sod_cfg.enabled:
         flat, _ = sod._flatten_named(params)
@@ -168,6 +255,8 @@ def build_plan(
             cands = [_packed_candidate(leaf, sod_cfg, tuple(t), prune)
                      for t in (tiles or (tuple(sod_cfg.tile),))]
             best = min(cands, key=lambda e: e.compressed_bytes())
+            best = _select_qmode(best, leaf, req_qmode, drift_budget,
+                                 sod_cfg, prune)
             if allow_dense and best.dense_bytes() < best.compressed_bytes():
                 # keep the pruning geometry (tile/br) — dense fallback
                 # changes the storage format, not the sparsity pattern
@@ -204,7 +293,7 @@ def build_plan(
         "sod": {"mode": sod_cfg.mode, "density": sod_cfg.density,
                 "prune_method": sod_cfg.prune_method,
                 "tile": list(sod_cfg.tile), "br": sod_cfg.br,
-                "min_dim": sod_cfg.min_dim},
+                "min_dim": sod_cfg.min_dim, "qmode": req_qmode},
         "m_values": [int(m) for m in m_values],
         "backend": backend or registry.current_backend(),
         "arch": getattr(cfg, "name", ""),
@@ -344,8 +433,12 @@ def _concrete_operand(e: PackPlan, key):
         w = pruning.block_prune(w, e.density, block=(e.br, e.tile[1]))
     w = w.astype(jnp.dtype(e.dtype))
     if e.mode == "tiled_csc":
-        return formats.pack_tiled_csc(w, tile=e.tile, cap=e.cap)
-    return formats.pack_block_csr(w, tile=e.tile, br=e.br, bcap=e.bcap)
+        packed = formats.pack_tiled_csc(w, tile=e.tile, cap=e.cap)
+    else:
+        packed = formats.pack_block_csr(w, tile=e.tile, br=e.br, bcap=e.bcap)
+    if e.qmode != "none":
+        packed = formats.quantize_packed(packed, e.qmode)
+    return packed
 
 
 def warmup_plan(
@@ -430,15 +523,18 @@ def load_or_build(
     mesh=None,
     cache=None,
     m_values: tuple[int, ...] = (),
+    qmode: str | None = None,
 ) -> ModelPlan | None:
     """Resolve a launch script's ``--plan`` argument.
 
     ``None``/empty → no plan (historical global-config packing); ``"auto"``
     → build one with the planner; anything else is a JSON path to replay.
+    ``qmode`` forwards the ``--quantize`` flag to :func:`build_plan`
+    (``"auto"`` enables the drift-budgeted per-layer choice).
     """
     if not plan_arg:
         return None
     if plan_arg == "auto":
         return build_plan(params, sod_cfg, cfg=cfg, mesh=mesh, cache=cache,
-                          m_values=tuple(m_values) or (128, 8))
+                          m_values=tuple(m_values) or (128, 8), qmode=qmode)
     return ModelPlan.load(plan_arg)

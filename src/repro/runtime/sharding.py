@@ -82,11 +82,16 @@ def _leaf_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
     nd = len(shape)
     if nd <= 1:
         return P()
+    # quantization codebook: a whole-matrix shared-value table with no grid
+    # dims — always replicated
+    if path.endswith(".codebook"):
+        return P(*(None,) * nd)
     # packed sub-arrays: the (Kt, Nt) tile-grid dims shard like the dense
     # matrix's (K, N); divisibility checked against the grid dims below.
+    # The per-tile quantization scale is exactly a (Kt, Nt) grid (tail 0).
     packed_tail = {"vals": 2, "rows": 2, "block_vals": 3, "block_ids": 1,
-                   "tile_nnz": 0}
-    m = re.search(r"\.(vals|rows|block_vals|block_ids|tile_nnz)$", path)
+                   "tile_nnz": 0, "scale": 0}
+    m = re.search(r"\.(vals|rows|block_vals|block_ids|tile_nnz|scale)$", path)
     if m:
         tail = packed_tail[m.group(1)]
         grid = shape[nd - tail - 2: nd - tail]
@@ -134,12 +139,15 @@ def _packed_specs(name: str, leaf, cfg: ModelConfig, mesh: Mesh):
     :func:`_leaf_spec` would silently fall through to the dense rules and
     shard a within-tile dim.
     """
-    subs = _PACKED_SUBS[type(leaf)]
+    subs = _PACKED_SUBS[type(leaf)] + tuple(
+        s for s in ("scale", "codebook") if getattr(leaf, s) is not None)
     fields = {s: _leaf_spec(f"{name}.{s}", getattr(leaf, s), cfg, mesh)
               for s in subs}
     if isinstance(leaf, TiledCSC):
-        return TiledCSC(shape=leaf.shape, tile=leaf.tile, **fields)
-    return BlockCSR(shape=leaf.shape, tile=leaf.tile, br=leaf.br, **fields)
+        return TiledCSC(shape=leaf.shape, tile=leaf.tile, qmode=leaf.qmode,
+                        **fields)
+    return BlockCSR(shape=leaf.shape, tile=leaf.tile, br=leaf.br,
+                    qmode=leaf.qmode, **fields)
 
 
 def param_specs(params: Params, cfg: ModelConfig, mesh: Mesh) -> Params:

@@ -36,14 +36,27 @@ Params = Any
 # compressed weight all-gather
 # ---------------------------------------------------------------------------
 def shard_packed(packed: TiledCSC, mesh: Mesh, axis: str = "data") -> TiledCSC:
-    """Place a packed weight sharded along its Nt grid dim on ``axis``."""
+    """Place a packed weight sharded along its Nt grid dim on ``axis``.
+
+    Quantized packs shard the per-tile scale along the same Nt dim and
+    replicate the codebook (a whole-matrix shared-value table)."""
     nd = packed.vals.ndim
     spec = P(*((None,) * (nd - 3) + (axis, None, None)))
     sharding = jax.sharding.NamedSharding(mesh, spec)
+    kw = {}
+    if packed.scale is not None:
+        s_spec = P(*((None,) * (packed.scale.ndim - 1) + (axis,)))
+        kw["scale"] = jax.device_put(
+            packed.scale, jax.sharding.NamedSharding(mesh, s_spec))
+    if packed.codebook is not None:
+        kw["codebook"] = jax.device_put(
+            packed.codebook,
+            jax.sharding.NamedSharding(
+                mesh, P(*(None,) * packed.codebook.ndim)))
     return TiledCSC(
         vals=jax.device_put(packed.vals, sharding),
         rows=jax.device_put(packed.rows, sharding),
-        shape=packed.shape, tile=packed.tile)
+        shape=packed.shape, tile=packed.tile, qmode=packed.qmode, **kw)
 
 
 def sod_fsdp_matmul(x: jax.Array, packed: TiledCSC, mesh: Mesh,
@@ -71,22 +84,36 @@ def sod_fsdp_matmul(x: jax.Array, packed: TiledCSC, mesh: Mesh,
             impl=impl, out_dtype=x.dtype)
 
     w_spec = P(*((None,) * (nd - 3) + (axis, None, None)))
+    scale, codebook = packed.scale, packed.codebook
+    s_spec = (P(*((None,) * (scale.ndim - 1) + (axis,)))
+              if scale is not None else P())
+    cb_spec = (P(*(None,) * codebook.ndim)
+               if codebook is not None else P())
 
-    def body(x_l, vals_l, rows_l):
-        from repro.kernels import ops  # deferred: runtime layers over kernels
-
+    def body(x_l, vals_l, rows_l, scale_l, cb_l):
         vals = jax.lax.all_gather(vals_l, axis, axis=nd - 3, tiled=True)
         rows = jax.lax.all_gather(rows_l, axis, axis=nd - 3, tiled=True)
-        w = TiledCSC(vals, rows, packed.shape, packed.tile)
-        return ops.sod_matmul(x_l, w, impl=impl, out_dtype=x_l.dtype,
-                              spmd=None)
+        s = (jax.lax.all_gather(scale_l, axis, axis=scale_l.ndim - 1,
+                                tiled=True)
+             if scale is not None else None)
+        w = TiledCSC(vals, rows, packed.shape, packed.tile,
+                     scale=s, codebook=cb_l if codebook is not None else None,
+                     qmode=packed.qmode)
+        # stacked layouts re-densify and run the XLA-fused scatter+dot —
+        # the same lead-dim treatment as sod.apply (kernels are per-matrix)
+        return jnp.einsum(
+            "mk,...kn->...mn", x_l, w.to_dense()).astype(x_l.dtype)
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P(), w_spec, w_spec),
+        in_specs=(P(), w_spec, w_spec, s_spec, cb_spec),
         out_specs=P(),
         check_rep=False)
-    return fn(x, packed.vals, packed.rows)
+    # dummy zero stand-ins keep the body signature static when a side band
+    # is absent (shard_map positional inputs can't be None)
+    return fn(x, packed.vals, packed.rows,
+              packed.scale if scale is not None else jnp.zeros(()),
+              packed.codebook if codebook is not None else jnp.zeros(()))
 
 
 # ---------------------------------------------------------------------------
@@ -123,9 +150,18 @@ def compressed_grad_allreduce(grad: jax.Array, mesh: Mesh, ratio: float,
     return fn(grad, error)
 
 
-def collective_savings(density: float, ratio: float | None = None) -> dict:
-    """Napkin numbers used in EXPERIMENTS.md §Perf."""
-    w = 1.5 * density       # (2B value + 1B index) / 2B dense
+def collective_savings(density: float, ratio: float | None = None,
+                       qmode: str = "none") -> dict:
+    """Napkin numbers used in EXPERIMENTS.md §Perf.
+
+    ``qmode`` narrows the gathered value bytes: int8/fp8 packs cross the
+    wire at (1B value + 1B index)/2B dense = 1.0·density; 4-bit codebook
+    indices at 0.75·density (scale/codebook side bands are per-tile /
+    per-matrix and vanish in the napkin)."""
+    from repro.core.plan import QVALUE_BITS
+
+    vbytes = QVALUE_BITS.get(qmode, 16) / 8.0
+    w = (vbytes + 1.0) / 2.0 * density  # (value + 1B index) / 2B dense
     out = {"weight_allgather_fraction": w}
     if ratio is not None:
         out["grad_reduce_fraction"] = 1.5 * ratio  # (4+2)B / 4B per kept elt

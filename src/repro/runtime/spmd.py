@@ -213,43 +213,55 @@ def plan_from_spec(vals_spec: P, mesh: Mesh, grid_dims: tuple[int, int] = (0, 1)
 # ---------------------------------------------------------------------------
 # spec trees / local containers
 # ---------------------------------------------------------------------------
+def _qside_specs(w, kt_ax, nt_ax) -> dict:
+    """Spec entries for the quantization side bands: the per-tile scale
+    shards with the (Kt, Nt) grid; the codebook (a whole-matrix shared-value
+    table) is always replicated."""
+    specs = {}
+    if w.scale is not None:
+        specs["scale"] = P(kt_ax, nt_ax)
+    if w.codebook is not None:
+        specs["codebook"] = P(*(None,) * w.codebook.ndim)
+    return specs
+
+
 def packed_specs(w, kt_ax: str | None = None, nt_ax: str | None = None):
     """Same-container-type pytree of PartitionSpecs for the packed leaves,
     sharding the (Kt, Nt) tile-grid dims on the given axes."""
     if isinstance(w, TiledCSC):
         s = P(kt_ax, nt_ax, None, None)
-        return TiledCSC(vals=s, rows=s, shape=w.shape, tile=w.tile)
+        return TiledCSC(vals=s, rows=s, shape=w.shape, tile=w.tile,
+                        qmode=w.qmode, **_qside_specs(w, kt_ax, nt_ax))
     if isinstance(w, BlockCSR):
         return BlockCSR(
             block_vals=P(kt_ax, nt_ax, None, None, None),
             block_ids=P(kt_ax, nt_ax, None),
             tile_nnz=P(kt_ax, nt_ax),
-            shape=w.shape, tile=w.tile, br=w.br)
+            shape=w.shape, tile=w.tile, br=w.br,
+            qmode=w.qmode, **_qside_specs(w, kt_ax, nt_ax))
     raise TypeError(f"not a packed operand: {type(w)}")
 
 
 def _with_shape(w, shape: tuple[int, int]):
     """Container with the same leaves but a different logical shape — used
     to restate a shard's leaves as a standalone local problem."""
-    if isinstance(w, TiledCSC):
-        return TiledCSC(vals=w.vals, rows=w.rows, shape=shape, tile=w.tile)
-    return BlockCSR(block_vals=w.block_vals, block_ids=w.block_ids,
-                    tile_nnz=w.tile_nnz, shape=shape, tile=w.tile, br=w.br)
+    return dataclasses.replace(w, shape=shape)
 
 
 def _gather_packed(w, axis: str):
     """All-gather the compressed leaves along their Nt grid dim — the
-    SoD-FSDP collective: ≈1.5·density of the dense bytes cross the links."""
+    SoD-FSDP collective: ≈1.5·density of the dense bytes cross the links.
+    Quantized packs gather the narrow codes plus the per-tile scale (the
+    wire cost drops with the value width); the codebook is replicated and
+    needs no collective."""
+    gat = lambda a: jax.lax.all_gather(a, axis, axis=1, tiled=True)
+    kw = {} if w.scale is None else {"scale": gat(w.scale)}
     if isinstance(w, TiledCSC):
-        return TiledCSC(
-            vals=jax.lax.all_gather(w.vals, axis, axis=1, tiled=True),
-            rows=jax.lax.all_gather(w.rows, axis, axis=1, tiled=True),
-            shape=w.shape, tile=w.tile)
-    return BlockCSR(
-        block_vals=jax.lax.all_gather(w.block_vals, axis, axis=1, tiled=True),
-        block_ids=jax.lax.all_gather(w.block_ids, axis, axis=1, tiled=True),
-        tile_nnz=jax.lax.all_gather(w.tile_nnz, axis, axis=1, tiled=True),
-        shape=w.shape, tile=w.tile, br=w.br)
+        return dataclasses.replace(w, vals=gat(w.vals), rows=gat(w.rows),
+                                   **kw)
+    return dataclasses.replace(
+        w, block_vals=gat(w.block_vals), block_ids=gat(w.block_ids),
+        tile_nnz=gat(w.tile_nnz), **kw)
 
 
 def _validate(plan: SpmdPlan, mesh: Mesh, w) -> None:
@@ -376,13 +388,16 @@ def _local_packed(w, mesh: Mesh, plan: SpmdPlan):
     kt_l, nt_l = kt // row, nt // col
     k_l = kt_l * bk if row > 1 else int(w.shape[0])
     n_l = nt_l * bn if col > 1 else int(w.shape[1])
+    kw = {} if w.scale is None else {"scale": w.scale[:kt_l, :nt_l]}
     if isinstance(w, TiledCSC):
-        return TiledCSC(vals=w.vals[:kt_l, :nt_l], rows=w.rows[:kt_l, :nt_l],
-                        shape=(k_l, n_l), tile=w.tile)
-    return BlockCSR(block_vals=w.block_vals[:kt_l, :nt_l],
-                    block_ids=w.block_ids[:kt_l, :nt_l],
-                    tile_nnz=w.tile_nnz[:kt_l, :nt_l],
-                    shape=(k_l, n_l), tile=w.tile, br=w.br)
+        return dataclasses.replace(
+            w, vals=w.vals[:kt_l, :nt_l], rows=w.rows[:kt_l, :nt_l],
+            shape=(k_l, n_l), **kw)
+    return dataclasses.replace(
+        w, block_vals=w.block_vals[:kt_l, :nt_l],
+        block_ids=w.block_ids[:kt_l, :nt_l],
+        tile_nnz=w.tile_nnz[:kt_l, :nt_l],
+        shape=(k_l, n_l), **kw)
 
 
 def warmup_params_spmd(

@@ -128,3 +128,93 @@ def test_csc_pointer_roundtrip_and_bytes():
 def test_density_helper():
     assert formats.density(np.zeros((4, 4))) == 0.0
     assert formats.density(np.ones((4, 4))) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Quantized value storage (int8 / fp8 / codebook)
+# ---------------------------------------------------------------------------
+QMODES = [m for m in ("int8", "fp8", "codebook")
+          if m != "fp8" or formats.fp8_dtype() is not None]
+
+
+def _pack(fmt, w, qmode="none"):
+    if fmt == "tiled_csc":
+        return formats.pack_tiled_csc(w, qmode=qmode)
+    return formats.pack_block_csr(w, qmode=qmode)
+
+
+@pytest.mark.parametrize("qmode", QMODES)
+@pytest.mark.parametrize("fmt", ["tiled_csc", "block_csr"])
+def test_quantized_pack_preserves_sparsity_and_shrinks(fmt, qmode):
+    """Quantized packs keep the zero pattern exactly, bound the value
+    error, and strictly shrink the byte footprint vs the fp pack."""
+    w = _rand_sparse(11, (256, 300), 0.3)
+    if fmt == "block_csr":
+        w = pruning.block_prune(_rand_sparse(11, (256, 300), 0.8), 0.3)
+    fp = _pack(fmt, w)
+    q = _pack(fmt, w, qmode=qmode)
+    dq = np.asarray(q.to_dense())
+    dense = np.asarray(w)
+    # zeros stay exactly zero (padding + pruned slots map to code 0)
+    assert (dq[dense == 0] == 0).all()
+    absmax = np.abs(dense).max()
+    err = np.abs(dq - dense).max()
+    if qmode == "int8":
+        assert err <= absmax / 253  # half-step of absmax/127 per-tile scale
+    elif qmode == "fp8":
+        # e4m3: 3 mantissa bits -> half-ulp rel err 2^-4, plus granularity
+        assert err <= 0.07 * absmax
+    else:  # codebook: values snap to the 16-entry shared table
+        book = np.asarray(q.codebook).ravel()
+        nz = dq[dense != 0]
+        assert np.isin(nz, book).all()
+        rel = np.linalg.norm(dq - dense) / np.linalg.norm(dense)
+        assert rel < 0.5
+    assert q.nbytes_compressed() < fp.nbytes_compressed()
+    assert q.qmode == qmode
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(16, 160), n=st.integers(16, 160),
+       density=st.floats(0.05, 0.9), seed=st.integers(0, 2**16))
+def test_int8_quant_roundtrip_error_bound_hypothesis(k, n, density, seed):
+    """Property: per-tile int8 scaling bounds elementwise error by half a
+    quantization step of the tile's absmax, at any shape/density."""
+    w = _rand_sparse(seed, (k, n), density)
+    p = formats.pack_tiled_csc(w, qmode="int8")
+    dq = np.asarray(p.to_dense())
+    dense = np.asarray(w)
+    assert np.abs(dq - dense).max() <= max(np.abs(dense).max(), 1e-30) / 253
+    assert (dq[dense == 0] == 0).all()
+
+
+@pytest.mark.parametrize("qmode", QMODES)
+def test_quantized_stacked_lead_dims(qmode):
+    """Stacked (lead-dim) packs quantize per slice and slice consistently
+    under tree_map — scale is per (slice, tile), codebook per slice."""
+    w = _rand_sparse(12, (3, 128, 130), 0.25)
+    p = formats.pack_tiled_csc(w, qmode=qmode)
+    p1 = jax.tree_util.tree_map(lambda t: t[1], p)
+    np.testing.assert_allclose(np.asarray(p1.to_dense()),
+                               np.asarray(p.to_dense())[1])
+
+
+def test_quantize_packed_identity_and_double_quant_rejected():
+    w = _rand_sparse(13, (128, 128), 0.3)
+    p = formats.pack_tiled_csc(w)
+    assert formats.quantize_packed(p, "none") is p
+    q = formats.quantize_packed(p, "int8")
+    assert formats.quantize_packed(q, "int8") is q
+    with pytest.raises(ValueError, match="already quantized"):
+        formats.quantize_packed(q, "codebook")
+
+
+def test_quantized_grad_flows_into_scale():
+    """Training gradients reach the quantization side bands: d/dscale of a
+    loss over to_dense() is the chain-rule sum over the tile's codes."""
+    w = _rand_sparse(14, (128, 128), 0.3)
+    q = formats.pack_tiled_csc(w, qmode="int8")
+    g = jax.grad(lambda c: jnp.sum(c.to_dense()), allow_int=True)(q)
+    codes = np.asarray(q.vals, np.float32)
+    np.testing.assert_allclose(np.asarray(g.scale),
+                               codes.sum(axis=(-2, -1)), rtol=1e-5)

@@ -42,11 +42,17 @@ SOD_SAMPLE = [
     ("gemma2-27b", SoDConfig(mode="tiled_csc", density=0.5, min_dim=64)),
     ("musicgen-medium", SoDConfig(mode="block_csr", density=0.25,
                                   prune_method="block", min_dim=64)),
+    ("llama3.2-1b", SoDConfig(mode="tiled_csc", density=0.3, min_dim=64,
+                              qmode="int8")),
+    ("llama3.2-1b", SoDConfig(mode="block_csr", density=0.4,
+                              prune_method="block", min_dim=64,
+                              qmode="codebook")),
 ]
 
 
 @pytest.mark.parametrize("arch,sod_cfg", SOD_SAMPLE,
-                         ids=[f"{a}-{c.mode}" for a, c in SOD_SAMPLE])
+                         ids=[f"{a}-{c.mode}-q{c.qmode}"
+                              for a, c in SOD_SAMPLE])
 def test_plan_pack_abstract_parity(arch, sod_cfg):
     """sodify_abstract(shapes, plan) ≡ shapes of sodify_params(params, plan)
     — same treedef, same leaf shapes and dtypes, for both formats."""
@@ -90,9 +96,10 @@ def test_abstract_plan_replays_on_concrete_params():
         assert kc == ka
 
 
-def test_plan_json_roundtrip_identical_pack():
+@pytest.mark.parametrize("qmode", ["none", "int8", "codebook"])
+def test_plan_json_roundtrip_identical_pack(qmode):
     sod_cfg = SoDConfig(mode="block_csr", density=0.4, prune_method="block",
-                        min_dim=64)
+                        min_dim=64, qmode=qmode)
     cfg = configs.reduced(configs.get_config("llama3.2-1b")).with_(sod=sod_cfg)
     model = build_model(cfg)
     params = model.init(KEY)
