@@ -22,6 +22,15 @@ XML of every gate for the CI artifact trail):
   the target tier's), both gating bit-identical tokens vs the
   non-speculative greedy reference and a clean page-pool drain after
   rejected-window rollbacks.
+* **stress-spec** (``--stress-spec``): every feature composed at once —
+  speculative decoding with a sparse draft tier, chunked prefill,
+  preemption with page swapping, and copy-on-write prefix sharing on a
+  bursty shared-prefix trace against a starved pool — gated on each
+  mechanism firing *while the others are on*: at least one preemption
+  landing mid-draft-window (speculative pages trimmed, not swapped), at
+  least one page-returning window rollback, prefix-page reuse, and a
+  clean pool/trie drain, with tokens bit-identical to the static
+  reference.
 
 Correctness gates (CI fails on any):
 
@@ -66,6 +75,7 @@ from repro.serving import (
     poisson_trace,
     shared_prefix_trace,
     static_generate,
+    stress_spec_trace,
 )
 
 VARIANTS = ("dense", "tiled_csc", "block_csr")
@@ -74,6 +84,11 @@ STRESS_COUNTERS = (
     "prefill_chunks", "preemptions", "swapped_out_pages",
     "swapped_in_pages", "cow_forks", "shared_prompt_pages",
     "prompt_pages_total", "prompt_pages_fresh",
+)
+
+STRESS_SPEC_COUNTERS = STRESS_COUNTERS + (
+    "spec_windows", "draft_proposed", "draft_accepted", "acceptance_rate",
+    "spec_rollbacks", "spec_rollback_pages", "spec_window_preemptions",
 )
 
 
@@ -277,6 +292,126 @@ def spec_variant(arch: str, draft: str, *, density: float, spec_k: int,
     return rec
 
 
+def stress_spec_variant(arch: str, *, density: float, seed: int,
+                        cache=None) -> dict:
+    """Everything at once: sparsity-tiered speculative decoding composed
+    with chunked prefill, preemption/page swapping, and copy-on-write
+    prefix sharing, on a bursty shared-prefix trace against a starved
+    pool.
+
+    The target tier is planner-packed ``tiled_csc``; the draft is the
+    cost model's aggressive tier, whose argmax on random-init weights
+    almost never agrees with the target's — every window rolls back, so
+    rollback runs *concurrently* with preemption and refcounted prefix
+    pages.  Sizing is calibrated (3 slots x up-to-6 lifetime pages vs 9
+    usable pages, bursts of 2) so that a preemption lands while a draft
+    window is in flight (``spec_window_preemptions``), speculative pages
+    are trimmed rather than swapped, and prefix pages are still reused —
+    with tokens bit-identical to the static reference throughout.
+    """
+    spec_k, requests, prefix_len = 2, 6, 8
+    max_prompt, max_new, max_slots = 14, 8, 3
+    page_size, prefill_chunk, n_pages = 4, 4, 10
+    cfg = configs.reduced(configs.get_config(arch)).with_(
+        sod=SoDConfig(mode="tiled_csc", density=density,
+                      prune_method="magnitude", min_dim=64))
+    model = build_model(cfg)
+    raw = model.init(jax.random.PRNGKey(seed))
+    m_values = (prefill_chunk, max_slots)
+    plan = planner.load_or_build("auto", raw, cfg.sod, cfg=cfg, cache=cache,
+                                 m_values=m_values)
+    # draft packs the raw weights — before the target prune below
+    draft_cfg, draft_plan = planner.build_draft_plan(
+        raw, cfg.sod, spec_k=spec_k, cfg=cfg, cache=cache,
+        m_values=m_values)
+    draft_params = sodify_params(raw, draft_cfg, plan=draft_plan)
+    params = sodify_params(raw, cfg.sod, plan=plan)
+
+    max_len = max_prompt + max_new + spec_k
+    trace = stress_spec_trace(
+        requests, prefix_len=prefix_len, max_prompt=max_prompt,
+        max_new=max_new, vocab=cfg.vocab, seed=seed, burst=2, rate=0.3)
+    eng = Engine(model, params, max_slots=max_slots, page_size=page_size,
+                 max_len=max_len, n_pages=n_pages, plan=plan,
+                 spec_k=spec_k, draft_params=draft_params,
+                 draft_plan=draft_plan, prefill_chunk=prefill_chunk,
+                 preemption=True, prefix_sharing=True)
+    res = eng.run(trace)
+
+    mismatches = []
+    for req in trace:
+        ref = static_generate(model, params, req, plan=plan)
+        if res["tokens"][req.rid] != ref:
+            mismatches.append({"rid": req.rid, "ref": ref,
+                               "engine": res["tokens"][req.rid]})
+    s = res["stats"]
+    rec = {
+        "arch": cfg.name, "mode": "stress_spec", "stress": True,
+        "spec": True, "density": density,
+        "draft_density": draft_plan.meta["density_choice"]["chosen"],
+        "spec_k": spec_k, "requests": requests, "max_slots": max_slots,
+        "page_size": page_size, "n_pages": n_pages,
+        "prefill_chunk": prefill_chunk, "prefix_len": prefix_len,
+        "weight_bytes": plan.compressed_bytes(),
+        "draft_weight_bytes": draft_plan.compressed_bytes(),
+        "match_static": not mismatches,
+        "mismatches": mismatches,
+        "preempt_order": list(eng.preempt_log),
+        "trimmed_pages": eng.page_pool.trimmed_pages,
+        **{k: s[k] for k in STRESS_SPEC_COUNTERS},
+        **{k: s[k] for k in
+           ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
+            "generated_tokens", "tokens_per_step",
+            "p50_latency_s", "p99_latency_s")},
+    }
+    rec["pool_clean"] = (not eng.page_pool.allocated
+                         and eng.page_pool.free_count
+                         == eng.page_pool.n_pages - 1
+                         and len(eng.trie) == 0)
+    return rec
+
+
+def _stress_spec_gates(rec: dict) -> list[tuple[str, str | None]]:
+    """(gate name, failure message or None) for the composed stress-spec
+    record: every mechanism must have fired *while the others were on*."""
+    m = rec["mode"]
+
+    def gate(name, ok, msg):
+        return (f"{m}:{name}", None if ok else msg)
+
+    return [
+        gate("match_static", rec["match_static"],
+             f"composed-engine tokens diverge from static reference "
+             f"({len(rec['mismatches'])} reqs)"),
+        gate("completed", rec["completed"] == rec["requests"],
+             f"only {rec['completed']}/{rec['requests']} completed"),
+        gate("chunked_prefill", rec["prefill_chunks"] > rec["requests"],
+             f"prefill_chunks={rec['prefill_chunks']} — chunking never "
+             f"split a prompt (requests={rec['requests']})"),
+        gate("windows_ran", rec["spec_windows"] > 0,
+             "no speculative windows executed"),
+        gate("preemption_cycle",
+             rec["preemptions"] >= 1 and rec["swapped_in_pages"] >= 1,
+             f"no full preemption/swap-in cycle (preemptions="
+             f"{rec['preemptions']}, swapped_in={rec['swapped_in_pages']})"),
+        gate("window_preempted", rec["spec_window_preemptions"] >= 1,
+             "no preemption landed while a draft window was in flight — "
+             "the trim-not-swap path never ran"),
+        gate("rollback", rec["spec_rollbacks"] >= 1,
+             "no rejected window crossed a page boundary — rollback "
+             "never returned a page"),
+        gate("prefix_reuse", rec["shared_prompt_pages"] > 0,
+             "no prompt pages were shared"),
+        gate("draft_bytes",
+             rec["draft_weight_bytes"] < rec["weight_bytes"],
+             f"draft tier bytes {rec['draft_weight_bytes']} not below "
+             f"target tier bytes {rec['weight_bytes']}"),
+        gate("pool_clean", rec["pool_clean"],
+             "pages or trie entries leaked after the composed drain "
+             "(pool, trie, or draft-page rollback)"),
+    ]
+
+
 def _spec_gates(rec: dict) -> list[tuple[str, str | None]]:
     """(gate name, failure message or None) for one spec record."""
     m = rec["mode"]
@@ -361,6 +496,12 @@ def main(argv=None) -> int:
                          "tiers), gated on bit-identical tokens vs the "
                          "non-speculative greedy reference and a nonzero "
                          "self-draft acceptance rate")
+    ap.add_argument("--stress-spec", action="store_true",
+                    help="every feature composed: speculative decoding x "
+                         "chunked prefill x preemption x prefix sharing on "
+                         "a bursty shared-prefix trace, gated on each "
+                         "mechanism firing while the others are on "
+                         "(incl. a preemption mid-draft-window)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=12)
@@ -389,6 +530,19 @@ def main(argv=None) -> int:
     if args.spec and (args.smoke or args.stress):
         ap.error("--spec is its own leg; combine with neither --smoke "
                  "nor --stress")
+    if args.stress_spec:
+        if args.smoke or args.stress or args.spec:
+            ap.error("--stress-spec is its own leg; combine with none of "
+                     "--smoke/--stress/--spec")
+        # like --stress: the trace is calibrated so every composed gate
+        # fires deterministically — free sizing would silently defeat it
+        for flag, default in (("requests", 16), ("prompt_len", 24),
+                              ("gen", 12), ("max_slots", 4),
+                              ("page_size", 8)):
+            if getattr(args, flag) != default:
+                ap.error(f"--stress-spec replays a fixed calibrated trace; "
+                         f"--{flag.replace('_', '-')} is not configurable "
+                         "with it")
     if args.smoke:
         args.requests, args.prompt_len, args.gen = 6, 10, 5
         args.max_slots, args.page_size = 3, 4
@@ -422,6 +576,19 @@ def main(argv=None) -> int:
                   f"forks={rec['cow_forks']}  "
                   f"pages={rec['prompt_pages_fresh']}/"
                   f"{rec['prompt_pages_total']}")
+        failures = [f"{name}: {msg}" for name, msg in gates if msg]
+    elif args.stress_spec:
+        rec = stress_spec_variant(args.arch, density=args.density,
+                                  seed=args.seed, cache=cache)
+        cases.append(rec)
+        gates += _stress_spec_gates(rec)
+        print(f"{rec['mode']:>11}  match={rec['match_static']!s:5}  "
+              f"windows={rec['spec_windows']:>3}  "
+              f"preempt={rec['preemptions']}  "
+              f"mid_window={rec['spec_window_preemptions']}  "
+              f"rollbacks={rec['spec_rollbacks']}  "
+              f"shared={rec['shared_prompt_pages']}  "
+              f"chunks={rec['prefill_chunks']}")
         failures = [f"{name}: {msg}" for name, msg in gates if msg]
     elif args.spec:
         for draft in ("self", "sparse"):
@@ -474,10 +641,13 @@ def main(argv=None) -> int:
         kind = "serving_bench_stress"
     elif args.spec:
         kind = "serving_bench_spec"
+    elif args.stress_spec:
+        kind = "serving_bench_stress_spec"
     out = {
         "kind": kind,
         "arch": args.arch, "density": args.density, "smoke": args.smoke,
         "stress": args.stress, "spec": args.spec,
+        "stress_spec": args.stress_spec,
         "cases": cases, "failures": failures, "ok": not failures,
     }
     path = pathlib.Path(args.output)

@@ -160,7 +160,11 @@ def main(argv=None):
                          "aggressively sparse pack of the same weights "
                          "drafts K tokens ahead per slot, verified in one "
                          "batched pass (greedy output stays bit-identical; "
-                         "default: off)")
+                         "default: off).  Composes with --prefill-chunk, "
+                         "--preemption, and --prefix-sharing: slots "
+                         "mid-prefill sit out draft windows, and a "
+                         "preempted slot's speculative pages are rolled "
+                         "back, never swapped")
     ap.add_argument("--draft-sparsity", type=float, default=None,
                     help="fraction of draft-tier weights pruned away "
                          "(density = 1 - sparsity); default: let the "

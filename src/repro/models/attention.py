@@ -28,6 +28,9 @@ NEG_INF = -2.0e38
 
 @dataclasses.dataclass(frozen=True)
 class AttnSpec:
+    """Shape/behaviour spec for one attention layer: head geometry, RoPE
+    base, logit scaling/soft-capping, and the flash-chunk sizes."""
+
     n_heads: int
     n_kv_heads: int
     head_dim: int
@@ -39,10 +42,12 @@ class AttnSpec:
 
     @property
     def q_scale(self) -> float:
+        """Query scaling applied to logits (``scale`` or 1/sqrt(hd))."""
         return self.scale if self.scale is not None else self.head_dim**-0.5
 
 
 def init_attention(key, d_model: int, spec: AttnSpec, dtype=jnp.bfloat16) -> Params:
+    """Initialize the q/k/v/o projection weights for one attention layer."""
     kq, kk, kv, ko = jax.random.split(key, 4)
     return {
         "wq": layers.dense_init(kq, d_model, spec.n_heads * spec.head_dim, dtype),
@@ -177,6 +182,7 @@ def full_attention(
 # ---------------------------------------------------------------------------
 def init_cache(batch: int, max_len: int, spec: AttnSpec,
                dtype=jnp.bfloat16) -> Params:
+    """Allocate a zeroed dense per-slot KV cache of ``max_len`` positions."""
     shape = (batch, max_len, spec.n_kv_heads, spec.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
@@ -408,6 +414,7 @@ def paged_decode_attention(
     pos: jax.Array,            # (B,) per-sequence positions
     spec: AttnSpec,
     window: int | None = None,
+    valid_len: jax.Array | None = None,
 ):
     """One decode step against the paged KV pool.
 
@@ -417,6 +424,14 @@ def paged_decode_attention(
     position order and attended with the same per-row mask as the dense
     vector-``pos`` path — so paged and dense decode are exactly
     interchangeable for equal cache contents.
+
+    ``valid_len`` (optional, (B,)) is a per-row write cutoff: rows whose
+    ``pos`` is at or beyond it redirect their KV write to the trash page.
+    The engine uses it to run one batched step over a mix of decoding and
+    prefilling/idle slots (cutoff 0) without copying block tables on the
+    host, and to keep draft steps probing past a sequence's end from
+    dirtying a live page.  Reads are unaffected — the attention mask
+    already scopes each row to ``<= pos``.
     """
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
@@ -424,6 +439,9 @@ def paged_decode_attention(
     page_size = pool["k"].shape[1]
     page = jnp.take_along_axis(
         block_tables, (pos // page_size)[:, None], axis=1)[:, 0]
+    if valid_len is not None:
+        valid_len = jnp.asarray(valid_len, jnp.int32).reshape(b)
+        page = jnp.where(pos < valid_len, page, 0)      # overflow → trash
     off = pos % page_size
     k_pool = pool["k"].at[page, off].set(k_new[:, 0])
     v_pool = pool["v"].at[page, off].set(v_new[:, 0])

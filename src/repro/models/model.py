@@ -107,14 +107,18 @@ class LM:
 
     def paged_decode_step(self, params: Params, pool: Params,
                           block_tables: jax.Array, tokens: jax.Array,
-                          pos: jax.Array):
+                          pos: jax.Array,
+                          valid_len: jax.Array | None = None):
         """Ragged decode step over the paged KV pool: tokens (B, 1), pos
-        (B,), block_tables (B, max_pages).  Returns (logits, pool)."""
+        (B,), block_tables (B, max_pages).  ``valid_len`` (optional, (B,))
+        is a per-row write cutoff — rows at or beyond it redirect their KV
+        write to the trash page.  Returns (logits, pool)."""
         if self.cfg.family in ("hybrid", "ssm"):
             raise ValueError(
                 f"family {self.cfg.family!r} has no paged decode path")
         return transformer.transformer_decode_paged(
-            params, pool, block_tables, tokens, pos, self.cfg)
+            params, pool, block_tables, tokens, pos, self.cfg,
+            valid_len=valid_len)
 
     def prefill_chunk(self, params: Params, pool: Params,
                       block_tables: jax.Array, tokens: jax.Array,

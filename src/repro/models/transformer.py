@@ -158,10 +158,13 @@ def attn_block_full(bp: Params, x: jax.Array, cfg: ModelConfig,
 def attn_block_decode(bp: Params, x: jax.Array, cache: Params,
                       pos: jax.Array, cfg: ModelConfig,
                       window: int | None,
-                      block_tables: jax.Array | None = None):
+                      block_tables: jax.Array | None = None,
+                      valid_len: jax.Array | None = None):
     """One decode block.  ``cache`` is a dense per-slot KV cache, or —
     when ``block_tables`` is given — this layer's slice of the paged KV
-    pool (the engine's slot→page mapping)."""
+    pool (the engine's slot→page mapping).  ``valid_len`` (paged only)
+    is the optional per-row write cutoff forwarded to
+    :func:`repro.models.attention.paged_decode_attention`."""
     spec = attn_spec(cfg)
     h = layers.rms_norm(x, bp["norm1"], cfg.norm_eps)
     if block_tables is None:
@@ -169,7 +172,8 @@ def attn_block_decode(bp: Params, x: jax.Array, cache: Params,
                                           window=window)
     else:
         ao, cache = attn.paged_decode_attention(
-            bp["attn"], h, cache, block_tables, pos, spec, window=window)
+            bp["attn"], h, cache, block_tables, pos, spec, window=window,
+            valid_len=valid_len)
     if cfg.use_post_norms:
         ao = layers.rms_norm(ao, bp["norm1_post"], cfg.norm_eps)
     x = x + ao
@@ -411,12 +415,16 @@ def transformer_init_paged_pool(cfg: ModelConfig, n_pages: int,
 
 def transformer_decode_paged(params: Params, pool: Params,
                              block_tables: jax.Array, tokens: jax.Array,
-                             pos: jax.Array, cfg: ModelConfig):
+                             pos: jax.Array, cfg: ModelConfig,
+                             valid_len: jax.Array | None = None):
     """One ragged decode step over the paged KV pool.
 
     ``pos`` is a (B,) vector — one position per engine slot.  Mirrors
     :func:`transformer_decode` with each layer's dense cache slice
-    replaced by its page pool + the shared block tables.
+    replaced by its page pool + the shared block tables.  ``valid_len``
+    (optional, (B,)) gates each row's KV write: rows at or beyond their
+    cutoff write to the trash page, letting one batched step cover a mix
+    of decoding and prefilling/idle slots.
     """
     x = embed_inputs(params, {"tokens": tokens}, cfg)
     p_period = cfg.pattern_period
@@ -429,7 +437,7 @@ def transformer_decode_paged(params: Params, pool: Params,
             layer_pool = {"k": kp[j], "v": vp[j]}
             x, layer_pool = attn_block_decode(
                 bp, x, layer_pool, pos, cfg, cfg.window_for(j),
-                block_tables=block_tables)
+                block_tables=block_tables, valid_len=valid_len)
             ks.append(layer_pool["k"])
             vs.append(layer_pool["v"])
         return x, (jnp.stack(ks), jnp.stack(vs))

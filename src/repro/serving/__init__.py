@@ -4,10 +4,11 @@ copy-on-write prefix sharing) over Sparse-on-Dense packed weights."""
 from repro.serving.engine import Engine, bucket_len, static_generate
 from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
 from repro.serving.scheduler import Request, Scheduler, SeqState
-from repro.serving.trace import poisson_trace, shared_prefix_trace
+from repro.serving.trace import (poisson_trace, shared_prefix_trace,
+                                 stress_spec_trace)
 
 __all__ = [
     "Engine", "PagePool", "PoolExhausted", "PrefixTrie", "Request",
     "Scheduler", "SeqState", "bucket_len", "poisson_trace",
-    "shared_prefix_trace", "static_generate",
+    "shared_prefix_trace", "static_generate", "stress_spec_trace",
 ]

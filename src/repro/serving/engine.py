@@ -58,6 +58,29 @@ the draft tier only changes how many positions each step commits.
 ``spec_k=0`` (the default) leaves every code path byte-identical to the
 non-speculative engine.
 
+Every feature composes with every other.  :meth:`Engine.step` is an
+explicit phase pipeline — admission (resume swapped, admit what fits) →
+prefill (fused at admission, or one chunk per prefilling slot) →
+capacity (grow pages out to each slot's decode or draft-window span,
+preempting under pressure) → draft window → verify/decode →
+commit/rollback — where each phase is a method over the shared slot
+state and the feature flags select phase *implementations* rather than
+gating ``ValueError``\\s.  The composition rules the pipeline enforces:
+
+* a slot mid-chunked-prefill takes no decode or draft steps — its
+  per-row write cutoff (``valid_len``) is 0, so one batched step safely
+  covers a mix of prefilling and decoding slots without host-side
+  block-table copies;
+* draft-pool pages share the target pool's page ids, so the preemption
+  reservation rule covers them for free; on preemption a slot's
+  speculative pages are *trimmed* (rolled back, never swapped) and its
+  draft-pool KV is dropped — the resumed sequence re-drafts from
+  scratch, which can only lower acceptance, never change a token;
+* rollback (:meth:`_trim_spec_pages`) returns pages through the
+  refcount-aware :meth:`repro.serving.pool.PagePool.trim`, so a
+  rollback on a prefix-sharing sequence can never free a page the trie
+  still maps.
+
 Greedy tokens are bit-identical to per-request static-batch serve
 (:func:`static_generate`) under any schedule because every per-row
 computation is batch-row-independent and padding/masked positions
@@ -86,7 +109,7 @@ from repro.launch import steps as steps_mod
 from repro.models import cache as cache_mod
 from repro.models.model import LM
 from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
-from repro.serving.scheduler import Request, Scheduler, SeqState
+from repro.serving.scheduler import Request, Scheduler, SeqPhase, SeqState
 
 Params = dict[str, Any]
 
@@ -187,11 +210,6 @@ class Engine:
                     "spec_k > 0 needs draft_params — a second (aggressively "
                     "compressed) pack of the same weights, e.g. from "
                     "repro.runtime.planner.build_draft_plan")
-            if prefill_chunk or preemption or prefix_sharing:
-                raise ValueError(
-                    "speculative decoding composes with the fused-prefill "
-                    "engine only; chunked prefill / preemption / prefix "
-                    "sharing with a draft tier are not supported")
         self.draft_params = draft_params
         self.draft_plan = draft_plan
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
@@ -209,6 +227,8 @@ class Engine:
             "shared_prompt_pages": 0, "prompt_pages_total": 0,
             "prompt_pages_fresh": 0, "spec_windows": 0,
             "draft_proposed": 0, "draft_accepted": 0,
+            "spec_rollbacks": 0, "spec_rollback_pages": 0,
+            "spec_window_preemptions": 0,
         }
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
@@ -255,6 +275,10 @@ class Engine:
                                                 plan=draft_plan))
                 self._verify = jax.jit(
                     steps_mod.make_verify_step(model, mesh=mesh, plan=plan))
+                if self.prefill_chunk:
+                    self._draft_chunk_prefill = jax.jit(
+                        steps_mod.make_chunked_prefill_step(
+                            model, mesh=mesh, plan=draft_plan))
         else:
             self.cache = model.init_cache(self.max_slots, self.max_len)
             spec = model.cache_spec()
@@ -499,6 +523,12 @@ class Engine:
                 self.pool = self._copy_page(
                     self.pool, jnp.asarray(pid, jnp.int32),
                     jnp.asarray(new, jnp.int32))
+                if self.spec_k:
+                    # the draft tier addresses the same page ids: its copy
+                    # of the shared prompt KV must follow the fork
+                    self.draft_pool = self._copy_page(
+                        self.draft_pool, jnp.asarray(pid, jnp.int32),
+                        jnp.asarray(new, jnp.int32))
                 seq.pages[j] = new
                 self.block_tables[seq.slot, j] = new
                 self.stats["cow_forks"] += 1
@@ -506,7 +536,10 @@ class Engine:
 
     def _prefill_tick(self, seq: SeqState) -> list[tuple[int, int]]:
         """Advance one C-token chunk of a prefilling sequence; the final
-        chunk (zero-padded past the prompt) yields the first token."""
+        chunk (zero-padded past the prompt) yields the first token.  With
+        a draft tier, the same chunk also prefills the draft pool (same
+        pages, draft weights) so later draft windows see real prompt KV;
+        draft logits are unused — the first token must be the target's."""
         c = self.prefill_chunk
         req = seq.req
         plen = len(req.tokens)
@@ -516,11 +549,16 @@ class Engine:
             return []                  # no page for the fork yet: wait
         chunk = np.zeros(c, np.int32)
         chunk[:end - start] = req.tokens[start:end]
+        bt_row = jnp.asarray(self.block_tables[seq.slot][None])
+        chunk_j = jnp.asarray(chunk)[None]
+        start_j = jnp.asarray(start, jnp.int32)
+        plen_j = jnp.asarray(plen, jnp.int32)
         logits, self.pool = self._chunk_prefill(
-            self.params, self.pool,
-            jnp.asarray(self.block_tables[seq.slot][None]),
-            jnp.asarray(chunk)[None],
-            jnp.asarray(start, jnp.int32), jnp.asarray(plen, jnp.int32))
+            self.params, self.pool, bt_row, chunk_j, start_j, plen_j)
+        if self.spec_k:
+            _, self.draft_pool = self._draft_chunk_prefill(
+                self.draft_params, self.draft_pool, bt_row, chunk_j,
+                start_j, plen_j)
         seq.prefilled = end
         self.stats["prefill_chunks"] += 1
         if self.trie is not None:
@@ -531,6 +569,7 @@ class Engine:
         first = int(jnp.argmax(logits[0, plen - 1 - start]))
         seq.generated.append(first)
         seq.pos = plen
+        seq.phase = SeqPhase.DECODING
         return self._post_admit(seq)
 
     # -- preemption / swapping ------------------------------------------------
@@ -541,7 +580,30 @@ class Engine:
 
     def _preempt(self, seq: SeqState) -> None:
         """Swap the sequence's pages to host memory and free them; the
-        scheduler queues it for resume ahead of pending newcomers."""
+        scheduler queues it for resume ahead of pending newcomers.
+
+        Speculative pages — anything grown past the committed prefix for
+        an in-flight draft window — are *trimmed* first, never swapped:
+        their KV is uncommitted by definition, so the resumed sequence
+        just re-drafts.  The draft pool's KV for the swapped pages is
+        dropped with them (only the target pool round-trips to host);
+        after resume the draft tier re-builds its KV as decode proceeds,
+        which can lower acceptance for that sequence but never changes a
+        token — emissions are always the target's argmax.
+        """
+        if self.spec_k and seq.phase is SeqPhase.DECODING:
+            keep = self.page_pool.pages_for(seq.pos)
+            if len(seq.pages) > keep:
+                # a spec window was in flight for this slot: roll its
+                # uncommitted pages back before the swap snapshot
+                freed = self.page_pool.trim(seq.pages[keep:])
+                if self.trie is not None:
+                    for p in freed:
+                        self.trie.drop(p)
+                del seq.pages[keep:]
+                self.block_tables[seq.slot, keep:] = PagePool.TRASH_PAGE
+                self.stats["spec_window_preemptions"] += 1
+                self.stats["spec_rollback_pages"] += len(freed)
         n = len(seq.pages)
         host = jax.device_get(
             self._gather_pages(self.pool, self._padded_ids(seq.pages)))
@@ -578,62 +640,76 @@ class Engine:
         self._tok[seq.slot, 0] = seq.generated[-1]
         self.stats["swapped_in_pages"] += n
 
-    def _grow_pages(self) -> None:
-        """Allocate the next page for every decoding sequence whose write
-        position crosses a page boundary; under pressure, preemption
-        evicts the youngest decoding sequence (possibly the needy one
-        itself) instead of dying mid-decode."""
+    def _phase_capacity(self) -> None:
+        """Capacity phase: grow every decoding sequence's pages out to
+        the span the coming step will write — position ``pos`` for plain
+        decode, ``[pos, min(pos + spec_k, seq_end - 1)]`` for a draft
+        window (positions past ``seq_end`` redirect to the trash page, so
+        the worst-case-reservation rule ``pages_for(seq_end)`` still
+        bounds growth).  Under pressure, preemption evicts the youngest
+        decoding sequence (possibly the needy one itself — re-checked per
+        slot) instead of dying mid-decode; a preempted victim's own
+        speculative pages are trimmed by :meth:`_preempt`, not swapped."""
         for slot in sorted(self.sched.active):
             seq = self.sched.active.get(slot)
-            if seq is None or seq.is_prefilling:
+            if seq is None or seq.phase is not SeqPhase.DECODING:
                 continue
-            need_idx = seq.pos // self.page_size
-            if need_idx < len(seq.pages):
+            need = self.page_pool.pages_for(
+                min(seq.pos + self.spec_k + 1, self._seq_end(seq)))
+            if need <= len(seq.pages):
                 # in-place write: must be exclusive — only *complete*
                 # prompt pages are ever shared, and decode writes land
                 # strictly past them (the fully-shared boundary page is
                 # forked during the recompute prefill tick)
-                assert self.page_pool.ref_count(seq.pages[need_idx]) == 1, (
-                    f"decode write into shared page {seq.pages[need_idx]}")
+                assert self.page_pool.ref_count(
+                    seq.pages[seq.pos // self.page_size]) == 1, (
+                    "decode write into shared page "
+                    f"{seq.pages[seq.pos // self.page_size]}")
                 continue
-            ok = self._try_capacity(1)
+            ok = self._try_capacity(need - len(seq.pages))
             if self.sched.active.get(slot) is not seq:
                 continue                     # the hunt preempted seq itself
             if not ok:
                 raise PoolExhausted(
                     "pool exhausted with no preemptible sequence — "
                     "the pool cannot hold even one request")
-            (pg,) = self.page_pool.alloc(1)
-            seq.pages.append(pg)
-            self.block_tables[slot, need_idx] = pg
-
-    # -- speculative decoding -------------------------------------------------
-    def _spec_grow(self, decoding: dict[int, SeqState]) -> None:
-        """Pre-allocate pages covering every live position a speculative
-        window can write — ``[pos, min(pos + spec_k, seq_end - 1)]``.
-        Positions past ``seq_end`` redirect to the trash page instead, so
-        the worst-case-reservation admission rule (``pages_for(seq_end)``)
-        still bounds growth and the pool can never exhaust here."""
-        for slot in sorted(decoding):
-            seq = decoding[slot]
-            need = self.page_pool.pages_for(
-                min(seq.pos + self.spec_k + 1, self._seq_end(seq)))
             while len(seq.pages) < need:
                 (pg,) = self.page_pool.alloc(1)
                 seq.pages.append(pg)
                 self.block_tables[slot, len(seq.pages) - 1] = pg
 
+    # -- speculative decoding -------------------------------------------------
     def _trim_spec_pages(self, seq: SeqState) -> None:
         """Roll back pages allocated for rejected window positions: keep
         only what covers the committed prefix ``[0, pos)`` (never below
         the prompt bucket — ``pos > plen`` always) and return the rest to
-        the pool.  Stale KV beyond ``pos`` needs no scrubbing: the next
+        the pool via the refcount-aware :meth:`~repro.serving.pool.
+        PagePool.trim`, so a sharer's rollback can never free a page the
+        trie still maps (only pages whose last reference dropped leave
+        the trie).  Stale KV beyond ``pos`` needs no scrubbing: the next
         window re-writes each position before any row can attend to it."""
         keep = self.page_pool.pages_for(seq.pos)
         if len(seq.pages) > keep:
-            self.page_pool.free(seq.pages[keep:])
+            freed = self.page_pool.trim(seq.pages[keep:])
+            if self.trie is not None:
+                for p in freed:
+                    self.trie.drop(p)
             del seq.pages[keep:]
             self.block_tables[seq.slot, keep:] = PagePool.TRASH_PAGE
+            self.stats["spec_rollbacks"] += 1
+            self.stats["spec_rollback_pages"] += len(freed)
+
+    def _valid_lens(self) -> np.ndarray:
+        """Per-slot write cutoffs for batched decode/draft/verify steps:
+        a decoding slot may write up to its ``seq_end``; prefilling and
+        idle slots get 0 (every write redirects to the trash page), which
+        is what lets one batched step span a partially-prefilled batch
+        without host-side block-table masking."""
+        valid = np.zeros(self.max_slots, np.int32)
+        for slot, seq in self.sched.active.items():
+            if seq.phase is SeqPhase.DECODING:
+                valid[slot] = self._seq_end(seq)
+        return valid
 
     def _spec_window(self, decoding: dict[int, SeqState],
                      ) -> list[tuple[int, int]]:
@@ -646,11 +722,14 @@ class Engine:
         the target's greedy tokens is accepted plus one bonus target
         token — every emission is the *target's* argmax, so the output
         equals sequential greedy decode token-for-token; rejected
-        positions' pages roll back via :meth:`_trim_spec_pages`.
+        positions' pages roll back via :meth:`_trim_spec_pages`.  Slots
+        mid-chunked-prefill ride along with write cutoff 0: their rows
+        write to the trash page and their outputs are discarded, so a
+        window can run while another slot's prompt is still streaming in.
         """
         k = self.spec_k
-        self._spec_grow(decoding)
         btj = jnp.asarray(self.block_tables)
+        valid = jnp.asarray(self._valid_lens())
         d_tok = self._tok.copy()
         d_pos = self._pos.copy()
         drafts = np.zeros((self.max_slots, k), np.int32)
@@ -661,7 +740,7 @@ class Engine:
         for j in range(k + 1):
             nxt, _, self.draft_pool = self._draft_decode(
                 self.draft_params, self.draft_pool, btj,
-                jnp.asarray(d_tok), jnp.asarray(d_pos))
+                jnp.asarray(d_tok), jnp.asarray(d_pos), valid)
             if j == k:
                 break
             col = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
@@ -672,12 +751,9 @@ class Engine:
         v_tok = np.zeros((self.max_slots, k + 1), np.int32)
         v_tok[:, 0] = self._tok[:, 0]
         v_tok[:, 1:] = drafts
-        v_valid = np.zeros(self.max_slots, np.int32)
-        for slot, seq in decoding.items():
-            v_valid[slot] = self._seq_end(seq)
         nxt, _, self.pool = self._verify(
             self.params, self.pool, btj, jnp.asarray(v_tok),
-            jnp.asarray(self._pos), jnp.asarray(v_valid))
+            jnp.asarray(self._pos), valid)
         target = np.asarray(nxt).reshape(self.max_slots, k + 1)
 
         events: list[tuple[int, int]] = []
@@ -703,13 +779,13 @@ class Engine:
                 self._trim_spec_pages(seq)
         return events
 
-    # -- stepping -------------------------------------------------------------
-    def step(self) -> list[tuple[int, int]]:
-        """Advance virtual time one step: resume swapped sequences, admit
-        what fits, advance prefill chunks, grow pages (preempting under
-        pressure), run one ragged batched decode.  Returns (rid, token)
-        emissions."""
-        now = self._step_idx
+    # -- stepping: the per-step phase pipeline --------------------------------
+    def _phase_admission(self, now: int) -> list[tuple[int, int]]:
+        """Admission phase: resume swapped sequences first (they were
+        admitted before anyone still pending), then admit queue heads
+        while a slot and pages are free.  Fused-prefill admission emits
+        the first token immediately; chunked admission places the slot in
+        the prefilling phase for :meth:`_phase_prefill` to advance."""
         now_wall = time.perf_counter()
         # latency clock starts when a request becomes admissible, not when
         # it reaches the queue head — queue wait is part of tail latency
@@ -718,7 +794,6 @@ class Engine:
                 break                        # pending is arrival-sorted
             self._first_seen.setdefault(r.rid, now_wall)
         events: list[tuple[int, int]] = []
-
         if self.paged:
             # swapped sequences were admitted first: resume before anyone
             while self.sched.swapped and self.sched.has_free_slot():
@@ -745,54 +820,77 @@ class Engine:
                     events += self._admit_paged(req)
             else:
                 events += self._admit_state(req)
+        return events
 
+    def _phase_prefill(self) -> list[tuple[int, int]]:
+        """Prefill phase: advance one chunk for every prefilling slot.
+        A slot stays excluded from decode and draft windows (write cutoff
+        0) until its final chunk delivers the first token."""
+        events: list[tuple[int, int]] = []
+        for seq in list(self.sched.active.values()):
+            if seq.phase is SeqPhase.PREFILLING:
+                events += self._prefill_tick(seq)
+        return events
+
+    def _phase_decode(self, decoding: dict[int, SeqState],
+                      ) -> list[tuple[int, int]]:
+        """Verify/decode + commit phase, non-speculative: one ragged
+        batched decode step; every decoding slot commits one token.
+        Prefilling/idle rows ride along with write cutoff 0 (paged) or an
+        untouched slot cache (recurrent)."""
+        events: list[tuple[int, int]] = []
+        tok = jnp.asarray(self._tok)
+        pos = jnp.asarray(self._pos)
+        if self.paged:
+            nxt, _, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(self.block_tables),
+                tok, pos, jnp.asarray(self._valid_lens()))
+        else:
+            nxt, _, self.cache = self._decode(
+                self.params, self.cache, tok, pos)
+        nxt = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
+        for slot, seq in list(decoding.items()):
+            t = int(nxt[slot])
+            seq.generated.append(t)
+            seq.pos += 1
+            self._pos[slot] = seq.pos
+            self._tok[slot, 0] = t
+            events.append((seq.req.rid, t))
+            if seq.remaining == 0:
+                self._complete(slot)
+        return events
+
+    def step(self) -> list[tuple[int, int]]:
+        """Advance virtual time one step through the phase pipeline:
+        admission (resume + admit) → prefill (chunk ticks) → capacity
+        (page growth, preempting under pressure) → draft window →
+        verify/decode → commit/rollback.  Feature flags select phase
+        implementations — every combination of chunked prefill,
+        preemption, prefix sharing, and speculative decoding runs through
+        this one pipeline.  Returns (rid, token) emissions."""
+        events = self._phase_admission(self._step_idx)
         if self.paged:
             if self.prefill_chunk:
-                for seq in list(self.sched.active.values()):
-                    if seq.is_prefilling:
-                        events += self._prefill_tick(seq)
-            if not self.spec_k:
-                self._grow_pages()   # spec windows grow in _spec_grow
-
+                events += self._phase_prefill()
+            self._phase_capacity()
         decoding = {slot: seq for slot, seq in self.sched.active.items()
-                    if not seq.is_prefilling}
-        if decoding and self.spec_k:
-            events += self._spec_window(decoding)
-        elif decoding:
-            tok = jnp.asarray(self._tok)
-            pos = jnp.asarray(self._pos)
-            if self.paged:
-                bt = self.block_tables
-                if len(decoding) != len(self.sched.active):
-                    # prefilling slots must not write into their pages
-                    bt = bt.copy()
-                    for slot, seq in self.sched.active.items():
-                        if seq.is_prefilling:
-                            bt[slot, :] = PagePool.TRASH_PAGE
-                nxt, _, self.pool = self._decode(
-                    self.params, self.pool, jnp.asarray(bt), tok, pos)
+                    if seq.phase is SeqPhase.DECODING}
+        if decoding:
+            if self.spec_k:
+                events += self._spec_window(decoding)
             else:
-                nxt, _, self.cache = self._decode(
-                    self.params, self.cache, tok, pos)
-            nxt = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
-            for slot, seq in list(decoding.items()):
-                t = int(nxt[slot])
-                seq.generated.append(t)
-                seq.pos += 1
-                self._pos[slot] = seq.pos
-                self._tok[slot, 0] = t
-                events.append((seq.req.rid, t))
-                if seq.remaining == 0:
-                    self._complete(slot)
-
+                events += self._phase_decode(decoding)
         self._step_idx += 1
         return events
 
     # -- warmup / run ---------------------------------------------------------
     def warmup(self) -> float:
-        """Pre-compile every jitted shape the queued trace will hit, so
-        steady-state throughput excludes compile time.  Results are
-        discarded — no engine state changes."""
+        """Pre-compile the union of jitted shapes the composed feature
+        set can reach on the queued trace — prefill buckets or chunk
+        shapes (target and draft tiers alike), the write-cutoff-gated
+        batched decode, COW page copies, swap gathers/scatters, and
+        draft/verify windows — so steady-state throughput excludes
+        compile time.  Results are discarded — no engine state changes."""
         t0 = time.perf_counter()
         if self.paged:
             if self.prefill_chunk:
@@ -827,22 +925,37 @@ class Engine:
                     self._scatter_pages(self.pool, snap, ids)["k"])
             out = self._decode(
                 self.params, self.pool, jnp.asarray(self.block_tables),
-                jnp.asarray(self._tok), jnp.asarray(self._pos))
+                jnp.asarray(self._tok), jnp.asarray(self._pos),
+                jnp.zeros(self.max_slots, jnp.int32))
             jax.block_until_ready(out[0])
             if self.spec_k:
-                for b in sorted({self._bucket(len(r.tokens))
-                                 for r in self.sched.pending}):
-                    _, dcache = self._draft_prefill(
-                        self.draft_params,
-                        {"tokens": jnp.zeros((1, b), jnp.int32)})
-                    trash = np.full(b // self.page_size,
-                                    PagePool.TRASH_PAGE, np.int32)
-                    jax.block_until_ready(self._page_write(
-                        self.draft_pool, dcache, jnp.asarray(trash))["k"])
+                if self.prefill_chunk:
+                    # draft prompt KV streams in per chunk — same chunk
+                    # shape as the target tier, draft weights
+                    trash_row = jnp.full((1, self.max_pages),
+                                         PagePool.TRASH_PAGE, jnp.int32)
+                    dlogits, _ = self._draft_chunk_prefill(
+                        self.draft_params, self.draft_pool, trash_row,
+                        jnp.zeros((1, self.prefill_chunk), jnp.int32),
+                        jnp.asarray(0, jnp.int32),
+                        jnp.asarray(0, jnp.int32))
+                    jax.block_until_ready(dlogits)
+                else:
+                    for b in sorted({self._bucket(len(r.tokens))
+                                     for r in self.sched.pending}):
+                        _, dcache = self._draft_prefill(
+                            self.draft_params,
+                            {"tokens": jnp.zeros((1, b), jnp.int32)})
+                        trash = np.full(b // self.page_size,
+                                        PagePool.TRASH_PAGE, np.int32)
+                        jax.block_until_ready(self._page_write(
+                            self.draft_pool, dcache,
+                            jnp.asarray(trash))["k"])
                 out = self._draft_decode(
                     self.draft_params, self.draft_pool,
                     jnp.asarray(self.block_tables), jnp.asarray(self._tok),
-                    jnp.asarray(self._pos))
+                    jnp.asarray(self._pos),
+                    jnp.zeros(self.max_slots, jnp.int32))
                 jax.block_until_ready(out[0])
                 out = self._verify(
                     self.params, self.pool, jnp.asarray(self.block_tables),

@@ -53,6 +53,7 @@ class PagePool:
         self.swapped_out_pages = 0
         self.swapped_in_pages = 0
         self.forks = 0
+        self.trimmed_pages = 0
 
     @property
     def free_count(self) -> int:
@@ -110,6 +111,17 @@ class PagePool:
                 del self._refs[p]
                 self._free.append(p)
                 freed.append(p)
+        return freed
+
+    def trim(self, pages: list[int]) -> list[int]:
+        """Roll back speculatively grown pages (rejected draft-window
+        positions, or draft state dropped on preemption).  Identical to
+        :meth:`free` — refcounted, so trimming a sharer's reference on a
+        prefix page another sequence (or the trie) still maps never
+        recycles it — but tallied separately so the serving bench can
+        gate that rollbacks actually happened."""
+        freed = self.free(pages)
+        self.trimmed_pages += len(freed)
         return freed
 
     def fork(self, page: int) -> int:

@@ -12,9 +12,28 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import enum
 from typing import Any
 
 import numpy as np
+
+
+class SeqPhase(enum.Enum):
+    """Lifecycle of a sequence after admission — the single source of
+    truth the engine's phase pipeline branches on.
+
+    ``PREFILLING``: chunked prefill in flight, no first token yet — the
+    slot takes no decode/draft steps (its write cutoff is 0) and is
+    excluded from speculative windows.  ``DECODING``: emitting tokens;
+    eligible for decode steps, draft windows, and preemption.
+    ``SWAPPED``: preempted to host memory, queued for resume.  ``DONE``:
+    released (generation budget exhausted).
+    """
+
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    SWAPPED = "swapped"
+    DONE = "done"
 
 
 @dataclasses.dataclass
@@ -57,6 +76,7 @@ class SeqState:
     generated: list[int]
     pages: list[int]              # paged families: allocated page ids
     prefilled: int = 0            # prompt tokens whose KV is resident
+    phase: SeqPhase = SeqPhase.DECODING
     host_kv: Any = None           # swapped-out KV snapshot (host arrays)
     ready_wall: float = 0.0       # wall clock when first admissible
     done_wall: float = 0.0
@@ -71,8 +91,8 @@ class SeqState:
     @property
     def is_prefilling(self) -> bool:
         """Chunked prefill in flight: no first token yet, so the slot must
-        not decode (its block-table row is masked to trash)."""
-        return not self.generated
+        not decode (its per-row write cutoff is 0)."""
+        return self.phase is SeqPhase.PREFILLING
 
 
 class Scheduler:
@@ -94,14 +114,17 @@ class Scheduler:
 
     # -- admission queue ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Queue a request for admission, keeping arrival order."""
         bisect.insort(self._pending, req, key=lambda r: r.priority)
 
     @property
     def pending(self) -> tuple[Request, ...]:
+        """Requests awaiting admission, in (arrival, rid) order."""
         return tuple(self._pending)
 
     @property
     def swapped(self) -> tuple[SeqState, ...]:
+        """Preempted sequences awaiting resume, in priority order."""
         return tuple(self._swapped)
 
     def peek_ready(self, now_step: int) -> Request | None:
@@ -111,13 +134,14 @@ class Scheduler:
         return None
 
     def has_free_slot(self) -> bool:
+        """Whether an engine slot is free for admission/resume."""
         return bool(self._free_slots)
 
     def place(self, req: Request, *, pos: int, pages: list[int],
               ready_wall: float, first_token: int | None = None,
               prefilled: int = 0) -> SeqState:
         """Admit the queue head into a free slot.  ``first_token=None``
-        places the sequence in the prefilling state (chunked prefill will
+        places the sequence in the prefilling phase (chunked prefill will
         deliver the first token later)."""
         assert self._pending and self._pending[0].rid == req.rid
         self._pending.pop(0)
@@ -126,6 +150,8 @@ class Scheduler:
                        generated=[] if first_token is None
                        else [first_token],
                        pages=pages, prefilled=prefilled,
+                       phase=(SeqPhase.PREFILLING if first_token is None
+                              else SeqPhase.DECODING),
                        ready_wall=ready_wall)
         self.active[slot] = seq
         return seq
@@ -133,6 +159,7 @@ class Scheduler:
     def release(self, slot: int) -> SeqState:
         """Eviction on completion: free the slot, hand back the state."""
         seq = self.active.pop(slot)
+        seq.phase = SeqPhase.DONE
         self._free_slots.append(slot)
         return seq
 
@@ -141,7 +168,8 @@ class Scheduler:
         """Lowest-priority *decoding* sequence (youngest arrival, ties by
         rid).  Prefilling sequences are not preempted — their state is
         cheap to hold and they are about to produce their first token."""
-        victims = [s for s in self.active.values() if not s.is_prefilling]
+        victims = [s for s in self.active.values()
+                   if s.phase is SeqPhase.DECODING]
         if not victims:
             return None
         return max(victims, key=lambda s: s.req.priority)
@@ -150,6 +178,7 @@ class Scheduler:
         """Evict a running sequence to the swapped queue; its slot frees
         immediately.  The engine swaps the KV pages to host around this."""
         seq = self.active.pop(slot)
+        seq.phase = SeqPhase.SWAPPED
         self._free_slots.append(slot)
         bisect.insort(self._swapped, seq, key=lambda s: s.req.priority)
         return seq
@@ -162,10 +191,12 @@ class Scheduler:
         """Resume a swapped sequence into a free slot."""
         self._swapped.remove(seq)
         seq.slot = self._free_slots.pop()
+        seq.phase = SeqPhase.DECODING
         self.active[seq.slot] = seq
         return seq
 
     @property
     def done(self) -> bool:
+        """True when no work remains anywhere (pending/active/swapped)."""
         return (not self._pending and not self.active
                 and not self._swapped)

@@ -80,3 +80,51 @@ def shared_prefix_trace(
             arrival=i * arrival_gap,
         ))
     return reqs
+
+
+def stress_spec_trace(
+    n_requests: int,
+    prefix_len: int,
+    max_prompt: int,
+    max_new: int,
+    vocab: int,
+    seed: int = 0,
+    burst: int = 2,
+    rate: float = 0.5,
+) -> list[Request]:
+    """High-pressure trace for the fully composed engine: shared prompt
+    prefixes + bursty Poisson arrivals + mixed prompt lengths.
+
+    Requests land in bursts of ``burst`` simultaneous arrivals, with
+    Poisson(``rate``/step) gaps *between* bursts — bursts pile admission
+    pressure onto a small pool (forcing preemption mid-window) while the
+    shared ``prefix_len``-token prefix exercises the trie under
+    speculative rollback.  Prompt lengths are drawn uniformly from
+    ``[prefix_len + 1, max_prompt]`` (full mix, not the ``max//2`` floor
+    of :func:`poisson_trace` — short and long prompts must coexist in one
+    chunked-prefill schedule).  Deterministic for a given seed.
+    """
+    if not 0 < prefix_len < max_prompt:
+        raise ValueError(
+            f"need 0 < prefix_len < max_prompt, got {prefix_len} / "
+            f"{max_prompt}")
+    if burst < 1 or rate <= 0:
+        raise ValueError(f"need burst >= 1 and rate > 0, got {burst} / "
+                         f"{rate}")
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    reqs = []
+    arrival = 0
+    for i in range(n_requests):
+        if i and i % burst == 0:
+            arrival += max(1, int(rng.exponential(1.0 / rate)))
+        plen = int(rng.integers(prefix_len + 1, max_prompt + 1))
+        suffix = rng.integers(0, vocab, plen - prefix_len, dtype=np.int32)
+        gen = int(rng.integers(max(1, max_new // 2), max_new + 1))
+        reqs.append(Request(
+            rid=i,
+            tokens=np.concatenate([prefix, suffix]),
+            max_new=gen,
+            arrival=arrival,
+        ))
+    return reqs

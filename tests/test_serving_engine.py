@@ -7,6 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # CI installs hypothesis; bare
+    from _hypothesis_stub import given, settings, st  # noqa: E501  envs skip the property tests
 
 from repro import configs
 from repro.models import attention as attn
@@ -47,6 +51,85 @@ def test_page_pool_invariants():
     with pytest.raises(ValueError):
         pool.free([PagePool.TRASH_PAGE])  # trash page is never allocated
     assert pool.pages_for(9) == 3
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(4, 24),
+       st.lists(st.tuples(st.integers(0, 6), st.integers(0, 10**6)),
+                min_size=1, max_size=120))
+def test_page_pool_refcount_partition_property(n_pages, program):
+    """Random alloc/retain/free/trim/fork/swap programs against a model:
+    refcounts never go negative (every release on an unheld page raises
+    instead), the trash page is never handed out, and the free list plus
+    the live (refcount >= 1) set partitions the pool exactly — with the
+    host-swapped tally consistent with what actually left the device."""
+    pool = PagePool(n_pages, page_size=4)
+    refs: dict[int, int] = {}     # model: page id -> expected refcount
+    host = 0                      # model: pages swapped out, not yet back
+    for op, r in program:
+        live = sorted(refs)
+        if op == 0:                                 # alloc
+            k = r % (pool.free_count + 1)
+            for p in pool.alloc(k):
+                assert p != PagePool.TRASH_PAGE and p not in refs
+                refs[p] = 1
+        elif op == 1 and live:                      # retain (share)
+            p = live[r % len(live)]
+            pool.retain([p])
+            refs[p] += 1
+        elif op == 2 and live:                      # free one reference
+            p = live[r % len(live)]
+            freed = pool.free([p])
+            refs[p] -= 1
+            assert (freed == [p]) == (refs[p] == 0)
+            if refs[p] == 0:
+                del refs[p]
+        elif op == 3 and live:                      # spec rollback
+            p = live[r % len(live)]
+            before = pool.trimmed_pages
+            freed = pool.trim([p])
+            refs[p] -= 1
+            assert pool.trimmed_pages - before == len(freed)
+            if refs[p] == 0:
+                del refs[p]
+        elif op == 4:                               # copy-on-write fork
+            shared = [p for p in live if refs[p] >= 2]
+            if shared and pool.can_alloc(1):
+                p = shared[r % len(shared)]
+                new = pool.fork(p)
+                refs[p] -= 1
+                assert new not in refs and new != PagePool.TRASH_PAGE
+                refs[new] = 1
+        elif op == 5 and live:                      # preempt: swap out
+            p = live[r % len(live)]
+            before = pool.swapped_out_pages
+            freed = pool.swap_out([p])
+            refs[p] -= 1
+            assert (freed == [p]) == (refs[p] == 0)
+            assert pool.swapped_out_pages - before == len(freed)
+            host += len(freed)
+            if refs[p] == 0:
+                del refs[p]
+        elif op == 6 and host:                      # resume: swap in
+            k = min(host, r % (pool.free_count + 1))
+            for p in pool.swap_in(k):
+                assert p != PagePool.TRASH_PAGE and p not in refs
+                refs[p] = 1
+            host -= k
+        # invariants after every operation
+        assert PagePool.TRASH_PAGE not in pool.allocated
+        assert pool.allocated == frozenset(refs)
+        for p, c in refs.items():
+            assert c >= 1 and pool.ref_count(p) == c
+        # free + live partitions the usable pool (page 0 reserved)
+        assert pool.free_count + len(refs) == pool.n_pages - 1
+        assert pool.swapped_in_pages <= pool.swapped_out_pages
+    # a release on a page nobody holds must raise, never go negative
+    victim = next(iter(refs)) if refs else pool.alloc(1)[0]
+    pool.free([victim] * pool.ref_count(victim))
+    with pytest.raises(ValueError):
+        pool.free([victim])
+    assert pool.ref_count(victim) == 0
 
 
 def test_bucket_len():
@@ -602,6 +685,24 @@ def test_stacked_lead_bytes_accounting():
     p = formats.pack_tiled_csc(w)
     assert p.nbytes_dense() == 2 * 128 * 128 * 2
     assert p.nbytes_compressed() < p.nbytes_dense()
+
+
+def test_run_stats_keys_all_in_glossary():
+    """Every counter `Engine.run()` emits must be documented in the
+    docs/serving.md glossary — a new stat without a glossary row fails
+    here, not in a doc review six PRs later."""
+    doc = (pathlib.Path(__file__).resolve().parent.parent
+           / "docs" / "serving.md").read_text()
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    req = Request(rid=0, tokens=np.arange(1, 5, dtype=np.int32),
+                  max_new=2, arrival=0)
+    eng = Engine(model, params, max_slots=1, page_size=4, max_len=8)
+    res = eng.run([req])
+    missing = [k for k in res["stats"] if f"`{k}`" not in doc]
+    assert not missing, (
+        f"stats keys missing from the docs/serving.md glossary: {missing}")
 
 
 def test_example_serve_decode_imports():

@@ -196,13 +196,88 @@ def test_spec_defaults_off_zero_counters():
         assert res["tokens"][req.rid] == static_generate(model, params, req)
 
 
+# ---------------------------------------------------------------------------
+# composed phases: spec decode × chunked prefill × preemption × sharing
+# ---------------------------------------------------------------------------
+def test_spec_with_chunked_prefill_matches_static():
+    """spec_k + prefill_chunk compose: draft windows start only once a
+    slot finishes its chunk schedule, draft prompt KV is laid down chunk
+    by chunk, and accepted tokens stay bit-identical to the greedy
+    reference."""
+    cfg, model, params = _llama()
+    trace = poisson_trace(4, 0.7, max_prompt=10, max_new=6,
+                          vocab=cfg.vocab, seed=3)
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=24,
+                 spec_k=2, draft_params=params, prefill_chunk=4)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["completed"] == len(trace)
+    assert s["spec_windows"] > 0 and s["prefill_chunks"] > 0
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+
+
+def test_spec_with_preemption_trims_window_pages():
+    """spec_k + preemption on a starved pool: a victim holding
+    speculatively grown pages has them *trimmed* (rolled back), never
+    swapped — host KV round-trips only committed positions — and every
+    request still matches the reference bit-for-bit."""
+    cfg, model, params = _llama()
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i, tokens=rng.integers(1, cfg.vocab, size=9),
+                    max_new=8, arrival=0) for i in range(4)]
+    # lifetime = pages_for(9 + 8 - 1) = 4 pages/seq; 7 usable pages
+    # cannot hold two full sequences, so capacity-phase growth must
+    # preempt while spec windows are in flight.
+    eng = Engine(model, params, max_slots=2, page_size=4, max_len=20,
+                 n_pages=8, spec_k=2, draft_params=params, preemption=True)
+    res = eng.run(reqs)
+    s = res["stats"]
+    assert s["completed"] == len(reqs)
+    assert s["preemptions"] >= 1 and s["spec_windows"] > 0
+    for req in reqs:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+
+
+def test_all_features_composed_matches_static():
+    """The full composition — spec decode, chunked prefill, preemption,
+    prefix sharing — on a bursty shared-prefix trace against a starved
+    pool, with a cold (independently initialized) draft whose proposals
+    almost all reject: preemptions land mid-window, rejected pages roll
+    back while refcounted prefix pages stay trie-mapped, and the output
+    is still bit-identical with the pool *and* trie draining clean."""
+    from repro.serving import stress_spec_trace
+
+    cfg, model, params = _llama()
+    cold_draft = model.init(jax.random.PRNGKey(7))
+    trace = stress_spec_trace(6, prefix_len=8, max_prompt=14, max_new=8,
+                              vocab=cfg.vocab, seed=0, burst=2, rate=0.3)
+    eng = Engine(model, params, max_slots=3, page_size=4, max_len=24,
+                 n_pages=10, spec_k=2, draft_params=cold_draft,
+                 prefill_chunk=4, preemption=True, prefix_sharing=True)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["completed"] == len(trace)
+    assert s["spec_windows"] > 0 and s["prefill_chunks"] > 0
+    assert s["shared_prompt_pages"] >= 1
+    assert s["preemptions"] >= 1
+    assert s["spec_window_preemptions"] >= 1   # trim-not-swap path ran
+    assert s["spec_rollbacks"] >= 1
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(model, params, req)
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert not eng.page_pool.allocated
+    assert len(eng.trie) == 0
+
+
 def test_spec_validation_errors():
     cfg, model, params = _llama()
     with pytest.raises(ValueError, match="draft_params"):
         Engine(model, params, max_len=16, spec_k=2)
-    with pytest.raises(ValueError, match="speculative"):
-        Engine(model, params, max_len=16, spec_k=2, draft_params=params,
-               prefill_chunk=4)
     hybrid = build_model(configs.reduced(configs.get_config("zamba2-2.7b")))
     with pytest.raises(ValueError, match="paged KV"):
         Engine(hybrid, {}, max_len=16, spec_k=2, draft_params={})
@@ -230,6 +305,39 @@ def test_draft_plan_cost_model(monkeypatch, tmp_path):
     assert draft_plan.meta["tier"] == "draft"
     assert draft_plan.meta["spec_k"] == 4
     assert draft_plan.meta["density_choice"]["chosen"] == d
+
+
+def test_draft_qmode_codebook_beats_fp_at_equal_density(monkeypatch,
+                                                        tmp_path):
+    """Quantizing the draft tier's value storage enters the cost model:
+    at every candidate density a codebook draft stores fewer bytes than
+    the fp draft, so its cost ratio is strictly lower and its
+    tokens-per-cost strictly higher — and the chosen optimum can only
+    move toward *denser* (higher-acceptance) tiers, never sparser."""
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tc.json"))
+    from repro.runtime import planner
+
+    cfg, model, params = _llama(sod=True)
+    d_fp, diag_fp = planner.choose_draft_density(
+        params, cfg.sod, spec_k=4, cfg=cfg, m_values=(8, 1))
+    d_cb, diag_cb = planner.choose_draft_density(
+        params, cfg.sod, spec_k=4, cfg=cfg, m_values=(8, 1),
+        draft_qmode="codebook")
+    assert "draft_qmode" not in diag_fp
+    assert diag_cb["draft_qmode"] == "codebook"
+    for key, fp in diag_fp["candidates"].items():
+        cb = diag_cb["candidates"][key]
+        assert cb["cost_ratio"] < fp["cost_ratio"], key
+        assert cb["tokens_per_cost"] > fp["tokens_per_cost"], key
+    assert d_cb >= d_fp
+
+    # end-to-end: the built plan carries the quantized value storage
+    draft_cfg, draft_plan = planner.build_draft_plan(
+        params, cfg.sod, spec_k=4, cfg=cfg, m_values=(8, 1),
+        draft_qmode="codebook")
+    assert draft_cfg.qmode == "codebook"
+    assert draft_cfg.density == d_cb
+    assert draft_plan.meta["density_choice"]["draft_qmode"] == "codebook"
 
 
 def test_draft_plan_over_dense_target(monkeypatch, tmp_path):
