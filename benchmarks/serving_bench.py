@@ -41,7 +41,15 @@ Correctness gates (CI fails on any):
   must be strictly below the dense variant's;
 * **stress counters** (stress mode) — preemptions >= 1, swapped-in pages
   >= 1, shared prompt pages > 0, prompt pages allocated < sum of prompt
-  pages, prefill chunks > completed requests.
+  pages, prefill chunks > completed requests;
+* **trace identity** (smoke mode) — the same trace with a live
+  :class:`repro.obs.Tracer` vs the default no-op tracer must emit
+  bit-identical tokens (observability cannot perturb the engine).
+
+Every leg also records the per-request latency breakdown percentiles
+(queue wait / ttft / tpot, p50+p99) into ``BENCH_serving.json``, and
+``--trace out.trace.json`` writes a Chrome trace-event timeline of the
+whole run (summarize with ``scripts/trace_report.py``).
 
 Wall-clock throughput on CPU/interpret is NOT accelerator performance;
 the engine reports steady-state tokens/sec with compile/warmup excluded
@@ -64,7 +72,7 @@ import sys
 import jax
 
 from _junit import write_junit
-from repro import configs
+from repro import configs, obs
 from repro.core.sod import SoDConfig, sodify_params, tree_weight_bytes
 from repro.kernels import autotune
 from repro.models.model import build_model
@@ -79,6 +87,11 @@ from repro.serving import (
 )
 
 VARIANTS = ("dense", "tiled_csc", "block_csr")
+
+# per-request latency breakdown percentiles — emitted by every leg so the
+# queue/ttft/tpot tail is visible next to throughput in BENCH_serving.json
+LATENCY_KEYS = ("queue_wait_p50_s", "queue_wait_p99_s", "ttft_p50_s",
+                "ttft_p99_s", "tpot_p50_s", "tpot_p99_s")
 
 STRESS_COUNTERS = (
     "prefill_chunks", "preemptions", "swapped_out_pages",
@@ -157,7 +170,8 @@ def bench_variant(arch: str, mode: str, *, density: float, requests: int,
         "mismatches": mismatches,
         **{k: res["stats"][k] for k in
            ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
-            "generated_tokens", "p50_latency_s", "p99_latency_s")},
+            "generated_tokens", "p50_latency_s", "p99_latency_s")
+           + LATENCY_KEYS},
     }
     return rec
 
@@ -210,7 +224,8 @@ def stress_variant(arch: str, mode: str, *, density: float, requests: int,
         **{k: s[k] for k in STRESS_COUNTERS},
         **{k: s[k] for k in
            ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
-            "generated_tokens", "p50_latency_s", "p99_latency_s")},
+            "generated_tokens", "p50_latency_s", "p99_latency_s")
+           + LATENCY_KEYS},
     }
     # post-run allocator hygiene: every page back, nothing leaked
     rec["pool_clean"] = (not eng.page_pool.allocated
@@ -284,7 +299,8 @@ def spec_variant(arch: str, draft: str, *, density: float, spec_k: int,
            ("spec_windows", "draft_proposed", "draft_accepted",
             "acceptance_rate", "tokens_per_step",
             "warmup_s", "steady_s", "steady_tok_per_s", "completed",
-            "generated_tokens", "p50_latency_s", "p99_latency_s")},
+            "generated_tokens", "p50_latency_s", "p99_latency_s")
+           + LATENCY_KEYS},
     }
     rec["pool_clean"] = (not eng.page_pool.allocated
                          and eng.page_pool.free_count
@@ -362,13 +378,37 @@ def stress_spec_variant(arch: str, *, density: float, seed: int,
         **{k: s[k] for k in
            ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
             "generated_tokens", "tokens_per_step",
-            "p50_latency_s", "p99_latency_s")},
+            "p50_latency_s", "p99_latency_s") + LATENCY_KEYS},
     }
     rec["pool_clean"] = (not eng.page_pool.allocated
                          and eng.page_pool.free_count
                          == eng.page_pool.n_pages - 1
                          and len(eng.trie) == 0)
     return rec
+
+
+def trace_identity_case(arch: str, *, requests: int, max_prompt: int,
+                        max_new: int, max_slots: int, page_size: int,
+                        seed: int) -> dict:
+    """Gate: observability must not perturb the engine.
+
+    Replays the same seeded trace through two engines over the same
+    weights — one with the default no-op tracer, one with a live
+    :class:`repro.obs.Tracer` — and requires bit-identical tokens.
+    """
+    cfg = configs.reduced(configs.get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    max_len = bucket_len(max_prompt, page_size, cfg.attn_chunk) + max_new
+    outs = []
+    for tracer in (obs.NULL_TRACER, obs.Tracer()):
+        trace = poisson_trace(requests, 0.5, max_prompt=max_prompt,
+                              max_new=max_new, vocab=cfg.vocab, seed=seed)
+        eng = Engine(model, params, max_slots=max_slots,
+                     page_size=page_size, max_len=max_len, tracer=tracer)
+        outs.append(eng.run(trace)["tokens"])
+    return {"arch": cfg.name, "mode": "trace_identity",
+            "requests": requests, "match": outs[0] == outs[1]}
 
 
 def _stress_spec_gates(rec: dict) -> list[tuple[str, str | None]]:
@@ -512,6 +552,10 @@ def main(argv=None) -> int:
     ap.add_argument("--junit", default=None,
                     help="also write every gate as a junit XML testcase")
     ap.add_argument("--tuning-cache", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON timeline of the "
+                         "whole run (all legs) to PATH — open in Perfetto "
+                         "or summarize with scripts/trace_report.py")
     args = ap.parse_args(argv)
 
     if args.stress:
@@ -552,6 +596,11 @@ def main(argv=None) -> int:
         args.requests, args.prompt_len, args.gen = 4, 10, 6
         args.max_slots, args.page_size = 2, 4
     cache = autotune.install_cache(args.tuning_cache)
+    tracer = None
+    if args.trace:
+        # installed before any engine is built, so every leg's phase
+        # spans, request lifecycle, and kernel dispatch land in one file
+        tracer = obs.install_tracer(obs.Tracer())
 
     cases = []
     gates: list[tuple[str, str | None]] = []
@@ -634,6 +683,20 @@ def main(argv=None) -> int:
                     bytes_msg = (f"compressed bytes {c['weight_bytes']} "
                                  f"not below dense {dense_bytes}")
                 gates.append((f"{c['mode']}:compressed_bytes", bytes_msg))
+        if args.smoke:
+            # observability-perturbation gate: the same trace with a live
+            # tracer vs the no-op one must emit bit-identical tokens
+            rec = trace_identity_case(
+                args.arch, requests=args.requests,
+                max_prompt=args.prompt_len, max_new=args.gen,
+                max_slots=args.max_slots, page_size=args.page_size,
+                seed=args.seed)
+            cases.append(rec)
+            gates.append(
+                ("trace_identity:tokens", None if rec["match"] else
+                 "engine tokens differ between trace-enabled and "
+                 "trace-disabled runs"))
+            print(f"{rec['mode']:>10}  match={rec['match']!s:5}")
         failures = [f"{name}: {msg}" for name, msg in gates if msg]
 
     kind = "serving_bench"
@@ -653,6 +716,9 @@ def main(argv=None) -> int:
     path = pathlib.Path(args.output)
     path.write_text(json.dumps(out, indent=2))
     print(f"wrote {path}")
+    if tracer is not None:
+        print(f"wrote {tracer.export(args.trace)}")
+        obs.install_tracer(None)
     if args.junit:
         suite = kind
         print(f"wrote {write_junit(args.junit, suite, gates)}")

@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Summarize a Chrome trace-event file written by the ``--trace`` flags.
+
+Renders two views of a trace produced by ``repro.obs.Tracer.export``:
+
+* **self time per span** — per track, total and *self* time (duration
+  minus nested children) for every span name, so "where does a step
+  go?" is answerable without opening Perfetto;
+* **top slowest requests** — per-request slot residency summed over
+  ``cat="request"`` spans (a preempted request has several residencies).
+
+Usage:
+  python scripts/trace_report.py out.trace.json [--top 5] [--track engine]
+
+The file parses any trace-event JSON with ``B``/``E`` pairs nesting LIFO
+per ``tid``; unmatched events are skipped, not fatal.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_events(path: str | pathlib.Path) -> list[dict]:
+    """Read a trace file and return its ``traceEvents`` list.
+
+    Accepts both the object form (``{"traceEvents": [...]}``) and the
+    bare-array form of the trace-event format.
+    """
+    data = json.loads(pathlib.Path(path).read_text())
+    return data["traceEvents"] if isinstance(data, dict) else data
+
+
+def self_times(events: list[dict]) -> dict[tuple[str, str], dict]:
+    """Aggregate span durations per ``(tid, name)``.
+
+    Returns ``{(tid, name): {"count", "total_us", "self_us"}}`` where
+    ``self_us`` excludes time spent in nested child spans on the same
+    track.  Events must be in timestamp order per tid (as exported).
+    """
+    stacks: dict[str, list[list]] = {}   # tid -> [[name, ts, child_us], ...]
+    agg: dict[tuple[str, str], dict] = {}
+    for ev in events:
+        ph = ev.get("ph")
+        tid = str(ev.get("tid"))
+        if ph == "B":
+            stacks.setdefault(tid, []).append([ev["name"], ev["ts"], 0.0])
+        elif ph == "E":
+            stack = stacks.get(tid)
+            if not stack:
+                continue                 # unmatched E (truncated ring)
+            name, ts0, child = stack.pop()
+            dur = ev["ts"] - ts0
+            a = agg.setdefault((tid, name),
+                               {"count": 0, "total_us": 0.0, "self_us": 0.0})
+            a["count"] += 1
+            a["total_us"] += dur
+            a["self_us"] += dur - child
+            if stack:
+                stack[-1][2] += dur
+    return agg
+
+
+def request_totals(events: list[dict]) -> dict[str, dict]:
+    """Total slot residency per request from ``cat="request"`` spans.
+
+    Returns ``{name: {"total_us", "residencies"}}`` — a request that was
+    preempted and resumed contributes one residency per slot tenure.
+    """
+    open_: dict[tuple[str, str], float] = {}
+    totals: dict[str, dict] = {}
+    for ev in events:
+        if ev.get("cat") != "request":
+            continue
+        key = (str(ev.get("tid")), ev["name"])
+        if ev.get("ph") == "B":
+            open_[key] = ev["ts"]
+        elif ev.get("ph") == "E":
+            ts0 = open_.pop(key, None)
+            if ts0 is None:
+                continue
+            t = totals.setdefault(ev["name"],
+                                  {"total_us": 0.0, "residencies": 0})
+            t["total_us"] += ev["ts"] - ts0
+            t["residencies"] += 1
+    return totals
+
+
+def report(path: str | pathlib.Path, *, track: str | None = None,
+           top: int = 5) -> dict:
+    """Build the full report for a trace file as a JSON-ready dict."""
+    events = load_events(path)
+    spans = self_times(events)
+    if track is not None:
+        spans = {k: v for k, v in spans.items() if k[0] == track}
+    requests = request_totals(events)
+    slowest = sorted(requests.items(), key=lambda kv: -kv[1]["total_us"])
+    return {
+        "events": len(events),
+        "spans": {f"{tid}:{name}": v for (tid, name), v in spans.items()},
+        "slowest_requests": [
+            {"request": name, **v} for name, v in slowest[:top]],
+    }
+
+
+def main(argv=None) -> int:
+    """CLI entry point: print the self-time and slowest-request tables."""
+    ap = argparse.ArgumentParser(
+        description="summarize a repro --trace Chrome trace-event file")
+    ap.add_argument("trace", help="trace JSON path (from a --trace flag)")
+    ap.add_argument("--track", default=None,
+                    help="restrict the span table to one track "
+                         "(e.g. engine, spec, autotune)")
+    ap.add_argument("--top", type=int, default=5,
+                    help="slowest requests to list (default 5)")
+    args = ap.parse_args(argv)
+    try:
+        rep = report(args.trace, track=args.track, top=args.top)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"error: cannot parse {args.trace}: {e}", file=sys.stderr)
+        return 1
+
+    print(f"{args.trace}: {rep['events']} events")
+    print("\nself time per span"
+          + (f" (track={args.track})" if args.track else "") + ":")
+    print(f"  {'track:span':<32} {'count':>6} {'total_ms':>10} "
+          f"{'self_ms':>10}")
+    rows = sorted(rep["spans"].items(), key=lambda kv: -kv[1]["self_us"])
+    for name, v in rows:
+        print(f"  {name:<32} {v['count']:>6} {v['total_us'] / 1e3:>10.3f} "
+              f"{v['self_us'] / 1e3:>10.3f}")
+
+    if rep["slowest_requests"]:
+        print(f"\ntop {args.top} slowest requests (slot residency):")
+        print(f"  {'request':<16} {'total_ms':>10} {'residencies':>12}")
+        for r in rep["slowest_requests"]:
+            print(f"  {r['request']:<16} {r['total_us'] / 1e3:>10.3f} "
+                  f"{r['residencies']:>12}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

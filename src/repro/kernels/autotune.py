@@ -42,6 +42,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.plan import QVALUE_BITS
 from repro.kernels import registry
 from repro.kernels.registry import KernelImpl, ProblemKey
@@ -342,11 +343,14 @@ def tune(
             trials.append((impl, canon))
             seen.add(sig)
     best: tuple[float, KernelImpl, dict] | None = None
+    tracer = obs.get_tracer()
     for impl, params in trials:
-        us = float(measure(
-            lambda impl=impl, params=params: impl.run(
-                x, w, backend=key.backend, **params)
-        ))
+        with tracer.span(f"measure:{impl.name}", track="autotune",
+                         key=key_str(key), params=str(params)):
+            us = float(measure(
+                lambda impl=impl, params=params: impl.run(
+                    x, w, backend=key.backend, **params)
+            ))
         if trials_out is not None:
             trials_out.append((impl.name, dict(params), us))
         if best is None or us < best[0]:

@@ -34,6 +34,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.formats import BlockCSR, TiledCSC, fp8_dtype
 
 __all__ = [
@@ -52,6 +53,8 @@ __all__ = [
     "kernel_hash",
     "record_dispatches",
     "note_dispatch",
+    "dispatch_summary",
+    "dispatch_counts",
 ]
 
 BACKENDS = ("cpu", "gpu", "tpu", "interpret")
@@ -346,10 +349,17 @@ def record_dispatches(log: list | None = None):
 def note_dispatch(key: ProblemKey, impl: KernelImpl, params: dict,
                   source: str) -> None:
     """Record one dispatch decision into every active
-    :func:`log_dispatches` capture (no-op outside any)."""
+    :func:`log_dispatches` capture (no-op outside any) and, when tracing
+    is on, emit it as an instant event on the ``kernels`` trace track so
+    tuned-vs-prior dispatches are visible on the timeline."""
     for log in _DISPATCH_LOGS:
         log.append({"key": key, "impl": impl.name, "params": dict(params),
                     "source": source})
+    tr = obs.get_tracer()
+    if tr.enabled:
+        tr.instant(f"{impl.name}[{source}]", track="kernels", cat="dispatch",
+                   fmt=key.fmt, m=key.m, k=key.k, n=key.n,
+                   backend=key.backend, source=source)
 
 
 def amend_last_dispatch(key: ProblemKey, impl: KernelImpl,
@@ -376,6 +386,17 @@ def dispatch_summary(log: list) -> list[str]:
             seen[desc] = len(lines)
             lines.append(desc)
     return lines
+
+
+def dispatch_counts(log: list) -> dict[str, int]:
+    """Dispatch totals per ``impl[source]`` for a recorded log — the
+    compact tuned-cache-coverage view the serve/dryrun reports surface
+    (e.g. ``{"pallas_fused[tuned]": 12, "dense[prior]": 2}``)."""
+    out: dict[str, int] = {}
+    for rec in log:
+        k = f"{rec['impl']}[{rec['source']}]"
+        out[k] = out.get(k, 0) + 1
+    return out
 
 
 def kernel_hash() -> str:

@@ -254,7 +254,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         return rec
 
     # ---- 1) full-config compile (scan layers): THE dry-run gate ----------
-    t0 = time.time()
+    t0 = time.perf_counter()
     cfg, shape, mesh, jitted, args, plan = build_cell(
         arch, shape_name, multi_pod, sod_mode, density, scan_layers=True,
         plan_path=plan_path)
@@ -262,10 +262,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
 
     with mesh, kreg.record_dispatches() as dispatch_log:
         compiled = jitted.lower(*args).compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
+    rec["compile_s"] = round(time.perf_counter() - t0, 1)
     # which registry impls the traced step really ran (mesh fallbacks to
-    # the XLA oracle are visible here instead of silent)
+    # the XLA oracle are visible here instead of silent), plus compact
+    # per-impl×source totals for tuned-cache coverage at a glance
     rec["kernel_dispatch"] = kreg.dispatch_summary(dispatch_log)
+    rec["dispatch_counts"] = kreg.dispatch_counts(dispatch_log)
     if plan is not None:
         # the chosen per-layer plan, path → one-liner (format, tile, cap,
         # dispatch hint, SPMD partitioning)
@@ -290,7 +292,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         g_full = cfg.n_layers // g
         analyses = []
         for n_groups in (1, 2):
-            t0 = time.time()
+            t0 = time.perf_counter()
             # probes replay the same plan as the gated cell (a replayed
             # plan's concrete-observed caps differ from freshly built
             # abstract budgets; probe shapes must match the cell's)
@@ -301,7 +303,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
             with pmesh:
                 pcomp = pjit.lower(*pargs).compile()
             analyses.append(_analyze(pcomp))
-            rec[f"probe{n_groups}_compile_s"] = round(time.time() - t0, 1)
+            rec[f"probe{n_groups}_compile_s"] = round(time.perf_counter() - t0, 1)
             del pcomp
         ext = _extrapolate(analyses[0], analyses[1], 1, 2, g_full)
         rec["cost"] = ext["cost"]

@@ -12,16 +12,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core import plan as plan_mod
 from repro.core.sod import SoDConfig, sodify_params
 from repro.data.pipeline import SyntheticLMData
+from repro.kernels import registry as kreg
 from repro.launch import steps as steps_mod
 from repro.models.model import LM
 
@@ -90,6 +92,9 @@ def engine_main(args, model, params, plan, draft_params=None,
                           max_prompt=args.prompt_len, max_new=args.gen,
                           vocab=cfg.vocab, seed=args.seed)
     res = eng.run(trace)
+    if args.metrics_json:
+        pathlib.Path(args.metrics_json).write_text(
+            json.dumps(eng.metrics.snapshot(), indent=2))
     summary = {
         "engine": True, "arch": cfg.name, "requests": args.requests,
         "max_slots": args.max_slots,
@@ -182,7 +187,21 @@ def main(argv=None):
                          "the planner; default: global-config packing")
     ap.add_argument("--plan-json", default=None,
                     help="write the effective pack plan to this path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON timeline "
+                         "(engine phases, request lifecycle, kernel "
+                         "dispatch) to PATH — open in Perfetto or "
+                         "chrome://tracing; see docs/observability.md")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a counters/gauges/histograms metrics "
+                         "snapshot to PATH")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        # install before any instrumented object exists: the engine,
+        # scheduler, and kernel registry capture the global tracer
+        tracer = obs.install_tracer(obs.Tracer())
 
     if args.prefix_sharing and not args.prefill_chunk:
         ap.error("--prefix-sharing requires --prefill-chunk (prefill must "
@@ -264,14 +283,17 @@ def main(argv=None):
         print(f"pack plan -> {plan.save(args.plan_json)}")
 
     if args.engine:
-        summary = engine_main(args, model, params, plan,
-                              draft_params=draft_params,
-                              draft_plan=draft_plan)
+        with kreg.record_dispatches() as dispatch_log:
+            summary = engine_main(args, model, params, plan,
+                                  draft_params=draft_params,
+                                  draft_plan=draft_plan)
+        summary["kernel_dispatch"] = kreg.dispatch_counts(dispatch_log)
         if tune_stats is not None:
             summary["autotune"] = tune_stats
         if plan is not None:
             summary["plan_layers"] = len(plan)
             summary["plan_bytes"] = plan.compressed_bytes()
+        _finish_trace(tracer, args, summary)
         print(json.dumps(summary))
         return summary
 
@@ -279,36 +301,55 @@ def main(argv=None):
     prompt = {k: v for k, v in data.batch(0).items() if k != "targets"}
     max_len = args.prompt_len + args.gen
 
-    t0 = time.time()
-    last_logits, cache, pos0 = prefill_cache(model, params, prompt, max_len,
-                                             plan=plan)
-    prefill_s = time.time() - t0
+    tr = obs.get_tracer()
+    mets = obs.Metrics() if args.metrics_json else None
+    with kreg.record_dispatches() as dispatch_log:
+        t0 = time.perf_counter()
+        with tr.span("prefill", track="serve", batch=args.batch,
+                     prompt_len=args.prompt_len):
+            last_logits, cache, pos0 = prefill_cache(
+                model, params, prompt, max_len, plan=plan)
+        prefill_s = time.perf_counter() - t0
 
-    decode = jax.jit(steps_mod.make_decode_step(model, plan=plan))
-    tok = jnp.argmax(last_logits, axis=-1)
-    if cfg.family == "audio":
-        tok = tok.reshape(args.batch, 1, cfg.n_codebooks)
-    else:
-        tok = tok.reshape(args.batch, 1)
-    outs = []
-    # The first decode step pays the jit compile; timing it with the rest
-    # is why the historical tokens/sec numbers were so noisy.  Report it
-    # as warmup and the remaining steps as steady-state throughput.
-    warmup_s = steady_s = 0.0
-    t0 = time.time()
-    for t in range(args.gen):
-        nxt, logits, cache = decode(params, cache, tok,
-                                    jnp.asarray(pos0 + t, jnp.int32))
-        tok = nxt.reshape(tok.shape)
-        outs.append(nxt)
-        if t == 0:
-            jax.block_until_ready(nxt)
-            warmup_s = time.time() - t0
-            t0 = time.time()
-    if args.gen:
-        jax.block_until_ready(outs[-1])
-        steady_s = time.time() - t0 if args.gen > 1 else 0.0
-    decode_s = warmup_s + steady_s
+        decode = jax.jit(steps_mod.make_decode_step(model, plan=plan))
+        tok = jnp.argmax(last_logits, axis=-1)
+        if cfg.family == "audio":
+            tok = tok.reshape(args.batch, 1, cfg.n_codebooks)
+        else:
+            tok = tok.reshape(args.batch, 1)
+        outs = []
+        # The first decode step pays the jit compile; timing it with the
+        # rest is why the historical tokens/sec numbers were so noisy.
+        # Report it as warmup and the remaining steps as steady-state
+        # throughput.
+        warmup_s = steady_s = 0.0
+        t0 = time.perf_counter()
+        for t in range(args.gen):
+            ts = time.perf_counter()
+            with tr.span("decode_step", track="serve", t=t):
+                nxt, logits, cache = decode(params, cache, tok,
+                                            jnp.asarray(pos0 + t, jnp.int32))
+            tok = nxt.reshape(tok.shape)
+            outs.append(nxt)
+            if mets is not None:
+                # host-side dispatch time per step (the device compute is
+                # async past step 0); step 0 includes the jit compile
+                mets.observe("decode_step_s", time.perf_counter() - ts)
+            if t == 0:
+                jax.block_until_ready(nxt)
+                warmup_s = time.perf_counter() - t0
+                t0 = time.perf_counter()
+        if args.gen:
+            jax.block_until_ready(outs[-1])
+            steady_s = time.perf_counter() - t0 if args.gen > 1 else 0.0
+        decode_s = warmup_s + steady_s
+    if mets is not None:
+        mets.counter("generated_tokens", args.batch * args.gen)
+        mets.gauge("prefill_s", prefill_s)
+        mets.gauge("warmup_s", warmup_s)
+        mets.gauge("steady_s", steady_s)
+        pathlib.Path(args.metrics_json).write_text(
+            json.dumps(mets.snapshot(), indent=2))
 
     summary = {
         "arch": cfg.name, "batch": args.batch,
@@ -321,13 +362,25 @@ def main(argv=None):
         if args.gen > 1 else 0.0,
         "sample": _sample_tokens(outs),
     }
+    summary["kernel_dispatch"] = kreg.dispatch_counts(dispatch_log)
     if tune_stats is not None:
         summary["autotune"] = tune_stats
     if plan is not None:
         summary["plan_layers"] = len(plan)
         summary["plan_bytes"] = plan.compressed_bytes()
+    _finish_trace(tracer, args, summary)
     print(json.dumps(summary))
     return summary
+
+
+def _finish_trace(tracer, args, summary) -> None:
+    """Export the run's trace (when ``--trace``) and uninstall the global
+    tracer so later runs in the same process start clean."""
+    if tracer is None:
+        return
+    out = tracer.export(args.trace)
+    obs.install_tracer(None)
+    summary["trace"] = str(out)
 
 
 if __name__ == "__main__":

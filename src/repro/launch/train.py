@@ -17,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint import Checkpointer
 from repro.core.sod import SoDConfig, sodify_params
 from repro.data.pipeline import SyntheticLMData
@@ -65,7 +65,21 @@ def main(argv=None):
                          "the planner; default: global-config packing")
     ap.add_argument("--plan-json", default=None,
                     help="write the effective pack plan to this path")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON timeline "
+                         "(train steps, autotune measurements, kernel "
+                         "dispatch) to PATH — open in Perfetto or "
+                         "chrome://tracing; see docs/observability.md")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write a counters/gauges/histograms metrics "
+                         "snapshot to PATH")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        # install before any instrumented call (autotune, dispatch)
+        tracer = obs.install_tracer(obs.Tracer())
+    mets = obs.Metrics() if args.metrics_json else None
 
     cfg = configs.get_config(args.arch)
     if args.reduced:
@@ -145,11 +159,16 @@ def main(argv=None):
     )
 
     losses = []
-    t0 = time.time()
+    tr = obs.get_tracer()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
-        res = runner.run_step(step)
+        with tr.span("train_step", track="train", step=step):
+            res = runner.run_step(step)
         loss = float(res.metrics["loss"])
         losses.append(loss)
+        if mets is not None:
+            mets.counter("train_steps")
+            mets.observe("train_step_s", res.seconds)
         if step % args.log_every == 0 or step == args.steps - 1:
             toks = args.batch * args.seq
             print(f"step {step:5d}  loss {loss:7.4f}  "
@@ -157,7 +176,7 @@ def main(argv=None):
                   f"gnorm {float(res.metrics['grad_norm']):6.3f}  "
                   f"{toks / max(res.seconds, 1e-9):,.0f} tok/s", flush=True)
     ckpt.save(args.steps - 1, state, blocking=True)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     summary = {
         "arch": cfg.name, "steps": args.steps,
         "first_loss": losses[0], "last_loss": losses[-1],
@@ -167,6 +186,13 @@ def main(argv=None):
     if plan is not None:
         summary["plan_layers"] = len(plan)
         summary["plan_bytes"] = plan.compressed_bytes()
+    if mets is not None:
+        mets.gauge("wall_s", dt)
+        pathlib.Path(args.metrics_json).write_text(
+            json.dumps(mets.snapshot(), indent=2))
+    if tracer is not None:
+        summary["trace"] = str(tracer.export(args.trace))
+        obs.install_tracer(None)
     print(json.dumps(summary))
     return summary
 

@@ -99,7 +99,7 @@ class ResilientRunner:
         self.restarts = 0
 
     def run_step(self, step: int, *args) -> StepResult:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             metrics = self.step_fn(step, *args)
         except Exception:
@@ -111,8 +111,8 @@ class ResilientRunner:
                 raise
             self.load_state(self.ckpt.restore(last, self.state_of()))
             metrics = self.step_fn(step, *args)   # deterministic replay
-            return StepResult(step, metrics, time.time() - t0, True)
-        dt = time.time() - t0
+            return StepResult(step, metrics, time.perf_counter() - t0, True)
+        dt = time.perf_counter() - t0
         straggling = self.watchdog.observe(dt)
         if straggling and self.watchdog.strays >= self.fault.max_strays:
             # persistent straggler → force a checkpoint so a re-schedule

@@ -105,6 +105,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.launch import steps as steps_mod
 from repro.models import cache as cache_mod
 from repro.models.model import LM
@@ -176,7 +177,8 @@ class Engine:
                  n_pages: int | None = None, plan=None, mesh=None,
                  prefill_chunk: int | None = None, preemption: bool = False,
                  prefix_sharing: bool = False, spec_k: int = 0,
-                 draft_params: Params | None = None, draft_plan=None):
+                 draft_params: Params | None = None, draft_plan=None,
+                 tracer=None):
         cfg = model.cfg
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
@@ -215,13 +217,19 @@ class Engine:
         self.prefill_chunk = int(prefill_chunk) if prefill_chunk else None
         self.preemption = bool(preemption)
         self.prefix_sharing = bool(prefix_sharing)
-        self.sched = Scheduler(max_slots)
+        self.tracer = tracer if tracer is not None else obs.get_tracer()
+        self.metrics = obs.Metrics()
+        self.sched = Scheduler(max_slots, tracer=self.tracer)
         self._step_idx = 0
         self._submitted: list[Request] = []
         self._first_seen: dict[int, float] = {}
         self._finished: dict[int, SeqState] = {}
         self.preempt_log: list[int] = []      # rids in eviction order
-        self.stats: dict[str, float] = {
+        # the stats dict lives on the metrics registry's counter table —
+        # a dict-compatible view, so every existing key and access stays
+        # bit-identical while snapshots see the same numbers
+        self.stats = self.metrics.stats_view()
+        self.stats.update({
             "warmup_s": 0.0, "prefill_chunks": 0, "preemptions": 0,
             "swapped_out_pages": 0, "swapped_in_pages": 0, "cow_forks": 0,
             "shared_prompt_pages": 0, "prompt_pages_total": 0,
@@ -229,7 +237,7 @@ class Engine:
             "draft_proposed": 0, "draft_accepted": 0,
             "spec_rollbacks": 0, "spec_rollback_pages": 0,
             "spec_window_preemptions": 0,
-        }
+        })
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
 
@@ -465,6 +473,7 @@ class Engine:
         return self._post_admit(seq)
 
     def _post_admit(self, seq: SeqState) -> list[tuple[int, int]]:
+        seq.first_token_wall = time.perf_counter()
         self._pos[seq.slot] = seq.pos
         self._tok[seq.slot, 0] = seq.generated[-1]
         events = [(seq.req.rid, seq.generated[-1])]
@@ -475,6 +484,12 @@ class Engine:
     def _complete(self, slot: int) -> None:
         seq = self.sched.release(slot)
         seq.done_wall = time.perf_counter()
+        self.metrics.observe("queue_wait_s",
+                             seq.admitted_wall - seq.ready_wall)
+        self.metrics.observe("ttft_s", seq.first_token_wall - seq.ready_wall)
+        self.metrics.observe("tpot_s",
+                             (seq.done_wall - seq.first_token_wall)
+                             / max(len(seq.generated) - 1, 1))
         if self.paged:
             freed = self.page_pool.free(seq.pages)
             if self.trie is not None:
@@ -569,7 +584,7 @@ class Engine:
         first = int(jnp.argmax(logits[0, plen - 1 - start]))
         seq.generated.append(first)
         seq.pos = plen
-        seq.phase = SeqPhase.DECODING
+        self.sched.set_phase(seq, SeqPhase.DECODING)
         return self._post_admit(seq)
 
     # -- preemption / swapping ------------------------------------------------
@@ -737,24 +752,28 @@ class Engine:
         # backfills draft KV for position pos + k, which full acceptance
         # commits without another draft read of it this window — skipping
         # it leaves stale pad KV behind the next window's proposals
-        for j in range(k + 1):
-            nxt, _, self.draft_pool = self._draft_decode(
-                self.draft_params, self.draft_pool, btj,
-                jnp.asarray(d_tok), jnp.asarray(d_pos), valid)
-            if j == k:
-                break
-            col = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
-            drafts[:, j] = col
-            d_tok[:, 0] = col
-            d_pos += 1
+        with self.tracer.span("draft", track="spec", k=k,
+                              slots=len(decoding)):
+            for j in range(k + 1):
+                nxt, _, self.draft_pool = self._draft_decode(
+                    self.draft_params, self.draft_pool, btj,
+                    jnp.asarray(d_tok), jnp.asarray(d_pos), valid)
+                if j == k:
+                    break
+                col = np.asarray(nxt).reshape(self.max_slots, -1)[:, 0]
+                drafts[:, j] = col
+                d_tok[:, 0] = col
+                d_pos += 1
 
         v_tok = np.zeros((self.max_slots, k + 1), np.int32)
         v_tok[:, 0] = self._tok[:, 0]
         v_tok[:, 1:] = drafts
-        nxt, _, self.pool = self._verify(
-            self.params, self.pool, btj, jnp.asarray(v_tok),
-            jnp.asarray(self._pos), valid)
-        target = np.asarray(nxt).reshape(self.max_slots, k + 1)
+        with self.tracer.span("verify", track="spec", k=k,
+                              slots=len(decoding)):
+            nxt, _, self.pool = self._verify(
+                self.params, self.pool, btj, jnp.asarray(v_tok),
+                jnp.asarray(self._pos), valid)
+            target = np.asarray(nxt).reshape(self.max_slots, k + 1)
 
         events: list[tuple[int, int]] = []
         for slot, seq in list(decoding.items()):
@@ -868,20 +887,43 @@ class Engine:
         implementations — every combination of chunked prefill,
         preemption, prefix sharing, and speculative decoding runs through
         this one pipeline.  Returns (rid, token) emissions."""
-        events = self._phase_admission(self._step_idx)
-        if self.paged:
-            if self.prefill_chunk:
-                events += self._phase_prefill()
-            self._phase_capacity()
-        decoding = {slot: seq for slot, seq in self.sched.active.items()
-                    if seq.phase is SeqPhase.DECODING}
-        if decoding:
-            if self.spec_k:
-                events += self._spec_window(decoding)
-            else:
-                events += self._phase_decode(decoding)
+        tr = self.tracer
+        with tr.span("step", track="engine", step=self._step_idx):
+            with tr.span("admission", track="engine"):
+                events = self._phase_admission(self._step_idx)
+            if self.paged:
+                if self.prefill_chunk:
+                    with tr.span("prefill", track="engine"):
+                        events += self._phase_prefill()
+                with tr.span("capacity", track="engine"):
+                    self._phase_capacity()
+            decoding = {slot: seq for slot, seq in self.sched.active.items()
+                        if seq.phase is SeqPhase.DECODING}
+            if decoding:
+                if self.spec_k:
+                    with tr.span("spec_window", track="engine"):
+                        events += self._spec_window(decoding)
+                else:
+                    with tr.span("decode", track="engine"):
+                        events += self._phase_decode(decoding)
+            if self.paged:
+                self._sample_pool()
         self._step_idx += 1
         return events
+
+    def _sample_pool(self) -> None:
+        """Record page-pool occupancy (free/live/swapped) as gauges and,
+        when tracing, one sample on the ``pool`` counter track."""
+        occ = self.page_pool.occupancy()
+        swapped = sum(s.host_kv[1] for s in self.sched.swapped
+                      if s.host_kv is not None)
+        self.metrics.gauge("pool_free_pages", occ["free"])
+        self.metrics.gauge("pool_live_pages", occ["live"])
+        self.metrics.gauge("pool_swapped_pages", swapped)
+        if self.tracer.enabled:
+            self.tracer.counter(
+                "pool_pages", {"free": occ["free"], "live": occ["live"],
+                               "swapped": swapped}, track="pool")
 
     # -- warmup / run ---------------------------------------------------------
     def warmup(self) -> float:
@@ -891,6 +933,10 @@ class Engine:
         batched decode, COW page copies, swap gathers/scatters, and
         draft/verify windows — so steady-state throughput excludes
         compile time.  Results are discarded — no engine state changes."""
+        with self.tracer.span("warmup", track="engine"):
+            return self._warmup_impl()
+
+    def _warmup_impl(self) -> float:
         t0 = time.perf_counter()
         if self.paged:
             if self.prefill_chunk:
@@ -1013,8 +1059,16 @@ class Engine:
                     f"{max_steps} steps")
             n_tok += len(self.step())
         steady_s = time.perf_counter() - t0
-        lat = sorted(s.done_wall - s.ready_wall
-                     for s in self._finished.values())
+        fin = list(self._finished.values())
+        lat = sorted(s.done_wall - s.ready_wall for s in fin)
+        queue = [s.admitted_wall - s.ready_wall for s in fin]
+        ttft = [s.first_token_wall - s.ready_wall for s in fin]
+        tpot = [(s.done_wall - s.first_token_wall)
+                / max(len(s.generated) - 1, 1) for s in fin]
+
+        def _pct(vals: list[float], q: float) -> float:
+            return round(float(np.percentile(vals, q)), 6) if vals else 0.0
+
         self.stats.update({
             "steps": self._step_idx - start,
             "completed": len(self._finished),
@@ -1030,6 +1084,12 @@ class Engine:
             if lat else 0.0,
             "p99_latency_s": round(float(np.percentile(lat, 99)), 4)
             if lat else 0.0,
+            "queue_wait_p50_s": _pct(queue, 50),
+            "queue_wait_p99_s": _pct(queue, 99),
+            "ttft_p50_s": _pct(ttft, 50),
+            "ttft_p99_s": _pct(ttft, 99),
+            "tpot_p50_s": _pct(tpot, 50),
+            "tpot_p99_s": _pct(tpot, 99),
         })
         return {"tokens": {rid: list(s.generated)
                            for rid, s in sorted(self._finished.items())},

@@ -69,6 +69,14 @@ class PagePool:
         """Holders of ``page`` (0 = free); >1 means prefix-shared."""
         return self._refs.get(page, 0)
 
+    def occupancy(self) -> dict[str, int]:
+        """Free vs live (refcount >= 1) page counts — one gauge sample.
+
+        The engine records this each step onto the ``pool`` counter track
+        and the ``pool_free_pages`` / ``pool_live_pages`` gauges.
+        """
+        return {"free": len(self._free), "live": len(self._refs)}
+
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` cache positions."""
         return -(-int(n_tokens) // self.page_size)

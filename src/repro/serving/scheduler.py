@@ -13,9 +13,12 @@ from __future__ import annotations
 import bisect
 import dataclasses
 import enum
+import time
 from typing import Any
 
 import numpy as np
+
+from repro import obs
 
 
 class SeqPhase(enum.Enum):
@@ -79,6 +82,8 @@ class SeqState:
     phase: SeqPhase = SeqPhase.DECODING
     host_kv: Any = None           # swapped-out KV snapshot (host arrays)
     ready_wall: float = 0.0       # wall clock when first admissible
+    admitted_wall: float = 0.0    # wall clock when placed into a slot
+    first_token_wall: float = 0.0  # wall clock when the first token exists
     done_wall: float = 0.0
     spec_proposed: int = 0        # draft tokens proposed for this sequence
     spec_accepted: int = 0        # draft tokens that became emitted tokens
@@ -105,12 +110,21 @@ class Scheduler:
     resume ahead of any pending newcomer (they were admitted first).
     """
 
-    def __init__(self, max_slots: int):
+    def __init__(self, max_slots: int, tracer=None):
         self.max_slots = int(max_slots)
+        self.tracer = tracer if tracer is not None else obs.get_tracer()
         self._pending: list[Request] = []      # sorted by (arrival, rid)
         self.active: dict[int, SeqState] = {}  # slot -> running sequence
         self._swapped: list[SeqState] = []     # sorted by priority
         self._free_slots: list[int] = list(range(max_slots))[::-1]
+
+    def set_phase(self, seq: SeqState, phase: SeqPhase) -> None:
+        """Move ``seq`` to ``phase``, emitting the transition as an
+        instant event on the ``lifecycle`` trace track."""
+        seq.phase = phase
+        self.tracer.instant(f"rid{seq.req.rid}:{phase.value}",
+                            track="lifecycle", cat="phase",
+                            rid=seq.req.rid, slot=seq.slot)
 
     # -- admission queue ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -153,13 +167,19 @@ class Scheduler:
                        phase=(SeqPhase.PREFILLING if first_token is None
                               else SeqPhase.DECODING),
                        ready_wall=ready_wall)
+        seq.admitted_wall = time.perf_counter()
         self.active[slot] = seq
+        self.tracer.begin(f"req{req.rid}", track=f"slot{slot}",
+                          cat="request", rid=req.rid)
+        self.set_phase(seq, seq.phase)
         return seq
 
     def release(self, slot: int) -> SeqState:
         """Eviction on completion: free the slot, hand back the state."""
         seq = self.active.pop(slot)
-        seq.phase = SeqPhase.DONE
+        self.tracer.end(f"req{seq.req.rid}", track=f"slot{slot}",
+                        cat="request")
+        self.set_phase(seq, SeqPhase.DONE)
         self._free_slots.append(slot)
         return seq
 
@@ -178,7 +198,9 @@ class Scheduler:
         """Evict a running sequence to the swapped queue; its slot frees
         immediately.  The engine swaps the KV pages to host around this."""
         seq = self.active.pop(slot)
-        seq.phase = SeqPhase.SWAPPED
+        self.tracer.end(f"req{seq.req.rid}", track=f"slot{slot}",
+                        cat="request")
+        self.set_phase(seq, SeqPhase.SWAPPED)
         self._free_slots.append(slot)
         bisect.insort(self._swapped, seq, key=lambda s: s.req.priority)
         return seq
@@ -191,8 +213,10 @@ class Scheduler:
         """Resume a swapped sequence into a free slot."""
         self._swapped.remove(seq)
         seq.slot = self._free_slots.pop()
-        seq.phase = SeqPhase.DECODING
         self.active[seq.slot] = seq
+        self.tracer.begin(f"req{seq.req.rid}", track=f"slot{seq.slot}",
+                          cat="request", rid=seq.req.rid, resumed=True)
+        self.set_phase(seq, SeqPhase.DECODING)
         return seq
 
     @property
