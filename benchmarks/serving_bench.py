@@ -15,7 +15,13 @@ XML of every gate for the CI artifact trail):
   actually fired: at least one preemption/swap-in cycle, prefix pages
   reused (pages allocated for prompts strictly below the sum of prompt
   pages), and multi-chunk prefill, with tokens still bit-identical to
-  the static reference.
+  the static reference.  A third stress record replays two *identical*
+  epochs of a repeated system prompt through the persistent multi-tier
+  prefix cache (tiny HBM budget + disk spill dir) and gates that the
+  second epoch prefills **zero fresh pages**, that the host tier actually
+  served promotions, that per-tier byte counters land in the record, and
+  that pool + trie + cache tiers drain clean after a flush
+  (``docs/caching.md``).
 * **spec** (``--spec``): sparsity-tiered speculative decoding — a
   self-draft leg (gates acceptance_rate > 0 and tokens_per_step > 1)
   and a cost-model sparse-draft leg (gates the draft tier's bytes below
@@ -68,6 +74,7 @@ import argparse
 import json
 import pathlib
 import sys
+import tempfile
 
 import jax
 
@@ -81,6 +88,7 @@ from repro.serving import (
     Engine,
     bucket_len,
     poisson_trace,
+    repeated_prompt_trace,
     shared_prefix_trace,
     static_generate,
     stress_spec_trace,
@@ -102,6 +110,15 @@ STRESS_COUNTERS = (
 STRESS_SPEC_COUNTERS = STRESS_COUNTERS + (
     "spec_windows", "draft_proposed", "draft_accepted", "acceptance_rate",
     "spec_rollbacks", "spec_rollback_pages", "spec_window_preemptions",
+)
+
+# persistent prefix-cache counters — every name must have a glossary row
+# in docs/serving.md (gated by tests/test_prefix_cache.py)
+CACHE_COUNTERS = (
+    "prefix_hits", "prefix_misses", "prefix_hbm_hits", "prefix_host_hits",
+    "prefix_disk_hits", "prefix_restored_pages", "prefix_demotions_host",
+    "prefix_demotions_disk", "reprefill_tokens_saved", "prefix_bytes_hbm",
+    "prefix_bytes_host", "prefix_bytes_disk",
 )
 
 
@@ -232,6 +249,90 @@ def stress_variant(arch: str, mode: str, *, density: float, requests: int,
                          and eng.page_pool.free_count
                          == eng.page_pool.n_pages - 1
                          and (eng.trie is None or len(eng.trie) == 0))
+    return rec
+
+
+def cache_variant(arch: str, *, density: float, seed: int,
+                  cache=None) -> dict:
+    """Two identical epochs of a repeated system prompt through the
+    persistent multi-tier prefix cache.
+
+    Epoch 1 prefills and (on completion) retains each prompt's pages in
+    the cache; the HBM budget is squeezed to 3 pages so retention demotes
+    most of them to the host tier, with write-through spill to a disk
+    dir.  Epoch 2 replays the *same* prompts under fresh request ids —
+    every prompt page must come back from a trie hold or a host/disk
+    promotion, so the fresh-prefill page counter must not move at all
+    (the ``epoch2_fresh_pages == 0`` gate).  Tokens stay bit-identical to
+    the static reference in both epochs, and after
+    :meth:`~repro.serving.engine.Engine.flush_prefix_cache` the pool,
+    trie, and HBM/host tiers must drain clean (``docs/caching.md``).
+    """
+    requests, prefix_len, suffix_len, max_new = 3, 8, 4, 4
+    max_slots, page_size, prefill_chunk, n_pages = 2, 4, 4, 12
+    budget_pages = 3
+    cfg, model, params, plan = _build_packed(
+        arch, "dense", density=density, seed=seed,
+        m_values=(prefill_chunk, max_slots), cache=cache)
+    if cfg.family in ("hybrid", "ssm"):
+        raise ValueError("the prefix cache rides the paged-KV pool; "
+                         f"{cfg.family!r} keeps O(1) slot state")
+    # probe one tiny pool for the per-page byte size so the budget can be
+    # expressed in pages — same formula the engine uses internally
+    probe = model.init_paged_pool(2, page_size)
+    k = probe["k"]
+    page_nbytes = 2 * (k.size // k.shape[2]) * k.dtype.itemsize
+    max_len = prefix_len + suffix_len + max_new
+
+    epochs = [repeated_prompt_trace(
+        requests, prefix_len=prefix_len, suffix_len=suffix_len,
+        max_new=max_new, vocab=cfg.vocab, page_size=page_size, seed=seed,
+        arrival_gap=2, rid_base=e * requests) for e in range(2)]
+    with tempfile.TemporaryDirectory() as tmp:
+        eng = Engine(model, params, max_slots=max_slots,
+                     page_size=page_size, max_len=max_len, n_pages=n_pages,
+                     plan=plan, prefill_chunk=prefill_chunk,
+                     prefix_sharing=True,
+                     prefix_cache_budget=budget_pages * page_nbytes,
+                     prefix_cache_dir=tmp)
+        tokens: dict[int, list[int]] = {}
+        fresh = []
+        for trace in epochs:
+            res = eng.run(trace)
+            tokens.update(res["tokens"])
+            fresh.append(res["stats"]["prompt_pages_fresh"])
+        s = dict(res["stats"])
+        eng.flush_prefix_cache()
+        pool_clean = (not eng.page_pool.allocated
+                      and eng.page_pool.free_count
+                      == eng.page_pool.n_pages - 1
+                      and len(eng.trie) == 0
+                      and eng.prefix_cache.bytes_by_tier()["hbm"] == 0)
+
+    mismatches = []
+    for req in epochs[0] + epochs[1]:
+        ref = static_generate(model, params, req, plan=plan)
+        if tokens[req.rid] != ref:
+            mismatches.append({"rid": req.rid, "ref": ref,
+                               "engine": tokens[req.rid]})
+    rec = {
+        "arch": cfg.name, "mode": "prefix_cache", "stress": True,
+        "density": 1.0, "requests": 2 * requests, "max_slots": max_slots,
+        "page_size": page_size, "n_pages": n_pages,
+        "prefill_chunk": prefill_chunk, "prefix_len": prefix_len,
+        "cache_budget_pages": budget_pages,
+        "cache_budget_bytes": budget_pages * page_nbytes,
+        "match_static": not mismatches,
+        "mismatches": mismatches,
+        "epoch1_fresh_pages": fresh[0],
+        "epoch2_fresh_pages": fresh[1] - fresh[0],
+        "pool_clean": pool_clean,
+        **{k: s[k] for k in CACHE_COUNTERS},
+        **{k: s[k] for k in
+           ("warmup_s", "steady_s", "steady_tok_per_s", "completed",
+            "generated_tokens", "p50_latency_s", "p99_latency_s")
+           + LATENCY_KEYS},
+    }
     return rec
 
 
@@ -520,6 +621,45 @@ def _stress_gates(rec: dict) -> list[tuple[str, str | None]]:
     ]
 
 
+def _cache_gates(rec: dict) -> list[tuple[str, str | None]]:
+    """(gate name, failure message or None) for the prefix-cache record:
+    the second epoch must re-prefill nothing, and every tier must have
+    actually carried pages."""
+    m = rec["mode"]
+
+    def gate(name, ok, msg):
+        return (f"{m}:{name}", None if ok else msg)
+
+    return [
+        gate("match_static", rec["match_static"],
+             f"cached-engine tokens diverge from static reference "
+             f"({len(rec['mismatches'])} reqs)"),
+        gate("completed", rec["completed"] == rec["requests"],
+             f"only {rec['completed']}/{rec['requests']} completed"),
+        gate("epoch2_zero_fresh", rec["epoch2_fresh_pages"] == 0,
+             f"second epoch prefilled {rec['epoch2_fresh_pages']} fresh "
+             "pages — the repeated prompt must resolve entirely from the "
+             "cache"),
+        gate("cache_hit", rec["prefix_hits"] >= 1,
+             "no admission ever hit the cache"),
+        gate("host_tier", rec["prefix_host_hits"] >= 1,
+             f"host tier never served a promotion (host_hits="
+             f"{rec['prefix_host_hits']}) — the HBM budget squeeze "
+             "did not demote"),
+        gate("disk_tier",
+             rec["prefix_demotions_disk"] >= 1
+             and rec["prefix_bytes_disk"] > 0,
+             f"disk tier never spilled (demotions_disk="
+             f"{rec['prefix_demotions_disk']}, bytes_disk="
+             f"{rec['prefix_bytes_disk']})"),
+        gate("tokens_saved", rec["reprefill_tokens_saved"] > 0,
+             "cache served pages but saved no re-prefill tokens"),
+        gate("pool_clean", rec["pool_clean"],
+             "pages, trie entries, or HBM tier bytes leaked after "
+             "flush_prefix_cache() drain"),
+    ]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b",
@@ -625,6 +765,19 @@ def main(argv=None) -> int:
                   f"forks={rec['cow_forks']}  "
                   f"pages={rec['prompt_pages_fresh']}/"
                   f"{rec['prompt_pages_total']}")
+        # third record: the persistent multi-tier prefix cache replaying
+        # two identical epochs — second epoch must prefill zero fresh
+        # pages, with the host and disk tiers both demonstrably carrying
+        rec = cache_variant(args.arch, density=args.density,
+                            seed=args.seed, cache=cache)
+        cases.append(rec)
+        gates += _cache_gates(rec)
+        print(f"{rec['mode']:>12}  match={rec['match_static']!s:5}  "
+              f"epoch2_fresh={rec['epoch2_fresh_pages']}  "
+              f"hits={rec['prefix_hits']}  "
+              f"host={rec['prefix_host_hits']}  "
+              f"disk_demote={rec['prefix_demotions_disk']}  "
+              f"saved_tok={rec['reprefill_tokens_saved']}")
         failures = [f"{name}: {msg}" for name, msg in gates if msg]
     elif args.stress_spec:
         rec = stress_spec_variant(args.arch, density=args.density,

@@ -87,7 +87,9 @@ def engine_main(args, model, params, plan, draft_params=None,
                  preemption=args.preemption,
                  prefix_sharing=args.prefix_sharing,
                  spec_k=args.spec_decode,
-                 draft_params=draft_params, draft_plan=draft_plan)
+                 draft_params=draft_params, draft_plan=draft_plan,
+                 prefix_cache_budget=args.prefix_cache_budget,
+                 prefix_cache_dir=args.prefix_cache_dir)
     trace = poisson_trace(args.requests, args.arrival_rate,
                           max_prompt=args.prompt_len, max_new=args.gen,
                           vocab=cfg.vocab, seed=args.seed)
@@ -103,6 +105,8 @@ def engine_main(args, model, params, plan, draft_params=None,
         "preemption": args.preemption,
         "prefix_sharing": args.prefix_sharing,
         "spec_decode": args.spec_decode,
+        "prefix_cache_budget": args.prefix_cache_budget,
+        "prefix_cache_dir": args.prefix_cache_dir,
         "sample": res["tokens"][trace[0].rid][:8],
         **res["stats"],
     }
@@ -160,6 +164,18 @@ def main(argv=None):
                     help="engine mode: map identical prompt prefixes onto "
                          "refcounted KV pages (copy-on-write); requires "
                          "--prefill-chunk")
+    ap.add_argument("--prefix-cache-budget", type=int, default=0,
+                    metavar="BYTES",
+                    help="engine mode: keep completed prompts' prefix "
+                         "pages alive in HBM under this LRU byte budget, "
+                         "demoting cold pages to host memory instead of "
+                         "freeing them; requires --prefix-sharing "
+                         "(0 with --prefix-cache-dir: pure host/disk "
+                         "cache, nothing stays HBM-resident)")
+    ap.add_argument("--prefix-cache-dir", default=None, metavar="DIR",
+                    help="engine mode: spill demoted prefix pages to "
+                         "DIR/<token-hash>.npz so the cache survives "
+                         "engine restarts; requires --prefix-sharing")
     ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
                     help="engine mode: speculative decoding — a second, "
                          "aggressively sparse pack of the same weights "
@@ -206,6 +222,10 @@ def main(argv=None):
     if args.prefix_sharing and not args.prefill_chunk:
         ap.error("--prefix-sharing requires --prefill-chunk (prefill must "
                  "be able to start mid-prompt to skip shared positions)")
+    if ((args.prefix_cache_budget or args.prefix_cache_dir)
+            and not args.prefix_sharing):
+        ap.error("--prefix-cache-budget/--prefix-cache-dir require "
+                 "--prefix-sharing (the cache retains trie-held pages)")
     if args.spec_decode and not args.engine:
         ap.error("--spec-decode requires --engine (draft/verify windows "
                  "run against the paged KV cache)")

@@ -1,14 +1,17 @@
 """Continuous-batching serving engine (paged KV cache + request
-scheduler, with chunked prefill, preemption/page swapping, and
-copy-on-write prefix sharing) over Sparse-on-Dense packed weights."""
+scheduler, with chunked prefill, preemption/page swapping, copy-on-write
+prefix sharing, and a persistent multi-tier prefix cache) over
+Sparse-on-Dense packed weights."""
 from repro.serving.engine import Engine, bucket_len, static_generate
 from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler, SeqState
-from repro.serving.trace import (poisson_trace, shared_prefix_trace,
-                                 stress_spec_trace)
+from repro.serving.trace import (poisson_trace, repeated_prompt_trace,
+                                 shared_prefix_trace, stress_spec_trace)
 
 __all__ = [
-    "Engine", "PagePool", "PoolExhausted", "PrefixTrie", "Request",
-    "Scheduler", "SeqState", "bucket_len", "poisson_trace",
-    "shared_prefix_trace", "static_generate", "stress_spec_trace",
+    "Engine", "PagePool", "PoolExhausted", "PrefixCache", "PrefixTrie",
+    "Request", "Scheduler", "SeqState", "bucket_len", "poisson_trace",
+    "repeated_prompt_trace", "shared_prefix_trace", "static_generate",
+    "stress_spec_trace",
 ]

@@ -81,6 +81,20 @@ gating ``ValueError``\\s.  The composition rules the pipeline enforces:
   rollback on a prefix-sharing sequence can never free a page the trie
   still maps.
 
+One retention layer sits on top: the **persistent multi-tier prefix
+cache** (``prefix_cache_budget`` / ``prefix_cache_dir``, requires prefix
+sharing).  Completed prompts' trie-held pages stay alive past sequence
+completion under an LRU byte budget (HBM tier); cold pages demote to
+host memory through the same per-page gather path preemption uses, and
+optionally spill to disk keyed by token-prefix hash so the cache
+survives engine restarts.  Admission promotes lower-tier chunks back
+into fresh pages (skipping their re-prefill entirely), counts
+cache-retained-but-sole-referenced pages as reclaimable capacity, and
+demotes them on demand under pool pressure — so retention can never
+starve admission.  See :mod:`repro.serving.prefix_cache` and
+``docs/caching.md``.  With the cache off, every code path is
+byte-identical to the cache-less engine.
+
 Greedy tokens are bit-identical to per-request static-batch serve
 (:func:`static_generate`) under any schedule because every per-row
 computation is batch-row-independent and padding/masked positions
@@ -110,6 +124,7 @@ from repro.launch import steps as steps_mod
 from repro.models import cache as cache_mod
 from repro.models.model import LM
 from repro.serving.pool import PagePool, PoolExhausted, PrefixTrie
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import Request, Scheduler, SeqPhase, SeqState
 
 Params = dict[str, Any]
@@ -168,6 +183,19 @@ def _pool_scatter_pages(pool: Params, kv: Params, page_ids):
             "v": pool["v"].at[:, :, page_ids].set(kv["v"])}
 
 
+def _pool_get_page(pool: Params, page_id):
+    """Cache demotion: slice one page out of every layer's pool —
+    (G, P, page, KV, hd) per side."""
+    return {"k": pool["k"][:, :, page_id], "v": pool["v"][:, :, page_id]}
+
+
+def _pool_set_page(pool: Params, kv: Params, page_id):
+    """Cache promotion: write one host-restored page's KV back into a
+    freshly allocated page of every layer's pool."""
+    return {"k": pool["k"].at[:, :, page_id].set(kv["k"]),
+            "v": pool["v"].at[:, :, page_id].set(kv["v"])}
+
+
 class Engine:
     """Continuous-batching engine: paged KV pool + request scheduler +
     ragged batched decode over one shared (optionally SoD-packed) model."""
@@ -178,7 +206,8 @@ class Engine:
                  prefill_chunk: int | None = None, preemption: bool = False,
                  prefix_sharing: bool = False, spec_k: int = 0,
                  draft_params: Params | None = None, draft_plan=None,
-                 tracer=None):
+                 prefix_cache_budget: int = 0,
+                 prefix_cache_dir: str | None = None, tracer=None):
         cfg = model.cfg
         if cfg.family in ("vlm", "audio"):
             raise NotImplementedError(
@@ -190,16 +219,21 @@ class Engine:
         self.max_slots = int(max_slots)
         self.max_len = int(max_len)
         self.paged = cfg.family not in ("hybrid", "ssm")
-        if not self.paged and (prefill_chunk or preemption or prefix_sharing):
+        if not self.paged and (prefill_chunk or preemption or prefix_sharing
+                               or prefix_cache_budget or prefix_cache_dir):
             raise ValueError(
                 f"family {cfg.family!r} keeps O(1) recurrent state per slot; "
-                "chunked prefill / preemption / prefix sharing are paged-KV "
-                "scheduler features")
+                "chunked prefill / preemption / prefix sharing / the prefix "
+                "cache are paged-KV scheduler features")
         if prefix_sharing and not prefill_chunk:
             raise ValueError(
                 "prefix sharing needs chunked prefill (prefill_chunk=...): "
                 "admission skips shared positions, so prefill must be able "
                 "to start mid-prompt")
+        if (prefix_cache_budget or prefix_cache_dir) and not prefix_sharing:
+            raise ValueError(
+                "the prefix cache retains trie-held prompt pages: pass "
+                "prefix_sharing=True (and prefill_chunk=...) to enable it")
         self.spec_k = int(spec_k or 0)
         if self.spec_k:
             if not self.paged:
@@ -237,9 +271,16 @@ class Engine:
             "draft_proposed": 0, "draft_accepted": 0,
             "spec_rollbacks": 0, "spec_rollback_pages": 0,
             "spec_window_preemptions": 0,
+            "prefix_hits": 0, "prefix_misses": 0, "prefix_hbm_hits": 0,
+            "prefix_host_hits": 0, "prefix_disk_hits": 0,
+            "prefix_restored_pages": 0, "prefix_demotions_host": 0,
+            "prefix_demotions_disk": 0, "reprefill_tokens_saved": 0,
+            "prefix_bytes_hbm": 0, "prefix_bytes_host": 0,
+            "prefix_bytes_disk": 0,
         })
         self._pos = np.zeros(self.max_slots, np.int32)
         self._tok = np.zeros((self.max_slots, 1), np.int32)
+        self.prefix_cache: PrefixCache | None = None
 
         if self.paged:
             self.page_size = int(page_size)
@@ -255,6 +296,17 @@ class Engine:
             self.page_pool = PagePool(n_pages, self.page_size)
             self.trie = PrefixTrie(self.page_size) if prefix_sharing else None
             self.pool = model.init_paged_pool(n_pages, self.page_size)
+            if prefix_cache_budget or prefix_cache_dir:
+                k = self.pool["k"]
+                page_nbytes = 2 * (k.size // k.shape[2]) * k.dtype.itemsize
+                self._page_get = jax.jit(_pool_get_page)
+                self._page_set = jax.jit(_pool_set_page)
+                self.prefix_cache = PrefixCache(
+                    self.page_pool, page_nbytes,
+                    budget_bytes=int(prefix_cache_budget or 0),
+                    cache_dir=prefix_cache_dir,
+                    gather=self._gather_page_host,
+                    on_page_freed=self.trie.drop)
             self.block_tables = np.full(
                 (self.max_slots, self.max_pages), PagePool.TRASH_PAGE,
                 np.int32)
@@ -366,27 +418,48 @@ class Engine:
                     n += 1
         return n
 
-    def _share_plan(self, req: Request) -> tuple[list[int], int, int]:
-        """Prefix-trie lookup for a prompt: (shared page ids, prefill
-        start position, fresh pages needed now).  A fully shared
-        page-aligned prompt still recomputes its last token (the engine
-        needs its logits), whose write copy-on-write-forks the final
-        shared page — budget one extra page for that."""
+    def _share_plan(self, req: Request,
+                    ) -> tuple[list[int], list[str], int, int]:
+        """Prefix-trie + cache lookup for a prompt: (shared page ids,
+        lower-tier restore keys, prefill start position, fresh pages
+        needed now).  The trie walk finds HBM-resident prefix pages; with
+        a prefix cache, the walk continues through the host/disk tiers —
+        each further page-aligned chunk whose token-prefix hash is cached
+        gets promoted at admission instead of prefilled (its page still
+        counts as *fresh* for allocation).  A fully shared page-aligned
+        prompt still recomputes its last token (the engine needs its
+        logits); when that last page is trie-shared the write
+        copy-on-write-forks it — budget one extra page — while a
+        restored last page is private, so the recompute writes in place
+        (byte-identical by determinism of the prefill math)."""
         plen = len(req.tokens)
         shared = self.trie.match(req.tokens) if self.trie is not None else []
-        start = len(shared) * self.page_size
+        restore: list[str] = []
+        if self.prefix_cache is not None:
+            ps = self.page_size
+            j = len(shared)
+            while (j + 1) * ps <= plen:
+                key = PrefixCache.key(req.tokens[:(j + 1) * ps])
+                if self.prefix_cache.peek(key) is None:
+                    break
+                restore.append(key)
+                j += 1
+        start = (len(shared) + len(restore)) * self.page_size
         fresh = self.page_pool.pages_for(plen) - len(shared)
-        if start >= plen:                 # fully shared, aligned prompt
+        if start >= plen:                 # fully covered, aligned prompt
             start = plen - 1
-            fresh += 1                    # COW fork of the last page
-        return shared, start, fresh
+            if not restore:
+                fresh += 1                # COW fork of the last page
+        return shared, restore, start, fresh
 
     def _can_admit(self, req: Request,
-                   share: tuple[list[int], int, int] | None = None) -> bool:
+                   share: tuple[list[int], list[str], int, int] | None = None,
+                   ) -> bool:
         plen = len(req.tokens)
         end = plen + req.max_new - 1
         if self.prefill_chunk:
-            _, _, fresh = share if share is not None else self._share_plan(req)
+            share = share if share is not None else self._share_plan(req)
+            fresh = share[3]
             growth = (self.page_pool.pages_for(end)
                       - self.page_pool.pages_for(plen))
         else:
@@ -396,12 +469,38 @@ class Engine:
             # preemption-backed rule: admit when the prompt fits NOW
             # (counting forks already-admitted prefills will still take);
             # decode growth later recovers pages by evicting the youngest
-            return self.page_pool.can_alloc(fresh + self._pending_forks())
+            return fresh + self._pending_forks() <= self._headroom()
         # reservation rule: the pool must also cover this request's own
         # growth (incl. any COW fork) and every running sequence's
         # worst-case growth
-        budget = self.page_pool.free_count - self._reserved_pages()
+        budget = self._headroom() - self._reserved_pages()
         return fresh + growth <= budget
+
+    # -- cache-aware allocation -----------------------------------------------
+    def _headroom(self) -> int:
+        """Pages allocatable right now plus cache-retained pages whose
+        only holder is the cache — those demote on demand, so admission
+        treats them as reclaimable capacity."""
+        free = self.page_pool.free_count
+        if self.prefix_cache is not None:
+            free += self.prefix_cache.reclaimable()
+        return free
+
+    def _provide(self, n: int) -> bool:
+        """Make ``n`` pages allocatable without preempting anyone, by
+        demoting reclaimable cache entries LRU-first.  Returns whether
+        :meth:`PagePool.alloc` of ``n`` would now succeed."""
+        if self.page_pool.can_alloc(n):
+            return True
+        if self.prefix_cache is not None:
+            self.prefix_cache.reclaim(n - self.page_pool.free_count)
+        return self.page_pool.can_alloc(n)
+
+    def _alloc_pages(self, n: int) -> list[int]:
+        """Allocate ``n`` pages, demoting cache entries under pressure."""
+        if n and not self.page_pool.can_alloc(n):
+            self._provide(n)
+        return self.page_pool.alloc(n)
 
     def _admit_paged(self, req: Request) -> list[tuple[int, int]]:
         plen = len(req.tokens)
@@ -432,28 +531,96 @@ class Engine:
         self.stats["prompt_pages_fresh"] += n
         return self._post_admit(seq)
 
+    def _gather_page_host(self, page: int) -> dict:
+        """Snapshot one page's KV bytes to host numpy arrays — the cache's
+        demotion path (same per-page movement preemption's swap uses)."""
+        snap = self._page_get(self.pool, jnp.asarray(page, jnp.int32))
+        return jax.device_get(snap)
+
+    def _restore_prefix(self, keys: list[str]) -> list[int]:
+        """Promote cached chunks back into HBM: allocate one fresh page
+        per key (demoting colder cache entries under pressure) and
+        scatter the host/disk bytes in.  Stops at the first miss or at a
+        snapshot whose shape/dtype doesn't match this engine's pool (a
+        cache dir written by a different model config) — the remaining
+        chunks just prefill normally."""
+        k = self.pool["k"]
+        expect = k.shape[:2] + k.shape[3:]
+        pages: list[int] = []
+        for key in keys:
+            got = self.prefix_cache.fetch(key)
+            if got is None:
+                break
+            kv, tier = got
+            if (kv["k"].shape != expect or kv["v"].shape != expect
+                    or str(kv["k"].dtype) != str(k.dtype)
+                    or str(kv["v"].dtype) != str(k.dtype)):
+                break
+            (pg,) = self._alloc_pages(1)
+            self.pool = self._page_set(
+                self.pool,
+                {"k": jnp.asarray(kv["k"]), "v": jnp.asarray(kv["v"])},
+                jnp.asarray(pg, jnp.int32))
+            self.stats["prefix_host_hits" if tier == "host"
+                       else "prefix_disk_hits"] += 1
+            self.stats["prefix_restored_pages"] += 1
+            pages.append(pg)
+        return pages
+
     def _admit_chunked(self, req: Request,
-                       share: tuple[list[int], int, int] | None = None,
-                       ) -> list[tuple[int, int]]:
+                       share: tuple[list[int], list[str], int, int]
+                       | None = None) -> list[tuple[int, int]]:
         """Admit into the prefilling state: map shared prefix pages,
-        allocate the rest, and let :meth:`_prefill_tick` advance one chunk
-        per step.  No tokens are emitted until the final chunk."""
+        promote any lower-tier cached chunks, allocate the rest, and let
+        :meth:`_prefill_tick` advance one chunk per step.  No tokens are
+        emitted until the final chunk.  Restored pages carry complete KV,
+        so they register in the trie immediately and never count as
+        *fresh prompt pages* — the second epoch of a repeated prompt
+        prefills zero fresh pages."""
         plen = len(req.tokens)
-        shared, start, _ = share if share is not None else \
+        shared, restore, start, _ = share if share is not None else \
             self._share_plan(req)
         total = self.page_pool.pages_for(plen)
-        fresh = self.page_pool.alloc(total - len(shared))
         if shared:
+            # retain before any cache reclaim can run: a shared page now
+            # has a sequence reference, so demotions can't free it
             self.page_pool.retain(shared)
-        pages = list(shared) + fresh
+        hbm_hits = 0
+        if self.prefix_cache is not None:
+            hbm_hits = sum(1 for p in shared if self.prefix_cache.held(p))
+            # leaf-first LRU touch keeps parents younger than children
+            for p in reversed(shared):
+                self.prefix_cache.touch(p)
+        restored = (self._restore_prefix(restore)
+                    if self.prefix_cache is not None and restore else [])
+        # recompute coverage from what actually promoted (a corrupt disk
+        # file truncates the restore chain)
+        start = (len(shared) + len(restored)) * self.page_size
+        if start >= plen:
+            start = plen - 1
+        fresh = self._alloc_pages(total - len(shared) - len(restored))
+        pages = list(shared) + restored + fresh
         seq = self.sched.place(req, pos=plen, pages=pages,
                                ready_wall=self._first_seen[req.rid],
                                prefilled=start)
         self.block_tables[seq.slot, :] = PagePool.TRASH_PAGE
         self.block_tables[seq.slot, :len(pages)] = pages
+        if restored:
+            # restored chunks are fully prefilled: share them immediately
+            self.trie.register(req.tokens, pages,
+                               len(shared) + len(restored))
         self.stats["shared_prompt_pages"] += len(shared)
         self.stats["prompt_pages_total"] += total
-        self.stats["prompt_pages_fresh"] += total - len(shared)
+        self.stats["prompt_pages_fresh"] += total - len(shared) - len(restored)
+        if self.prefix_cache is not None:
+            seq.cached_prompt_pages = hbm_hits + len(restored)
+            if seq.cached_prompt_pages:
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_hbm_hits"] += hbm_hits
+                self.stats["reprefill_tokens_saved"] += (
+                    self.page_size * seq.cached_prompt_pages)
+            else:
+                self.stats["prefix_misses"] += 1
         return []
 
     def _admit_state(self, req: Request) -> list[tuple[int, int]]:
@@ -491,6 +658,8 @@ class Engine:
                              (seq.done_wall - seq.first_token_wall)
                              / max(len(seq.generated) - 1, 1))
         if self.paged:
+            if self.prefix_cache is not None:
+                self._cache_hold(seq)
             freed = self.page_pool.free(seq.pages)
             if self.trie is not None:
                 for p in freed:
@@ -500,6 +669,21 @@ class Engine:
         self._tok[slot, 0] = 0
         self._finished[seq.req.rid] = seq
 
+    def _cache_hold(self, seq: SeqState) -> None:
+        """Retain the completed sequence's trie-resident prompt chain in
+        the cache, so the pages outlive the sequence.  Holds run
+        leaf-first so every parent ends more recently used than its
+        children — LRU demotions then peel chains leaf-first and can
+        never orphan a still-held subtree.  The chain is the *canonical*
+        trie pages (another sequence's copy may have won registration),
+        keyed by the full token prefix through each chunk."""
+        tokens = seq.req.tokens
+        matched = self.trie.match(tokens)
+        ps = self.page_size
+        for j in range(len(matched) - 1, -1, -1):
+            self.prefix_cache.hold(
+                PrefixCache.key(tokens[:(j + 1) * ps]), matched[j])
+
     # -- chunked prefill ------------------------------------------------------
     def _try_capacity(self, n: int) -> bool:
         """Try to make ``n`` pages allocatable, preempting youngest-first
@@ -507,8 +691,9 @@ class Engine:
         victim holding only shared pages frees nothing) — the caller
         decides whether that means waiting or an invariant violation.
         Without preemption this raises: the reservation-based admission
-        rule is supposed to make pressure here impossible."""
-        while not self.page_pool.can_alloc(n):
+        rule is supposed to make pressure here impossible.  Cache-retained
+        pages are demoted first — they are capacity, not residents."""
+        while not self._provide(n):
             if not self.preemption:
                 raise PoolExhausted(
                     "invariant violation: admission reserved too few pages "
@@ -817,7 +1002,7 @@ class Engine:
             # swapped sequences were admitted first: resume before anyone
             while self.sched.swapped and self.sched.has_free_slot():
                 seq = self.sched.peek_swapped()
-                if not self.page_pool.can_alloc(seq.host_kv[1]):
+                if not self._provide(seq.host_kv[1]):
                     break
                 self._swap_in(seq)
         while self.sched.has_free_slot():
@@ -920,10 +1105,35 @@ class Engine:
         self.metrics.gauge("pool_free_pages", occ["free"])
         self.metrics.gauge("pool_live_pages", occ["live"])
         self.metrics.gauge("pool_swapped_pages", swapped)
+        if self.prefix_cache is not None:
+            self.metrics.gauge("pool_cached_pages",
+                               len(self.prefix_cache.held_pages))
+            self._sync_cache_stats()
         if self.tracer.enabled:
             self.tracer.counter(
                 "pool_pages", {"free": occ["free"], "live": occ["live"],
                                "swapped": swapped}, track="pool")
+
+    def _sync_cache_stats(self) -> None:
+        """Mirror the cache's tier accounting into the stats dict (the
+        per-tier byte counters land in ``BENCH_serving.json``)."""
+        c = self.prefix_cache
+        tiers = c.bytes_by_tier()
+        self.stats["prefix_bytes_hbm"] = tiers["hbm"]
+        self.stats["prefix_bytes_host"] = tiers["host"]
+        self.stats["prefix_bytes_disk"] = tiers["disk"]
+        self.stats["prefix_demotions_host"] = c.demotions_host
+        self.stats["prefix_demotions_disk"] = c.demotions_disk
+
+    def flush_prefix_cache(self) -> None:
+        """Demote every HBM-resident cache entry — the drain path.  On an
+        idle engine this returns the pool to fully-free and empties the
+        trie; host/disk copies persist, so identical prompts submitted
+        later (or to a fresh engine sharing the cache dir) still promote
+        instead of re-prefilling."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.flush()
+            self._sync_cache_stats()
 
     # -- warmup / run ---------------------------------------------------------
     def warmup(self) -> float:
@@ -963,6 +1173,12 @@ class Engine:
                 jax.block_until_ready(self._copy_page(
                     self.pool, jnp.asarray(0, jnp.int32),
                     jnp.asarray(0, jnp.int32))["k"])
+            if self.prefix_cache is not None:
+                zero = jnp.asarray(PagePool.TRASH_PAGE, jnp.int32)
+                snap = self._page_get(self.pool, zero)
+                jax.block_until_ready(snap["k"])
+                jax.block_until_ready(
+                    self._page_set(self.pool, snap, zero)["k"])
             if self.preemption:
                 ids = jnp.zeros(self.max_pages, jnp.int32)
                 snap = self._gather_pages(self.pool, ids)
@@ -1058,6 +1274,10 @@ class Engine:
                     f"{len(self.sched.swapped)} swapped after "
                     f"{max_steps} steps")
             n_tok += len(self.step())
+        if self.paged and self.prefix_cache is not None:
+            # final completions' demotions happen inside the last step;
+            # re-sync so the returned stats carry the end-state tiers
+            self._sync_cache_stats()
         steady_s = time.perf_counter() - t0
         fin = list(self._finished.values())
         lat = sorted(s.done_wall - s.ready_wall for s in fin)

@@ -7,7 +7,7 @@ invariants the engine's tests gate on — a page is never handed to two
 sequences at once unless both hold an explicit reference, and every page
 whose last reference is dropped returns to the pool.
 
-Three capabilities layered on the free list:
+Four capabilities layered on the free list:
 
 * **refcounts** — prefix sharing maps one physical page into several
   sequences' block tables; :meth:`PagePool.retain` adds a reference and
@@ -21,6 +21,15 @@ Three capabilities layered on the free list:
   actually left the device) and :meth:`PagePool.swap_in` re-allocates on
   resume.  The byte movement itself is the engine's job; the pool keeps
   the id bookkeeping and the counters CI gates on.
+* **cache-tier retention** — the persistent prefix cache
+  (:class:`repro.serving.prefix_cache.PrefixCache`) keeps completed
+  prompt pages alive past sequence completion by holding one extra
+  reference per retained page.  To the pool it is just another sharer:
+  demotions go through :meth:`PagePool.free` (so a page shared with a
+  live sequence stays resident), and the partition invariant
+  ``free + live == n_pages - 1`` is untouched.  Retained pages whose
+  only holder is the cache are *reclaimable* — admission counts them as
+  free-able capacity and demotes them on demand (``docs/caching.md``).
 
 Page 0 is reserved as the trash page: inactive engine slots point their
 whole block table at it so their (ignored) per-step writes can never touch
@@ -186,11 +195,16 @@ class PrefixTrie:
     the block table (:meth:`PagePool.retain`).
 
     The trie holds **no references of its own**: a node exists only while
-    its page is allocated to at least one sequence, and the engine calls
+    its page is allocated to at least one holder, and the engine calls
     :meth:`drop` for every page the pool reports as actually freed.
     Because every sharer references its *whole* prefix chain, a parent's
     refcount never falls below a child's — drops cascade leaf-first and a
     dangling interior node is unreachable by construction.
+
+    The prefix cache preserves that ordering: it touches each completed
+    chain leaf-first so a parent is always more recently used than every
+    child, and its LRU demotions therefore also drop leaf-first (see
+    ``docs/caching.md``).
     """
 
     def __init__(self, page_size: int):

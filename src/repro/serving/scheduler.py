@@ -7,6 +7,12 @@ preempted to host memory (swapped out) awaiting resume.  It is
 deliberately free of any device state — the engine asks it what to admit,
 tells it what completed or got evicted, and keeps the page pool / cache
 arrays itself.
+
+Admission capacity is likewise the engine's call: with the persistent
+prefix cache enabled, the engine's admission rule counts cache-retained
+pages whose only holder is the cache as *reclaimable* — head-of-line
+order stays strict, but a queue head blocked only by cold cached pages
+admits by demoting them (see ``docs/caching.md``).
 """
 from __future__ import annotations
 
@@ -87,6 +93,8 @@ class SeqState:
     done_wall: float = 0.0
     spec_proposed: int = 0        # draft tokens proposed for this sequence
     spec_accepted: int = 0        # draft tokens that became emitted tokens
+    cached_prompt_pages: int = 0  # prompt pages served by the prefix cache
+    #                               (HBM holds + host/disk promotions)
 
     @property
     def remaining(self) -> int:

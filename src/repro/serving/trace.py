@@ -82,6 +82,53 @@ def shared_prefix_trace(
     return reqs
 
 
+def repeated_prompt_trace(
+    n_requests: int,
+    prefix_len: int,
+    suffix_len: int,
+    max_new: int,
+    vocab: int,
+    page_size: int,
+    seed: int = 0,
+    arrival_gap: int = 1,
+    rid_base: int = 0,
+) -> list[Request]:
+    """One epoch of the prefix-cache workload: page-aligned prompts that
+    repeat *verbatim* across epochs.
+
+    Every prompt is the same ``prefix_len``-token system prompt plus a
+    per-request ``suffix_len``-token suffix, with the total forced to a
+    multiple of ``page_size``.  Page alignment is what lets a repeated
+    prompt resolve entirely from cached pages on its second epoch: a
+    prompt's unaligned tail page is never trie-registered, so it would
+    re-prefill every time.  Calling twice with the same seed and a
+    different ``rid_base`` yields two identical epochs with fresh request
+    ids — the workload behind the second-epoch zero-fresh-prefill gate
+    (``docs/caching.md``).  Deterministic for a given seed.
+    """
+    if prefix_len < 1 or suffix_len < 1:
+        raise ValueError(
+            f"need prefix_len >= 1 and suffix_len >= 1, got {prefix_len} / "
+            f"{suffix_len}")
+    if (prefix_len + suffix_len) % page_size:
+        raise ValueError(
+            f"prompt length {prefix_len + suffix_len} must be a multiple of "
+            f"page_size={page_size} — unaligned tail pages never register "
+            "in the trie, so the repeated epoch could not hit the cache")
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, prefix_len, dtype=np.int32)
+    reqs = []
+    for i in range(n_requests):
+        suffix = rng.integers(0, vocab, suffix_len, dtype=np.int32)
+        reqs.append(Request(
+            rid=rid_base + i,
+            tokens=np.concatenate([prefix, suffix]),
+            max_new=max_new,
+            arrival=i * arrival_gap,
+        ))
+    return reqs
+
+
 def stress_spec_trace(
     n_requests: int,
     prefix_len: int,

@@ -1,0 +1,361 @@
+"""Persistent multi-tier prefix cache: tier lifecycle, restart survival
+from disk, admission reclaim under pressure, and cache-off identity."""
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # CI installs hypothesis; bare
+    from _hypothesis_stub import given, settings, st  # noqa: E501  envs skip the property tests
+
+from repro import configs
+from repro.models.model import build_model
+from repro.serving import (
+    Engine,
+    PagePool,
+    PrefixCache,
+    repeated_prompt_trace,
+    static_generate,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _gather_stub(page):
+    """Deterministic page-keyed host snapshot, stands in for the engine's
+    jitted per-page gather in unit tests."""
+    return {"k": np.full((4,), page, np.float32),
+            "v": np.full((4,), -page, np.float32)}
+
+
+# ---------------------------------------------------------------------------
+# unit: tier lifecycle against a bare pool
+# ---------------------------------------------------------------------------
+def test_prefix_cache_key_pins_full_context():
+    """Keys hash the *entire* token prefix: two chunks with identical
+    tokens but different histories never alias."""
+    a = np.arange(8, dtype=np.int32)
+    b = a.copy()
+    b[0] += 1                       # differs only before the last chunk
+    assert PrefixCache.key(a) != PrefixCache.key(b)
+    assert PrefixCache.key(a) == PrefixCache.key(list(a))
+
+
+def test_prefix_cache_tier_lifecycle(tmp_path):
+    """hold -> budget demotion (leaf-first) -> host fetch -> disk
+    write-through, with the pool's refcounts balanced throughout."""
+    pool = PagePool(8, page_size=4)
+    dropped = []
+    cache = PrefixCache(pool, page_bytes=32, budget_bytes=2 * 32,
+                        cache_dir=tmp_path, gather=_gather_stub,
+                        on_page_freed=dropped.append)
+    pages = pool.alloc(3)           # a completed sequence's chain
+    keys = [f"k{j}" for j in range(3)]
+    # completion holds leaf-first so parents end up MRU-newer than
+    # children — demotions then peel the leaf, never orphan a parent
+    for j in (2, 1, 0):
+        cache.hold(keys[j], pages[j])
+    # budget is 2 pages: the third hold demoted the LRU entry — the leaf,
+    # because it was held first.  The sequence still references the page,
+    # so only the cache's ref dropped (no free, no trie notification).
+    assert cache.held_pages == (pages[1], pages[0])
+    assert dropped == []
+    pool.free(pages)                # sequence completes: cache sole holder
+    assert cache.bytes_by_tier()["hbm"] == 2 * 32
+    assert cache.bytes_by_tier()["disk"] > 0
+    assert cache.peek(keys[2]) == "host"
+    # host fetch round-trips the gathered bytes and consumes the entry
+    kv, tier = cache.fetch(keys[2])
+    assert tier == "host"
+    np.testing.assert_array_equal(kv["k"], np.full((4,), pages[2]))
+    assert cache.peek(keys[2]) == "disk"      # write-through persisted
+    kv, tier = cache.fetch(keys[2])
+    assert tier == "disk"
+    np.testing.assert_array_equal(kv["v"], np.full((4,), -pages[2]))
+    # reclaim demotes LRU-first: child before parent
+    assert cache.reclaimable() == 2
+    assert cache.reclaim(2) == 2
+    assert dropped == [pages[1], pages[0]]
+    assert not cache.held_pages
+    assert pool.free_count == pool.n_pages - 1
+    # a fresh cache on the same dir inherits the spilled chunks
+    again = PrefixCache(pool, page_bytes=32, cache_dir=tmp_path,
+                        gather=_gather_stub)
+    assert again.peek(keys[0]) == "disk"
+    assert again.bytes_by_tier()["disk"] == cache.bytes_by_tier()["disk"]
+
+
+def test_prefix_cache_hold_is_idempotent_and_touch_reorders():
+    pool = PagePool(8, page_size=4)
+    cache = PrefixCache(pool, page_bytes=32, budget_bytes=4 * 32,
+                        gather=_gather_stub)
+    a, b = pool.alloc(2)
+    cache.hold("a", a)
+    cache.hold("b", b)
+    assert pool.ref_count(a) == 2
+    cache.hold("a", a)              # re-hold = LRU touch, not a new ref
+    assert pool.ref_count(a) == 2
+    assert cache.held_pages == (b, a)
+    cache.touch(b)
+    assert cache.held_pages == (a, b)
+    cache.flush()
+    assert pool.ref_count(a) == 1 and pool.ref_count(b) == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(6, 16), st.integers(0, 4),
+       st.lists(st.tuples(st.integers(0, 7), st.integers(0, 10**6)),
+                min_size=1, max_size=100))
+def test_prefix_cache_pool_partition_property(n_pages, budget_pages,
+                                              program):
+    """Random programs mixing sequence alloc/retain/free with cache
+    hold/touch/reclaim/fetch/flush: the cache holds exactly one pool
+    reference per HBM entry, the HBM tier never exceeds its byte budget,
+    reclaimable() counts exactly the sole-holder entries, demoted chunks
+    round-trip their bytes through the host tier, and the pool's
+    free+live partition invariant survives everything."""
+    pool = PagePool(n_pages, page_size=4)
+    freed_log = []
+    cache = PrefixCache(pool, page_bytes=32,
+                        budget_bytes=budget_pages * 32,
+                        gather=_gather_stub,
+                        on_page_freed=freed_log.append)
+    seq_refs: dict[int, int] = {}   # model: sequence-side refcounts only
+    for op, r in program:
+        live = sorted(seq_refs)
+        held = list(cache.held_pages)
+        if op == 0:                                 # admit: alloc pages
+            k = r % (pool.free_count + 1)
+            for p in pool.alloc(k):
+                seq_refs[p] = 1
+        elif op == 1 and live:                      # share (cow/trie)
+            p = live[r % len(live)]
+            pool.retain([p])
+            seq_refs[p] += 1
+        elif op == 2 and live:                      # sequence completes
+            p = live[r % len(live)]
+            freed = pool.free([p])
+            seq_refs[p] -= 1
+            if seq_refs[p] == 0:
+                del seq_refs[p]
+                assert bool(freed) == (not cache.held(p))
+        elif op == 3 and live:                      # retention hold
+            p = live[r % len(live)]
+            cache.hold(f"k{p}", p)
+        elif op == 4 and held:                      # admission hit: touch
+            cache.touch(held[r % len(held)])
+        elif op == 5 and held:                      # admission pressure
+            want = r % 3 + 1
+            got = cache.reclaim(want)
+            assert got <= want
+        elif op == 6 and cache.host_keys:           # promotion: fetch
+            key = cache.host_keys[r % len(cache.host_keys)]
+            kv, tier = cache.fetch(key)
+            assert tier == "host"
+            np.testing.assert_array_equal(
+                kv["k"], np.full((4,), int(key[1:]), np.float32))
+        elif op == 7:                               # drain
+            cache.flush()
+        # invariants after every operation
+        held_set = set(cache.held_pages)
+        assert len(held_set) == len(cache.held_pages)
+        assert len(held_set) * 32 <= max(cache.budget_bytes, 0) or not held_set
+        for p in held_set:
+            assert cache.held(p)
+            assert p in pool.allocated
+            assert pool.ref_count(p) == seq_refs.get(p, 0) + 1
+        for p, c in seq_refs.items():
+            if p not in held_set:
+                assert pool.ref_count(p) == c
+        assert cache.reclaimable() == sum(
+            1 for p in held_set if p not in seq_refs)
+        assert pool.free_count + len(pool.allocated) == pool.n_pages - 1
+        assert cache.bytes_by_tier()["hbm"] == len(held_set) * 32
+    # drain: release every sequence ref, flush the cache — nothing leaks
+    for p, c in list(seq_refs.items()):
+        pool.free([p] * c)
+    cache.flush()
+    assert not cache.held_pages
+    assert pool.free_count == pool.n_pages - 1
+    assert not pool.allocated
+
+
+# ---------------------------------------------------------------------------
+# engine: two-epoch tiering, restart survival, cache-off identity
+# ---------------------------------------------------------------------------
+def _llama_cache_setup():
+    cfg = configs.reduced(configs.get_config("llama3.2-1b"))
+    model = build_model(cfg)
+    params = model.init(KEY)
+    probe = model.init_paged_pool(2, 4)
+    k = probe["k"]
+    page_nbytes = 2 * (k.size // k.shape[2]) * k.dtype.itemsize
+    return cfg, model, params, page_nbytes
+
+
+def _epoch(cfg, seed=0, rid_base=0):
+    return repeated_prompt_trace(3, prefix_len=8, suffix_len=4, max_new=4,
+                                 vocab=cfg.vocab, page_size=4, seed=seed,
+                                 arrival_gap=2, rid_base=rid_base)
+
+
+def _cache_engine(model, params, *, budget_bytes, cache_dir=None,
+                  n_pages=12):
+    return Engine(model, params, max_slots=2, page_size=4, max_len=16,
+                  n_pages=n_pages, prefill_chunk=4, prefix_sharing=True,
+                  prefix_cache_budget=budget_bytes,
+                  prefix_cache_dir=cache_dir)
+
+
+def test_engine_second_epoch_prefills_zero_fresh_pages(tmp_path):
+    """The tentpole gate: a repeated system prompt's second epoch resolves
+    entirely from cache tiers (HBM holds + host promotions) — the fresh
+    page counter must not move — with tokens bit-identical to the static
+    reference and a clean pool/trie/HBM drain after the flush."""
+    cfg, model, params, page_nbytes = _llama_cache_setup()
+    eng = _cache_engine(model, params, budget_bytes=3 * page_nbytes,
+                        cache_dir=tmp_path)
+    res1 = eng.run(_epoch(cfg, rid_base=0))
+    fresh1 = res1["stats"]["prompt_pages_fresh"]
+    assert fresh1 > 0
+    res2 = eng.run(_epoch(cfg, rid_base=3))
+    s = res2["stats"]
+    assert s["prompt_pages_fresh"] == fresh1, "second epoch re-prefilled"
+    assert s["prefix_hits"] >= 1
+    assert s["prefix_host_hits"] >= 1, "budget squeeze never exercised host"
+    assert s["prefix_demotions_disk"] >= 1 and s["prefix_bytes_disk"] > 0
+    assert s["reprefill_tokens_saved"] > 0
+    for req in _epoch(cfg, rid_base=0) + _epoch(cfg, rid_base=3):
+        assert res2["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    eng.flush_prefix_cache()
+    assert not eng.page_pool.allocated
+    assert eng.page_pool.free_count == eng.page_pool.n_pages - 1
+    assert len(eng.trie) == 0
+    assert eng.prefix_cache.bytes_by_tier()["hbm"] == 0
+    assert eng.stats["prefix_bytes_hbm"] == 0
+
+
+def test_engine_restart_survives_from_disk(tmp_path):
+    """Disk-spilled chunks outlive the engine: a freshly constructed
+    engine pointed at the same cache dir serves the same prompts with
+    zero fresh prefill pages, promoting every page from disk, and emits
+    bit-identical tokens."""
+    cfg, model, params, page_nbytes = _llama_cache_setup()
+    # budget 0: every retention demotes immediately -> pure host/disk
+    eng = _cache_engine(model, params, budget_bytes=0, cache_dir=tmp_path)
+    eng.run(_epoch(cfg))
+    assert eng.stats["prefix_demotions_disk"] >= 1
+    assert list(pathlib.Path(tmp_path).glob("*.npz"))
+    del eng
+
+    fresh_eng = _cache_engine(model, params, budget_bytes=0,
+                              cache_dir=tmp_path)
+    res = fresh_eng.run(_epoch(cfg))
+    s = res["stats"]
+    assert s["prompt_pages_fresh"] == 0, "restart re-prefilled"
+    assert s["prefix_disk_hits"] >= 1
+    assert s["prefix_host_hits"] == 0          # fresh engine: host empty
+    for req in _epoch(cfg):
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    fresh_eng.flush_prefix_cache()
+    assert not fresh_eng.page_pool.allocated
+    assert len(fresh_eng.trie) == 0
+
+
+def test_engine_cache_off_tokens_identical(tmp_path):
+    """Turning the cache on must not perturb tokens: the same trace with
+    and without retention emits bit-identical sequences."""
+    cfg, model, params, page_nbytes = _llama_cache_setup()
+    outs = []
+    for budget in (0, None):
+        eng = (Engine(model, params, max_slots=2, page_size=4, max_len=16,
+                      n_pages=12, prefill_chunk=4, prefix_sharing=True)
+               if budget is None else
+               _cache_engine(model, params, budget_bytes=3 * page_nbytes,
+                             cache_dir=tmp_path))
+        outs.append(eng.run(_epoch(cfg))["tokens"])
+    assert outs[0] == outs[1]
+
+
+def test_engine_admission_reclaims_cold_pages_under_pressure(tmp_path):
+    """A pool sized so retained pages block admission: the engine must
+    demote cold cache entries instead of stalling, and still complete
+    every request with reference-identical tokens."""
+    cfg, model, params, page_nbytes = _llama_cache_setup()
+    # 8 usable pages; each prompt needs 3 + decode growth, retention
+    # would pin 3 — admission only proceeds by reclaiming cold entries
+    eng = _cache_engine(model, params, budget_bytes=8 * page_nbytes,
+                        n_pages=9)
+    trace = _epoch(cfg, rid_base=0) + _epoch(cfg, seed=7, rid_base=3)
+    res = eng.run(trace)
+    s = res["stats"]
+    assert s["completed"] == len(trace)
+    assert s["prefix_demotions_host"] >= 1, "pressure never forced reclaim"
+    for req in trace:
+        assert res["tokens"][req.rid] == static_generate(
+            model, params, req), f"rid {req.rid}"
+    eng.flush_prefix_cache()
+    assert not eng.page_pool.allocated
+    assert len(eng.trie) == 0
+
+
+def test_engine_cache_requires_prefix_sharing():
+    cfg, model, params, _ = _llama_cache_setup()
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        Engine(model, params, max_slots=2, page_size=4, max_len=16,
+               prefill_chunk=4, prefix_cache_budget=1)
+
+
+# ---------------------------------------------------------------------------
+# CLI plumbing
+# ---------------------------------------------------------------------------
+def test_serve_cli_cache_flags_require_prefix_sharing():
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "llama3.2-1b", "--reduced", "--engine",
+                    "--prefill-chunk", "4", "--prefix-cache-budget", "1"])
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "llama3.2-1b", "--reduced", "--engine",
+                    "--prefill-chunk", "4", "--prefix-cache-dir", "/tmp/x"])
+
+
+def test_serve_cli_cache_end_to_end(tmp_path):
+    from repro.launch import serve
+
+    summary = serve.main([
+        "--arch", "llama3.2-1b", "--reduced", "--engine",
+        "--requests", "2", "--prompt-len", "8", "--gen", "3",
+        "--max-slots", "2", "--page-size", "4", "--prefill-chunk", "4",
+        "--prefix-sharing",
+        "--prefix-cache-budget", str(1 << 30),
+        "--prefix-cache-dir", str(tmp_path)])
+    assert summary["prefix_cache_budget"] == 1 << 30
+    assert summary["prefix_cache_dir"] == str(tmp_path)
+    for key in ("prefix_hits", "prefix_misses", "prefix_bytes_hbm",
+                "reprefill_tokens_saved"):
+        assert key in summary, key
+
+
+# ---------------------------------------------------------------------------
+# docs gates: bench cache counters must be in the serving glossary
+# ---------------------------------------------------------------------------
+def test_bench_cache_counters_all_in_glossary():
+    """Every prefix-cache counter the stress bench emits (plus the
+    second-epoch gate field) must have a backticked glossary row in
+    docs/serving.md — same contract as the engine stats keys."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "benchmarks"))
+    try:
+        import serving_bench
+    finally:
+        sys.path.pop(0)
+    glossary = (root / "docs" / "serving.md").read_text()
+    names = set(serving_bench.CACHE_COUNTERS) | {"epoch2_fresh_pages"}
+    missing = [n for n in sorted(names) if f"`{n}`" not in glossary]
+    assert not missing, f"docs/serving.md glossary missing: {missing}"
